@@ -1,0 +1,30 @@
+"""Paper Fig. 3: severe-oscillation counts O_ots per threshold, SFL vs SAFL
+and FedSGD vs FedAvg.
+
+Validated claims: SAFL oscillates more than SFL; within SAFL, FedSGD
+oscillates more than FedAvg (stale gradient directions, paper Fig. 4).
+"""
+from __future__ import annotations
+
+from benchmarks.fl_common import MODE_TAGS, run_experiment
+
+SCENARIO = ("cifar10", "cnn", "hetero_dirichlet", {"alpha": 0.3})
+THRESHOLDS = (0.02, 0.05, 0.10, 0.15)
+
+
+def main() -> dict:
+    dataset, model, dist, dkw = SCENARIO
+    print("# Fig 3 — oscillation counts O_ots (CIFAR10/HD)")
+    print("mode," + ",".join(f"ots={t}" for t in THRESHOLDS))
+    results = {}
+    for (mode, aggn), tag in MODE_TAGS.items():
+        r = run_experiment(dataset=dataset, model=model, dist=dist,
+                           dist_kw=dkw, mode=mode, aggregation=aggn)
+        osc = {float(k): v for k, v in r["oscillations"].items()}
+        print(f"{tag}," + ",".join(str(osc.get(t, 0)) for t in THRESHOLDS))
+        results[tag] = osc
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,124 @@
+"""Shared FL-experiment runner for the paper-table benchmarks.
+
+Results are cached as JSON under experiments/fl_cache/ keyed by the full
+experiment spec, so benchmark tables can be re-aggregated without re-running
+training.  CI scale (reduced models / synthetic data, DESIGN.md §7.4):
+qualitative orderings reproduce the paper; absolute accuracies are not
+comparable to Table 1 and are not claimed to be.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import time
+from typing import Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import FLEngine
+from repro.data import build_client_shards, make_dataset, train_test_split
+from repro.models.lstm import build_lstm
+from repro.models.vision_cnn import build_paper_model
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "fl_cache")
+
+# CI-scale knobs (override with REPRO_BENCH_FULL=1 for longer runs)
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+N_SAMPLES = 6000 if FULL else 2000
+N_CLIENTS = 32 if FULL else 16
+ROUNDS = 120 if FULL else 30
+K = 8 if FULL else 4
+
+_MODEL_CACHE: Dict = {}
+
+
+def _get_model(model: str, dataset_kind: str, n_classes: int):
+    key = (model, dataset_kind, n_classes)
+    if key in _MODEL_CACHE:
+        return _MODEL_CACHE[key]
+    rk = jax.random.PRNGKey(0)
+    if model == "lstm":
+        task = "char" if dataset_kind == "char" else "sentiment"
+        kw = dict(embed=32, hidden=64)
+        if task == "char":
+            kw.update(vocab=80, n_out=80)
+        p0, s0, fn = build_lstm(rk, task, **kw)
+    elif model == "cnn":
+        p0, s0, fn = build_paper_model("cnn", rk, width=8, image_size=16,
+                                       n_classes=n_classes, in_ch=3)
+    elif model == "resnet18":
+        p0, s0, fn = build_paper_model("resnet18", rk, width=8,
+                                       n_classes=n_classes, in_ch=3)
+    elif model == "vgg16":
+        p0, s0, fn = build_paper_model("vgg16", rk, width_mult=0.125,
+                                       image_size=32, n_classes=n_classes,
+                                       in_ch=3)
+    else:
+        raise ValueError(model)
+    _MODEL_CACHE[key] = (p0, s0, fn)
+    return p0, s0, fn
+
+
+def run_experiment(*, dataset: str, model: str, dist: str,
+                   mode: str, aggregation: str,
+                   dist_kw: Optional[Dict] = None,
+                   rounds: int = ROUNDS, seed: int = 0,
+                   n_samples: int = N_SAMPLES, n_clients: int = N_CLIENTS,
+                   k: int = K, use_cache: bool = True,
+                   **flc_kw) -> Dict:
+    dist_kw = dist_kw or {}
+    slr = {"fedsgd": 0.05, "sdga": 0.03, "fedbuff": 0.05,
+           "fedopt": 0.005}.get(aggregation, 1.0)
+    extra = {}
+    if aggregation == "sdga":
+        # momentum 0.6 -> effective lr ~ slr/(1-m) = 0.075; light EMA anchor
+        extra = dict(server_momentum=0.6, ema_anchor=0.02)
+    spec = dict(dataset=dataset, model=model, dist=dist, mode=mode,
+                aggregation=aggregation, dist_kw=dist_kw, rounds=rounds,
+                seed=seed, n=n_samples, c=n_clients, k=k, slr=slr,
+                **extra, **flc_kw)
+    key = hashlib.sha1(json.dumps(spec, sort_keys=True).encode()).hexdigest()
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    cpath = os.path.join(CACHE_DIR, key + ".json")
+    if use_cache and os.path.exists(cpath):
+        return json.load(open(cpath))
+
+    t0 = time.time()
+    mk_kw = {"hw": 16} if dataset in ("cifar10", "cifar100") else {}
+    if dataset == "femnist":
+        mk_kw = {"hw": 16}
+    ds = make_dataset(dataset, n=n_samples, seed=seed, **mk_kw)
+    if dataset == "femnist":
+        ds.x = np.repeat(ds.x, 3, axis=-1)  # reuse 3-ch models
+    tr, te = train_test_split(ds, seed=seed)
+    shards = build_client_shards(tr, dist, n_clients, batch_size=32,
+                                 seed=seed, **dist_kw)
+    p0, s0, apply_fn = _get_model(model, ds.kind, ds.n_classes)
+
+    cfg = FLConfig(n_clients=n_clients, k=k, mode=mode,
+                   aggregation=aggregation, client_lr=0.05, server_lr=slr,
+                   target_accuracy=flc_kw.pop("target_accuracy", 0.5),
+                   speed_sigma=0.8, seed=seed, **extra, **flc_kw)
+    eng = FLEngine(cfg, apply_fn, ds.kind, p0, s0, shards,
+                   te.x[:400], te.y[:400])
+    res = eng.run(rounds)
+    out = res.metrics.summary()
+    out["spec"] = spec
+    out["wall_s"] = round(time.time() - t0, 1)
+    out["idle_time"] = res.idle_time
+    out["staleness_hist"] = {str(kk): v
+                             for kk, v in res.staleness_hist.items()}
+    out["curve"] = [[r.round, r.accuracy, r.loss]
+                    for r in res.metrics.records]
+    out["oscillations"] = {str(kk): v for kk, v in out["oscillations"].items()}
+    with open(cpath, "w") as f:
+        json.dump(out, f, default=str)
+    return out
+
+
+MODE_TAGS = {("sync", "fedsgd"): "SS", ("sync", "fedavg"): "SA",
+             ("semi_async", "fedsgd"): "AS", ("semi_async", "fedavg"): "AA"}

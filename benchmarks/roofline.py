@@ -1,0 +1,79 @@
+"""Roofline report: aggregate the dry-run artifacts (launch/dryrun.py) into
+the per-(arch x shape x mesh) three-term table (EXPERIMENTS.md §Roofline).
+
+Terms (v5e): compute = FLOPs/device / 197e12, memory = HBM-bytes/device /
+819e9, collective = collective-bytes/device / 50e9 — all in seconds per
+step; bottleneck = argmax.  ``useful`` = MODEL_FLOPS / HLO_FLOPs (global).
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+from typing import Dict, List
+
+_BASE = os.path.join(os.path.dirname(__file__), "..", "experiments")
+DRYRUN_DIR = os.environ.get(
+    "REPRO_DRYRUN_DIR",
+    _BASE + "/dryrun_final" if os.path.isdir(_BASE + "/dryrun_final")
+    else _BASE + "/dryrun")
+
+
+def load_records(mesh: str = None, tag_filter=None) -> List[Dict]:
+    recs = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return recs
+    for f in sorted(os.listdir(DRYRUN_DIR)):
+        if not f.endswith(".json"):
+            continue
+        parts = f[:-5].split("__")
+        tag = parts[3] if len(parts) > 3 else ""
+        if tag_filter is not None and tag != tag_filter:
+            continue
+        rec = json.load(open(os.path.join(DRYRUN_DIR, f)))
+        rec["tag"] = tag
+        if mesh and rec.get("mesh") not in (mesh, None) and \
+                (not isinstance(rec.get("mesh"), dict)):
+            continue
+        recs.append(rec)
+    return recs
+
+
+def fmt_row(r: Dict) -> str:
+    if r["status"] == "SKIP":
+        return (f"{r['arch']},{r['shape']},{r.get('mesh')},SKIP,,,,,,"
+                f"\"{r['reason'][:60]}\"")
+    if r["status"] == "FAIL":
+        return f"{r['arch']},{r['shape']},{r.get('mesh')},FAIL,,,,,,"
+    rf = r["roofline"]
+    mesh_kind = "multi" if (isinstance(r.get("mesh"), dict)
+                            and "pod" in r["mesh"]) else "single"
+    useful = r.get("useful_flops_ratio")
+    useful_s = f"{useful:.3f}" if useful else ""
+    temp = f"{r['memory']['temp_size_B']/1e9:.2f}GB"
+    return (f"{r['arch']},{r['shape']},{mesh_kind},OK,"
+            f"{rf['compute_s']:.4g},{rf['memory_s']:.4g},"
+            f"{rf['collective_s']:.4g},{r['bottleneck'][:-2]},"
+            f"{useful_s},{temp}")
+
+
+def main(tag_filter="") -> None:
+    recs = load_records(tag_filter=tag_filter)
+    if not recs:
+        print("# Roofline: no dry-run artifacts found — run "
+              "PYTHONPATH=src python -m repro.launch.dryrun --all first")
+        return
+    print("# Roofline (from compiled dry-run; v5e constants)")
+    print("arch,shape,mesh,status,compute_s,memory_s,collective_s,"
+          "bottleneck,useful_flops_ratio,temp_mem")
+    n_ok = n_fail = n_skip = 0
+    for r in recs:
+        print(fmt_row(r))
+        n_ok += r["status"] == "OK"
+        n_fail += r["status"] == "FAIL"
+        n_skip += r["status"] == "SKIP"
+    print(f"# totals: OK={n_ok} FAIL={n_fail} SKIP={n_skip}")
+
+
+if __name__ == "__main__":
+    main(tag_filter="" if len(sys.argv) < 2 else sys.argv[1])

@@ -1,0 +1,38 @@
+"""Benchmark orchestrator — one section per paper table/figure + the
+beyond-paper and infrastructure benches.  Prints CSV blocks.
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run table1 roofline   # subset
+
+FL benches cache results under experiments/fl_cache/ (delete to re-run);
+REPRO_BENCH_FULL=1 scales the grid up.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from benchmarks import (beyond_sdga, fig3_oscillation, kernel_bench,
+                            roofline, table1_accuracy, table2_resources,
+                            table3_convergence)
+    sections = {
+        "kernels": kernel_bench.main,
+        "table1": table1_accuracy.main,
+        "table2": table2_resources.main,
+        "table3": table3_convergence.main,
+        "fig3": fig3_oscillation.main,
+        "beyond": beyond_sdga.main,
+        "roofline": roofline.main,
+    }
+    want = sys.argv[1:] or list(sections)
+    for name in want:
+        t0 = time.time()
+        print(f"\n===== {name} =====")
+        sections[name]()
+        print(f"# [{name}] wall {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Reproduce the paper's central experiment end-to-end: the four system
+modes (SS/SA/AS/AA) on one scenario, with accuracy curves and all four
+metric families (§4.4) printed.
+
+Run:  PYTHONPATH=src python examples/safl_paper_sim.py [--rounds 30]
+"""
+import argparse
+
+import jax
+
+from repro.configs.base import FLConfig
+from repro.core import FLEngine
+from repro.data import build_client_shards, make_dataset, train_test_split
+from repro.models.vision_cnn import build_paper_model
+
+
+def sparkline(vals, width=40):
+    bars = " .:-=+*#%@"
+    if not vals:
+        return ""
+    step = max(len(vals) // width, 1)
+    vals = vals[::step][:width]
+    return "".join(bars[min(int(v * (len(bars) - 1)), len(bars) - 1)]
+                   for v in vals)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--clients", type=int, default=16)
+    args = ap.parse_args()
+
+    ds = make_dataset("cifar10", n=2000, seed=0, hw=16)
+    tr, te = train_test_split(ds)
+    shards = build_client_shards(tr, "hetero_dirichlet", args.clients, 32,
+                                 alpha=0.3)
+    p0, s0, fn = build_paper_model("cnn", jax.random.PRNGKey(0), width=8,
+                                   image_size=16)
+
+    print(f"{'mode':4s} {'best':>6s} {'T_f':>4s} {'T_s-T_f':>7s} "
+          f"{'osc@.05':>7s} {'tx MB':>7s} {'stale':>5s}  curve")
+    for mode, aggn, tag in [("sync", "fedsgd", "SS"),
+                            ("sync", "fedavg", "SA"),
+                            ("semi_async", "fedsgd", "AS"),
+                            ("semi_async", "fedavg", "AA")]:
+        fl = FLConfig(n_clients=args.clients, k=4, mode=mode,
+                      aggregation=aggn, client_lr=0.05,
+                      server_lr=0.05 if aggn == "fedsgd" else 1.0,
+                      target_accuracy=0.45, speed_sigma=0.8)
+        res = FLEngine(fl, fn, "image", p0, s0, shards,
+                       te.x[:400], te.y[:400]).run(args.rounds)
+        s = res.metrics.summary()
+        curve = [r.accuracy for r in res.metrics.records]
+        stab = s["stability"] if s["stability"] is not None else "-"
+        print(f"{tag:4s} {s['best_accuracy']:6.3f} {str(s['T_f']):>4s} "
+              f"{str(stab):>7s} {s['oscillations'][0.05]:7d} "
+              f"{s['tx_GB']*1e3:7.1f} {s['mean_staleness']:5.2f}  "
+              f"{sparkline(curve)}")
+    print("\npaper claims at this scale: AS>AA accuracy; FedSGD less tx; "
+          "SAFL more oscillation than SFL")
+
+
+if __name__ == "__main__":
+    main()

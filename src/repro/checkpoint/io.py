@@ -1,0 +1,95 @@
+"""Pytree checkpointing (npz + json treedef) with step retention.
+
+No external deps (no orbax in this container): leaves are saved as one .npz,
+the tree structure + leaf dtypes in a sidecar .json, atomically (write to tmp
+then rename).  Works for params, optimizer state, FL server state alike.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def _flatten_with_paths(tree: Pytree):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return flat, treedef
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree,
+                    keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat, treedef = _flatten_with_paths(tree)
+
+    def to_np(l):
+        a = np.asarray(l)
+        if a.dtype not in (np.float64, np.float32, np.float16, np.int64,
+                           np.int32, np.int16, np.int8, np.uint8, np.bool_):
+            # non-numpy-native (e.g. bfloat16): store as f32; load_checkpoint
+            # casts back to the template dtype (bf16->f32->bf16 is exact)
+            return a.astype(np.float32)
+        return a
+
+    arrays = {f"leaf_{i}": to_np(l) for i, l in enumerate(flat)}
+    meta = {"step": step, "n_leaves": len(flat),
+            "treedef": str(treedef),
+            "dtypes": [str(np.asarray(l).dtype) for l in flat]}
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".npz.tmp")
+    os.close(fd)
+    np.savez(tmp, **arrays)
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp,
+               path + ".npz")
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+    _gc(ckpt_dir, keep)
+    return path
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(latest_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        for ext in (".npz", ".json"):
+            p = os.path.join(ckpt_dir, f"ckpt_{s:08d}{ext}")
+            if os.path.exists(p):
+                os.remove(p)
+
+
+def latest_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for f in os.listdir(ckpt_dir):
+        if f.startswith("ckpt_") and f.endswith(".json"):
+            out.append(int(f[5:13]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = latest_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, template: Pytree,
+                    step: Optional[int] = None) -> Tuple[Pytree, int]:
+    """Restore into the structure of ``template`` (shapes must match)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
+    data = np.load(path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten(template)
+    assert len(flat) == len(data.files), \
+        f"leaf count mismatch: {len(flat)} vs {len(data.files)}"
+    leaves = [jnp.asarray(data[f"leaf_{i}"]).astype(flat[i].dtype)
+              for i in range(len(flat))]
+    for i, (a, b) in enumerate(zip(leaves, flat)):
+        assert a.shape == b.shape, f"leaf {i}: {a.shape} != {b.shape}"
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

@@ -1,0 +1,205 @@
+"""Config system for the SAFL reproduction framework.
+
+Two config families:
+
+* :class:`ModelConfig` — architecture description for the assigned big-model
+  zoo (dense / MoE / SSM / hybrid / enc-dec audio / VLM).  Every assigned
+  architecture in ``src/repro/configs/<id>.py`` instantiates one of these with
+  the exact dimensions from the assignment table (source cited per file).
+* :class:`FLConfig` — the paper's federated-learning experiment description
+  (clients, K, sync vs semi-async, aggregation target, data distribution).
+
+Shape/table constants for the four assigned input shapes live in
+:data:`INPUT_SHAPES`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+INPUT_SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+# ---------------------------------------------------------------------------
+# Model configuration
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description.
+
+    ``family`` selects the block stack:
+      dense   — pre-norm decoder (GQA attention + gated MLP)
+      moe     — dense attention + mixture-of-experts MLP (dense dispatch)
+      ssm     — xLSTM (alternating mLSTM / sLSTM blocks)
+      hybrid  — Mamba2 backbone with a shared attention block every Nth layer
+      audio   — encoder-decoder; encoder consumes precomputed frame embeddings
+      vlm     — decoder LM consuming a precomputed patch-embedding prefix
+    """
+
+    name: str
+    family: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+
+    # --- attention ---
+    rope_theta: float = 10_000.0
+    qk_norm: bool = False
+    sliding_window: Optional[int] = None  # native window (starcoder2)
+    long_context_window: int = 8_192  # window used for long_500k decode
+    attn_chunk: int = 0  # 0 -> naive full-matrix attention; >0 -> q-chunked
+    attn_impl: str = "chunked"  # chunked | online (flash-style, §Perf)
+    attn_kv_chunk: int = 1_024  # kv tile for attn_impl="online"
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    n_shared_experts: int = 0
+    capacity_factor: float = 1.25
+    moe_group_size: int = 1_024
+    first_k_dense: int = 0  # leading dense layers before the MoE stack
+    moe_dispatch_dtype: str = "float32"  # bf16 halves dispatch traffic
+    moe_dispatch_impl: str = "einsum"  # einsum (GShard) | scatter (§Perf)
+
+    # --- SSM / hybrid (Mamba2) ---
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_chunk: int = 256
+    hybrid_attn_every: int = 0  # zamba2: shared attn block every Nth layer
+
+    # --- xLSTM ---
+    block_pattern: Tuple[str, ...] = ()  # e.g. ("mlstm", "slstm")
+
+    # --- encoder-decoder ---
+    enc_layers: int = 0
+
+    # --- modality frontend stub ---
+    n_prefix_tokens: int = 0  # VLM patches / share of seq given to prefix
+
+    # --- numerics ---
+    act: str = "swiglu"  # swiglu | gelu
+    norm_eps: float = 1e-5
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    vocab_pad_to: int = 2_048
+
+    # --- distribution / training policy ---
+    sharding: str = "megatron"  # megatron | fsdp
+    optimizer: str = "sgdm"  # sgd | sgdm | adamw
+    remat: bool = True
+    scan_layers: bool = True
+    source: str = ""  # citation for the assignment row
+
+    # ------------------------------------------------------------------
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        return round_up(self.vocab_size, self.vocab_pad_to)
+
+    @property
+    def d_inner(self) -> int:  # mamba2 inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.family == "audio"
+
+    @property
+    def supports_long_decode(self) -> bool:
+        """long_500k policy (see DESIGN.md §4).
+
+        SSM/hybrid decode is O(1)-state; dense/MoE/VLM decoders run the
+        sliding-window variant; the enc-dec speech model has no 500k-token
+        autoregressive mode and is skipped.
+        """
+        return self.family != "audio"
+
+    def validate(self) -> None:
+        assert self.family in ("dense", "moe", "ssm", "hybrid", "audio", "vlm")
+        if self.family != "ssm":
+            assert self.d_model % self.n_heads == 0 or self.head_dim
+            assert self.n_heads % self.n_kv_heads == 0
+        if self.family == "moe":
+            assert self.n_experts > 0 and self.top_k > 0
+        if self.family == "ssm":
+            assert self.block_pattern, "ssm family needs a block pattern"
+        if self.family == "hybrid":
+            assert self.hybrid_attn_every > 0
+            assert self.n_layers % self.hybrid_attn_every == 0
+
+
+# ---------------------------------------------------------------------------
+# Federated-learning configuration (the paper's experiment axis)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FLConfig:
+    """One SAFL/SFL experiment (paper §2, §4)."""
+
+    n_clients: int = 50
+    k: int = 10  # aggregation buffer size / activation count
+    mode: str = "semi_async"  # "sync" | "semi_async"
+    aggregation: str = "fedsgd"  # fedsgd | fedavg | sdga | fedasync | fedbuff | fedopt
+    local_epochs: int = 1
+    local_batch_size: int = 32
+    client_lr: float = 0.05
+    server_lr: float = 1.0  # eta in Eq. (5)
+    # SDGA / staleness-aware knobs
+    staleness_alpha: float = 0.5  # polynomial discount (1+tau)^-alpha
+    server_momentum: float = 0.0
+    ema_anchor: float = 0.0  # pull toward running param average (SDGA)
+    fedasync_alpha: float = 0.6
+    # discrete-event time model (lognormal per-client speeds)
+    speed_sigma: float = 0.6
+    comm_mean_s: float = 1.0
+    seed: int = 0
+    # beyond-paper: int8 update compression (repro.core.compression)
+    compress_updates: bool = False
+    # metrics
+    target_accuracy: float = 0.5  # Acc_t for T_f / T_s
+    oscillation_thresholds: Tuple[float, ...] = (0.02, 0.05, 0.10, 0.15)
+
+    def validate(self) -> None:
+        assert self.mode in ("sync", "semi_async")
+        assert 1 <= self.k <= self.n_clients
+        assert self.aggregation in (
+            "fedsgd", "fedavg", "sdga", "fedasync", "fedbuff", "fedopt")

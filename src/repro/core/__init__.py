@@ -1,0 +1,3 @@
+from repro.core.safl import FLEngine, FLResult  # noqa: F401
+from repro.core import aggregation  # noqa: F401
+from repro.core.metrics import MetricsLog  # noqa: F401

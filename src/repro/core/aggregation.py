@@ -1,0 +1,196 @@
+"""Aggregation strategies (paper §3) + staleness-aware variants.
+
+All aggregators consume a *stacked* update pytree (leading axis K = number of
+buffered client updates) plus a weight vector, and return the new global
+parameters.  The stacked layout is what the fused Pallas reduction kernel
+(:mod:`repro.kernels.safl_agg`) accelerates on TPU; the pure-jnp path here is
+its oracle and the CPU fallback.
+
+Targets:
+  * ``fedsgd`` (Eq. 4–5): gradients;  w_g ← w_g − η · Σ_i a_i ∇L_i
+  * ``fedavg`` (Eq. 6):   weights;    w_g ← Σ_i (|D_i|/D) w_i
+Variants (related work the paper cites + our beyond-paper SDGA):
+  * ``fedasync``: w_g ← (1−α_τ) w_g + α_τ w_i       (per-update mixing)
+  * ``fedbuff``:  buffered staleness-discounted gradient mean
+  * ``fedopt``:   server Adam over the aggregated gradient/delta
+  * ``sdga``:     staleness-damped gradient aggregation (ours) — poly
+    discount + server momentum + EMA anchor toward the running weight average
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+# ---------------------------------------------------------------------------
+# staleness weight functions (paper Fig. 4 motivation)
+# ---------------------------------------------------------------------------
+
+
+def staleness_poly(tau: jax.Array, alpha: float) -> jax.Array:
+    """(1 + tau)^(-alpha) — FedAsync's polynomial discount."""
+    return jnp.power(1.0 + tau.astype(jnp.float32), -alpha)
+
+
+def staleness_hinge(tau: jax.Array, a: float = 4.0, b: float = 1.0) -> jax.Array:
+    return jnp.where(tau <= a, 1.0, 1.0 / (b * (tau - a) + 1.0))
+
+
+def staleness_const(tau: jax.Array) -> jax.Array:
+    return jnp.ones_like(tau, dtype=jnp.float32)
+
+
+STALENESS_FNS = {"poly": staleness_poly, "hinge": staleness_hinge,
+                 "const": lambda t, alpha=0.0: staleness_const(t)}
+
+
+# ---------------------------------------------------------------------------
+# weighted reduction over stacked pytrees
+# ---------------------------------------------------------------------------
+
+
+def weighted_mean(stacked: Pytree, weights: jax.Array,
+                  normalize: bool = True) -> Pytree:
+    """sum_k w_k * leaf[k] / (sum_k w_k)   per leaf.
+
+    ``stacked`` leaves have leading dim K; ``weights`` is (K,).
+    """
+    w = weights.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(w), 1e-12) if normalize else 1.0
+
+    def red(leaf):
+        wf = w.reshape((-1,) + (1,) * (leaf.ndim - 1))
+        return (jnp.sum(leaf.astype(jnp.float32) * wf, axis=0)
+                / denom).astype(leaf.dtype)
+
+    return jax.tree_util.tree_map(red, stacked)
+
+
+# ---------------------------------------------------------------------------
+# aggregators
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ServerOptState:
+    """Server-side slow state for fedopt / sdga."""
+    momentum: Pytree = None
+    adam_m: Pytree = None
+    adam_v: Pytree = None
+    ema: Pytree = None
+    step: int = 0
+
+
+def fedsgd(global_params: Pytree, grads_stacked: Pytree,
+           weights: jax.Array, server_lr: float) -> Pytree:
+    """Eq. (4)-(5): uniform (or staleness-weighted) gradient mean + SGD."""
+    g = weighted_mean(grads_stacked, weights)
+    return jax.tree_util.tree_map(
+        lambda p, gl: (p - server_lr * gl.astype(p.dtype)).astype(p.dtype),
+        global_params, g)
+
+
+def fedavg(params_stacked: Pytree, data_sizes: jax.Array) -> Pytree:
+    """Eq. (6): data-size-weighted parameter average."""
+    return weighted_mean(params_stacked, data_sizes.astype(jnp.float32))
+
+
+def fedasync_mix(global_params: Pytree, client_params: Pytree,
+                 alpha_tau: jax.Array) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda g, c: ((1.0 - alpha_tau) * g.astype(jnp.float32)
+                      + alpha_tau * c.astype(jnp.float32)).astype(g.dtype),
+        global_params, client_params)
+
+
+def fedbuff(global_params: Pytree, grads_stacked: Pytree,
+            staleness: jax.Array, server_lr: float,
+            alpha: float = 0.5) -> Pytree:
+    w = staleness_poly(staleness, alpha)
+    return fedsgd(global_params, grads_stacked, w, server_lr)
+
+
+def fedopt_adam(global_params: Pytree, grads_stacked: Pytree,
+                weights: jax.Array, opt: ServerOptState, server_lr: float,
+                b1: float = 0.9, b2: float = 0.99,
+                eps: float = 1e-8) -> tuple[Pytree, ServerOptState]:
+    g = weighted_mean(grads_stacked, weights)
+    step = opt.step + 1
+    zeros = lambda: jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, jnp.float32), global_params)
+    m = opt.adam_m if opt.adam_m is not None else zeros()
+    v = opt.adam_v if opt.adam_v is not None else zeros()
+    m = jax.tree_util.tree_map(
+        lambda mm, gg: b1 * mm + (1 - b1) * gg.astype(jnp.float32), m, g)
+    v = jax.tree_util.tree_map(
+        lambda vv, gg: b2 * vv + (1 - b2)
+        * jnp.square(gg.astype(jnp.float32)), v, g)
+    mh = jax.tree_util.tree_map(lambda mm: mm / (1 - b1 ** step), m)
+    vh = jax.tree_util.tree_map(lambda vv: vv / (1 - b2 ** step), v)
+    new = jax.tree_util.tree_map(
+        lambda p, mm, vv: (p.astype(jnp.float32)
+                           - server_lr * mm / (jnp.sqrt(vv) + eps))
+        .astype(p.dtype), global_params, mh, vh)
+    return new, dataclasses.replace(opt, adam_m=m, adam_v=v, step=step)
+
+
+def sdga(global_params: Pytree, grads_stacked: Pytree,
+         staleness: jax.Array, opt: ServerOptState, *,
+         server_lr: float, alpha: float = 0.5, momentum: float = 0.8,
+         ema_anchor: float = 0.05,
+         ema_decay: float = 0.95) -> tuple[Pytree, ServerOptState]:
+    """Staleness-Damped Gradient Aggregation (beyond-paper, DESIGN.md §3).
+
+    FedSGD's gradient target (fast convergence) + three dampers against the
+    oscillation/NaN pathologies the paper attributes to stale gradient
+    directions (Fig. 4):
+      1. polynomial staleness discount of each buffered gradient,
+      2. server momentum (averages out direction noise across rounds),
+      3. EMA anchor: a small pull toward the exponential average of past
+         global weights (a FedAvg-flavoured prior that bounds excursions).
+    """
+    w = staleness_poly(staleness, alpha)
+    g = weighted_mean(grads_stacked, w)
+    zeros = lambda: jax.tree_util.tree_map(
+        lambda p: jnp.zeros_like(p, jnp.float32), global_params)
+    mom = opt.momentum if opt.momentum is not None else zeros()
+    mom = jax.tree_util.tree_map(
+        lambda mm, gg: momentum * mm + gg.astype(jnp.float32), mom, g)
+    ema = opt.ema if opt.ema is not None else jax.tree_util.tree_map(
+        lambda p: p.astype(jnp.float32), global_params)
+    new = jax.tree_util.tree_map(
+        lambda p, mm, e: (p.astype(jnp.float32) - server_lr * mm
+                          + ema_anchor * (e - p.astype(jnp.float32)))
+        .astype(p.dtype), global_params, mom, ema)
+    ema = jax.tree_util.tree_map(
+        lambda e, p: ema_decay * e + (1 - ema_decay) * p.astype(jnp.float32),
+        ema, new)
+    return new, dataclasses.replace(opt, momentum=mom, ema=ema,
+                                    step=opt.step + 1)
+
+
+# ---------------------------------------------------------------------------
+# mesh-level FL step (the technique as a first-class pjit feature)
+# ---------------------------------------------------------------------------
+
+
+def podwise_aggregate(stacked: Pytree, weights: jax.Array,
+                      target: str, global_params: Optional[Pytree] = None,
+                      server_lr: float = 1.0) -> Pytree:
+    """Aggregation across the leading "clients" axis of a pod-stacked pytree
+    inside a jit program.  With the leading dim sharded over the mesh "pod"
+    axis, XLA lowers the mean to an all-reduce over pod links — the paper's
+    server round, expressed as a collective.
+
+    target == "grads":  FedSGD (requires global_params)
+    target == "params": FedAvg
+    """
+    if target == "grads":
+        assert global_params is not None
+        return fedsgd(global_params, stacked, weights, server_lr)
+    return weighted_mean(stacked, weights)

@@ -1,0 +1,141 @@
+"""Client-side local training for the FL engines (paper §2.1, Eq. 1–3).
+
+Clients run mini-batch SGD (the paper's stated client optimizer) for
+``local_epochs`` over their shard.  Both aggregation targets derive from the
+same local run:
+
+  * FedAvg uploads the final local weights ``w_i`` (+ non-trainable state,
+    e.g. BatchNorm running stats — the extra payload in the paper's Table 2);
+  * FedSGD uploads the *cumulative gradient* of the epoch (Eq. 3), which for
+    an SGD trajectory equals (w_start − w_end) / lr — the sum of the applied
+    mini-batch gradients.  The server then applies Eq. (4)–(5).
+
+The per-client epoch is one jitted ``lax.scan`` over stacked batches with a
+validity mask (clients have heterogeneous shard sizes; shards are padded to a
+common batch count so one XLA program serves every client).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+@dataclasses.dataclass
+class ClientState:
+    """Host-side record for one simulated client."""
+    cid: int
+    params: Pytree  # current local weights
+    model_state: Pytree  # non-trainables (BN running stats)
+    version: int  # global round the local model derives from
+    n_samples: int
+    speed: float  # relative compute speed (samples/sec multiplier)
+    comm_time: float  # upload latency (simulated seconds)
+    rng: np.random.Generator = None
+
+
+def sequence_loss(logits, targets, mask=None):
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    nll = logz - jnp.take_along_axis(
+        logits, targets[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+def make_loss_fn(apply_fn: Callable, kind: str):
+    """kind: image | char | sentiment.  batch = (x, y, mask)."""
+
+    def loss(params, model_state, x, y, mask):
+        logits, new_state = apply_fn(params, model_state, x, True)
+        if kind == "char":
+            # next-char prediction: shift by one
+            per = sequence_loss(logits[:, :-1], y[:, 1:],
+                                mask[:, None] * jnp.ones_like(
+                                    y[:, 1:], jnp.float32))
+            return per, new_state
+        per_ex = sequence_loss(logits, y, mask)
+        return per_ex, new_state
+
+    return loss
+
+
+_FN_CACHE: Dict = {}
+
+
+def make_local_train(apply_fn: Callable, kind: str):
+    """Returns jitted ``epoch(params, state, xs, ys, mask, lr)``.
+
+    xs: (n_batches, B, ...); ys likewise; mask (n_batches, B) marks real
+    samples (padding batches have mask 0 and are no-ops).
+    Returns (params', state', mean_loss).
+
+    Memoized on (apply_fn, kind) so multiple engines over the same model
+    share one XLA program (jit caches by function identity).
+    """
+    key = ("train", apply_fn, kind)
+    if key in _FN_CACHE:
+        return _FN_CACHE[key]
+    loss_fn = make_loss_fn(apply_fn, kind)
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    @jax.jit
+    def epoch(params, model_state, xs, ys, mask, lr):
+        def step(carry, batch):
+            p, s = carry
+            x, y, m = batch
+            (l, s2), g = vg(p, s, x, y, m)
+            any_valid = jnp.sum(m) > 0
+            p = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(any_valid, a - lr * b, a), p, g)
+            s2 = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(any_valid, b, a), s, s2)
+            return (p, s2), jnp.where(any_valid, l, 0.0)
+
+        (p, s), losses = jax.lax.scan(step, (params, model_state),
+                                      (xs, ys, mask))
+        n_valid = jnp.maximum(jnp.sum(jnp.any(mask > 0, axis=1)), 1)
+        return p, s, jnp.sum(losses) / n_valid
+
+    _FN_CACHE[key] = epoch
+    return epoch
+
+
+def cumulative_gradient(w_start: Pytree, w_end: Pytree, lr: float) -> Pytree:
+    """FedSGD upload payload: sum of applied mini-batch gradients (Eq. 3)."""
+    return jax.tree_util.tree_map(
+        lambda a, b: (a - b) / lr, w_start, w_end)
+
+
+def make_eval_fn(apply_fn: Callable, kind: str):
+    key = ("eval", apply_fn, kind)
+    if key in _FN_CACHE:
+        return _FN_CACHE[key]
+
+    @jax.jit
+    def evaluate(params, model_state, x, y):
+        logits, _ = apply_fn(params, model_state, x, False)
+        if kind == "char":
+            pred = jnp.argmax(logits[:, :-1], axis=-1)
+            tgt = y[:, 1:]
+            acc = jnp.mean((pred == tgt).astype(jnp.float32))
+            loss = sequence_loss(logits[:, :-1], tgt)
+        else:
+            pred = jnp.argmax(logits, axis=-1)
+            acc = jnp.mean((pred == y).astype(jnp.float32))
+            loss = sequence_loss(logits, y)
+        return acc, loss
+
+    _FN_CACHE[key] = evaluate
+    return evaluate
+
+
+def pytree_bytes(tree: Pytree) -> int:
+    return sum(np.prod(l.shape) * jnp.dtype(l.dtype).itemsize
+               for l in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,71 @@
+"""Update compression for the transmission-load axis (paper §4.4.2, Table 2)
+— beyond-paper optimization quantified in benchmarks/beyond_sdga.py.
+
+Two schemes over flat update pytrees:
+  * int8 block quantization (per-block absmax scale) — 4x byte reduction,
+    the TPU-side kernel lives in repro/kernels/quantize.py;
+  * top-k magnitude sparsification (indices + values).
+
+Both report the bytes that *would* cross the channel, which the FL engine
+uses for its accounting when compression is enabled.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+BLOCK = 256
+
+
+def quantize_int8(x: jax.Array, block: int = BLOCK):
+    """x: any shape -> (q int8 (n_blocks, block), scales f32, orig shape)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % block
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0], x.shape
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = int(np.prod(shape))
+    return flat[:n].reshape(shape)
+
+
+def quantize_pytree(tree: Pytree):
+    qs = jax.tree_util.tree_map(quantize_int8, tree,
+                                is_leaf=lambda x: isinstance(x, jax.Array)
+                                or isinstance(x, np.ndarray))
+    nbytes = sum(q.size + s.size * 4
+                 for q, s, _ in jax.tree_util.tree_leaves(
+                     qs, is_leaf=lambda t: isinstance(t, tuple)))
+    return qs, int(nbytes)
+
+
+def dequantize_pytree(qs) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda t: dequantize_int8(*t), qs,
+        is_leaf=lambda t: isinstance(t, tuple))
+
+
+def topk_sparsify(x: jax.Array, frac: float = 0.05):
+    flat = x.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.size * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    return flat[idx], idx.astype(jnp.int32), x.shape
+
+
+def topk_restore(vals, idx, shape) -> jax.Array:
+    n = int(np.prod(shape))
+    return jnp.zeros((n,), vals.dtype).at[idx].set(vals).reshape(shape)
+
+
+def topk_bytes(vals, idx) -> int:
+    return int(vals.size * 4 + idx.size * 4)

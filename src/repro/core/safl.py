@@ -1,0 +1,290 @@
+"""SFL / SAFL engines (paper §2.2, Fig. 1) — discrete-event simulation.
+
+The engine decouples *simulated* wall-clock (lognormal per-client compute
+speeds + communication latency) from host compute: client updates are
+evaluated lazily when their upload event fires, with one shared jitted XLA
+program for every client (shards padded to a common batch count).
+
+Synchronous (SFL, Fig. 1a): each round the server activates K random
+clients, waits for all of them (round time = slowest active client — the
+straggler effect), aggregates, broadcasts.
+
+Semi-asynchronous (SAFL, Fig. 1b): clients train continuously at their own
+pace and upload after each local epoch; the server aggregates as soon as K
+updates are buffered and broadcasts; a client adopts the newest global model
+at its next upload boundary, otherwise continues training its local one —
+so buffered updates carry staleness τ = t_now − t_client_version.
+
+Both aggregation targets (FedSGD gradients / FedAvg weights) and the
+staleness-aware variants are provided by :mod:`repro.core.aggregation`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core import compression
+from repro.core.client import (ClientState, cumulative_gradient,
+                               make_eval_fn, make_local_train, pytree_bytes)
+from repro.core.metrics import MetricsLog
+
+Pytree = Any
+
+# simulated samples/second at speed 1.0
+_BASE_RATE = 500.0
+# serialization envelope: full-model upload (FedAvg) carries the layer
+# structure; gradient upload (FedSGD) is a bare tensor list (paper §5.1.2)
+_MODEL_ENVELOPE = 0.010
+_GRAD_ENVELOPE = 0.002
+
+
+@dataclasses.dataclass
+class FLResult:
+    metrics: MetricsLog
+    final_params: Pytree
+    staleness_hist: Dict[int, int]
+    idle_time: float  # SFL: total simulated idle seconds across clients
+
+
+class FLEngine:
+    """One experiment = FLEngine(...).run(n_rounds)."""
+
+    def __init__(self, fl_cfg, apply_fn: Callable, kind: str,
+                 init_params: Pytree, init_state: Pytree,
+                 client_shards: Sequence[Dict[str, np.ndarray]],
+                 test_x: np.ndarray, test_y: np.ndarray):
+        fl_cfg.validate()
+        self.cfg = fl_cfg
+        self.kind = kind
+        self.apply_fn = apply_fn
+        self.epoch_fn = make_local_train(apply_fn, kind)
+        self.eval_fn = make_eval_fn(apply_fn, kind)
+        self.test_x, self.test_y = jnp.asarray(test_x), jnp.asarray(test_y)
+
+        rng = np.random.default_rng(fl_cfg.seed)
+        self.clients: List[ClientState] = []
+        for cid, shard in enumerate(client_shards):
+            speed = float(np.exp(rng.normal(0.0, fl_cfg.speed_sigma)))
+            comm = float(fl_cfg.comm_mean_s
+                         * np.exp(rng.normal(0.0, 0.3)))
+            self.clients.append(ClientState(
+                cid=cid, params=init_params, model_state=init_state,
+                version=0, n_samples=int(shard["n"]), speed=speed,
+                comm_time=comm, rng=np.random.default_rng(
+                    fl_cfg.seed * 7919 + cid)))
+        self.shards = client_shards
+        self.global_params = init_params
+        self.global_state = init_state
+        self.t_global = 0
+        self.opt_state = agg.ServerOptState()
+        self.rng = rng
+
+        self.metrics = MetricsLog(fl_cfg.target_accuracy,
+                                  fl_cfg.oscillation_thresholds)
+        self.tx_bytes = 0
+        self.rx_bytes = 0
+        self.staleness_hist: Dict[int, int] = {}
+        self.idle_time = 0.0
+        self._params_bytes = pytree_bytes(init_params)
+        self._state_bytes = pytree_bytes(init_state)
+
+    # ------------------------------------------------------------------
+    def _epoch_time(self, c: ClientState) -> float:
+        per_epoch = c.n_samples / (_BASE_RATE * c.speed)
+        # FedAvg's aggregation bookkeeping (data-volume query + weighting
+        # coefficients) adds server-side latency per paper §5.1.2 Table 2
+        return per_epoch * self.cfg.local_epochs
+
+    def _agg_overhead(self) -> float:
+        return 0.05 * self.cfg.k if self.cfg.aggregation != "fedsgd" else 0.01
+
+    def _run_local(self, c: ClientState):
+        """Run one local 'upload period' (local_epochs) for client c."""
+        shard = self.shards[c.cid]
+        params, state = c.params, c.model_state
+        for _ in range(self.cfg.local_epochs):
+            params, state, loss = self.epoch_fn(
+                params, state, shard["xs"], shard["ys"], shard["mask"],
+                self.cfg.client_lr)
+        return params, state, float(loss)
+
+    def _upload_payload(self, c: ClientState, w_end, s_end):
+        """Returns (payload, tx_bytes) per aggregation target."""
+        if self.cfg.aggregation in ("fedavg", "fedasync"):
+            payload = {"params": w_end, "state": s_end,
+                       "n": c.n_samples}
+            nbytes = int((self._params_bytes + self._state_bytes)
+                         * (1 + _MODEL_ENVELOPE))
+        else:  # gradient targets: fedsgd, sdga, fedbuff, fedopt
+            grad = cumulative_gradient(c.params, w_end, self.cfg.client_lr)
+            if self.cfg.compress_updates:
+                # beyond-paper: int8 block quantization on the channel
+                # (kernels/quantize.py on TPU); dequantized server-side
+                qs, qbytes = compression.quantize_pytree(grad)
+                grad = compression.dequantize_pytree(qs)
+                nbytes = int(qbytes * (1 + _GRAD_ENVELOPE))
+            else:
+                nbytes = int(self._params_bytes * (1 + _GRAD_ENVELOPE))
+            payload = {"grad": grad, "n": c.n_samples}
+        return payload, nbytes
+
+    # ------------------------------------------------------------------
+    def _aggregate(self, buffer: List[Dict]) -> None:
+        cfg = self.cfg
+        stale = jnp.asarray([b["staleness"] for b in buffer],
+                            dtype=jnp.float32)
+        for b in buffer:
+            s = int(b["staleness"])
+            self.staleness_hist[s] = self.staleness_hist.get(s, 0) + 1
+
+        if cfg.aggregation == "fedavg":
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[b["payload"]["params"] for b in buffer])
+            sizes = jnp.asarray([b["payload"]["n"] for b in buffer],
+                                jnp.float32)
+            self.global_params = agg.fedavg(stacked, sizes)
+            states = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[b["payload"]["state"] for b in buffer])
+            if jax.tree_util.tree_leaves(states):
+                self.global_state = agg.weighted_mean(states, sizes)
+        elif cfg.aggregation == "fedasync":
+            for b in buffer:
+                a_tau = cfg.fedasync_alpha * float(
+                    agg.staleness_poly(jnp.float32(b["staleness"]),
+                                       cfg.staleness_alpha))
+                self.global_params = agg.fedasync_mix(
+                    self.global_params, b["payload"]["params"],
+                    jnp.float32(a_tau))
+                self.global_state = b["payload"]["state"]
+        else:
+            stacked = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs),
+                *[b["payload"]["grad"] for b in buffer])
+            if cfg.aggregation == "fedsgd":
+                w = jnp.ones((len(buffer),), jnp.float32)
+                self.global_params = agg.fedsgd(
+                    self.global_params, stacked, w, cfg.server_lr)
+            elif cfg.aggregation == "fedbuff":
+                self.global_params = agg.fedbuff(
+                    self.global_params, stacked, stale, cfg.server_lr,
+                    cfg.staleness_alpha)
+            elif cfg.aggregation == "fedopt":
+                w = agg.staleness_poly(stale, cfg.staleness_alpha)
+                self.global_params, self.opt_state = agg.fedopt_adam(
+                    self.global_params, stacked, w, self.opt_state,
+                    cfg.server_lr)
+            elif cfg.aggregation == "sdga":
+                self.global_params, self.opt_state = agg.sdga(
+                    self.global_params, stacked, stale, self.opt_state,
+                    server_lr=cfg.server_lr, alpha=cfg.staleness_alpha,
+                    momentum=cfg.server_momentum or 0.8,
+                    ema_anchor=cfg.ema_anchor or 0.05)
+            # gradient targets adopt the newest buffered BN state
+            self.global_state = buffer[-1]["payload"].get(
+                "bn_state", self.global_state)
+        self.t_global += 1
+
+    def _eval_and_record(self, now: float, stale_vals: Sequence[int]) -> None:
+        acc, loss = self.eval_fn(self.global_params, self.global_state,
+                                 self.test_x, self.test_y)
+        acc, loss = float(acc), float(loss)
+        nan_event = not np.isfinite(loss)
+        # broadcast of the new global model to all clients
+        self.rx_bytes += int((self._params_bytes + self._state_bytes)
+                             * len(self.clients))
+        self.metrics.record(
+            round=self.t_global, sim_time=now, accuracy=acc, loss=loss,
+            tx_bytes=self.tx_bytes, rx_bytes=self.rx_bytes,
+            mean_staleness=float(np.mean(stale_vals)) if stale_vals else 0.0,
+            max_staleness=int(max(stale_vals)) if stale_vals else 0,
+            nan_event=nan_event)
+
+    # ------------------------------------------------------------------
+    def run(self, n_rounds: int, log_every: int = 0) -> FLResult:
+        if self.cfg.mode == "sync":
+            self._run_sync(n_rounds, log_every)
+        else:
+            self._run_semi_async(n_rounds, log_every)
+        return FLResult(self.metrics, self.global_params,
+                        self.staleness_hist, self.idle_time)
+
+    # ----- SFL -----
+    def _run_sync(self, n_rounds: int, log_every: int) -> None:
+        now = 0.0
+        for _ in range(n_rounds):
+            active = self.rng.choice(len(self.clients), self.cfg.k,
+                                     replace=False)
+            buffer = []
+            durations = []
+            for cid in active:
+                c = self.clients[cid]
+                c.params, c.model_state = self.global_params, self.global_state
+                c.version = self.t_global
+                w_end, s_end, _ = self._run_local(c)
+                payload, nbytes = self._upload_payload(c, w_end, s_end)
+                if self.cfg.aggregation not in ("fedavg", "fedasync"):
+                    payload["bn_state"] = s_end
+                self.tx_bytes += nbytes
+                buffer.append({"payload": payload, "staleness": 0,
+                               "cid": cid})
+                durations.append(self._epoch_time(c) + c.comm_time)
+            round_t = max(durations) + self._agg_overhead()
+            self.idle_time += sum(round_t - d for d in durations)
+            now += round_t
+            self._aggregate(buffer)
+            self._eval_and_record(now, [0] * len(buffer))
+            if log_every and self.t_global % log_every == 0:
+                r = self.metrics.records[-1]
+                print(f"  [SFL-{self.cfg.aggregation}] round {r.round} "
+                      f"acc={r.accuracy:.4f} loss={r.loss:.4f}")
+
+    # ----- SAFL -----
+    def _run_semi_async(self, n_rounds: int, log_every: int) -> None:
+        heap: List = []
+        for c in self.clients:
+            jitter = float(c.rng.uniform(0, 0.1))
+            heapq.heappush(heap, (self._epoch_time(c) + c.comm_time + jitter,
+                                  c.cid))
+        buffer: List[Dict] = []
+        now = 0.0
+        while self.t_global < n_rounds and heap:
+            now, cid = heapq.heappop(heap)
+            c = self.clients[cid]
+            w_end, s_end, _ = self._run_local(c)
+            payload, nbytes = self._upload_payload(c, w_end, s_end)
+            if self.cfg.aggregation not in ("fedavg", "fedasync"):
+                payload["bn_state"] = s_end
+            self.tx_bytes += nbytes
+            staleness = self.t_global - c.version
+            buffer.append({"payload": payload, "staleness": staleness,
+                           "cid": cid})
+
+            # client-side model refresh (paper §2.2.2): adopt newest global
+            # if one arrived since this client's version, else continue local
+            if c.version < self.t_global:
+                c.params, c.model_state = (self.global_params,
+                                           self.global_state)
+                c.version = self.t_global
+            else:
+                c.params, c.model_state = w_end, s_end
+            heapq.heappush(heap, (now + self._epoch_time(c) + c.comm_time,
+                                  cid))
+
+            if len(buffer) >= self.cfg.k:
+                stale_vals = [b["staleness"] for b in buffer]
+                self._aggregate(buffer)
+                self._eval_and_record(now + self._agg_overhead(), stale_vals)
+                buffer = []
+                if log_every and self.t_global % log_every == 0:
+                    r = self.metrics.records[-1]
+                    print(f"  [SAFL-{self.cfg.aggregation}] round {r.round} "
+                          f"acc={r.accuracy:.4f} loss={r.loss:.4f} "
+                          f"stale={r.mean_staleness:.2f}")

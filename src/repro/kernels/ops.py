@@ -1,0 +1,49 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels TARGET TPU — see kernel docstrings for the VMEM sizing).  On a real
+TPU backend set ``REPRO_PALLAS_INTERPRET=0`` or pass interpret=False.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quantize as _q
+from repro.kernels import safl_agg as _agg
+
+
+def _default_interpret() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("server_lr", "mode", "block_d"))
+def safl_aggregate(updates, weights, params=None, server_lr: float = 1.0,
+                   mode: str = "fedsgd", block_d: int = _agg.BLOCK_D):
+    return _agg.safl_aggregate(updates, weights, params, server_lr, mode,
+                               block_d, interpret=_default_interpret())
+
+
+@jax.jit
+def quantize_int8(x):
+    return _q.quantize_int8(x, interpret=_default_interpret())
+
+
+@jax.jit
+def dequantize_int8(q, scales):
+    return _q.dequantize_int8(q, scales, interpret=_default_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, causal: bool = True,
+                    block_q: int = _fa.BLOCK_Q, block_k: int = _fa.BLOCK_K):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k,
+                               interpret=_default_interpret())

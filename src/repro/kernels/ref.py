@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def safl_agg_ref(updates: jax.Array, weights: jax.Array,
+                 params: jax.Array, server_lr: float) -> jax.Array:
+    """Fused FedSGD server step over a K-stacked flat update buffer.
+
+    updates (K, D) f32, weights (K,), params (D,) ->
+        params - lr * sum_k w_k u_k / sum_k w_k        (Eq. 4-5)
+    """
+    w = weights.astype(jnp.float32)
+    wsum = jnp.maximum(jnp.sum(w), 1e-12)
+    g = jnp.einsum("k,kd->d", w, updates.astype(jnp.float32)) / wsum
+    return (params.astype(jnp.float32) - server_lr * g).astype(params.dtype)
+
+
+def weighted_avg_ref(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """FedAvg target: weighted mean over K (Eq. 6). updates (K, D)."""
+    w = weights.astype(jnp.float32)
+    wsum = jnp.maximum(jnp.sum(w), 1e-12)
+    return jnp.einsum("k,kd->d", w, updates.astype(jnp.float32)) / wsum
+
+
+def quantize_ref(x: jax.Array):
+    """Blockwise int8 absmax quantization. x (R, B) -> (q s8, scales f32)."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[:, 0]
+
+
+def dequantize_ref(q: jax.Array, scales: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scales[:, None]
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q (B,S,H,hd), k/v (B,S,Hkv,hd) GQA -> out (B,S,H,hd), f32 softmax."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    rep = H // Hkv
+    k = jnp.repeat(k, rep, axis=2)
+    v = jnp.repeat(v, rep, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,93 @@
+"""Fused SAFL aggregation kernel (pl.pallas_call + BlockSpec VMEM tiling).
+
+The paper's server round is a K-way weighted reduction over flat update
+vectors (K = buffer size, D = model size).  Done naively this is K+2 HBM
+passes (read each update, read params, write params); the fused kernel does
+one streaming pass: each grid step loads a (K, BLOCK_D) update tile + a
+(BLOCK_D,) param tile into VMEM, reduces over K in registers, applies the
+server step, writes the new param tile.
+
+TPU sizing: BLOCK_D = 2048 lanes x K<=64 buffered updates x 4B = 512 KiB of
+VMEM per tile — comfortably inside the ~16 MiB v5e VMEM with double
+buffering.  The weight vector sits in SMEM (scalar-prefetch style, tiny).
+
+Validated on CPU in interpret mode against repro.kernels.ref oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_D = 2048
+
+
+def _agg_kernel(w_ref, u_ref, p_ref, o_ref, *, server_lr: float,
+                mode: str):
+    """One (K, BLOCK_D) tile: o = p - lr * (w @ u)/sum(w)  (fedsgd)
+    or o = (w @ u)/sum(w)  (avg)."""
+    w = w_ref[...].astype(jnp.float32)  # (K,)
+    u = u_ref[...].astype(jnp.float32)  # (K, BLOCK_D)
+    wsum = jnp.maximum(jnp.sum(w), 1e-12)
+    g = jnp.einsum("k,kd->d", w, u) / wsum
+    if mode == "fedsgd":
+        p = p_ref[...].astype(jnp.float32)
+        o_ref[...] = (p - server_lr * g).astype(o_ref.dtype)
+    else:
+        o_ref[...] = g.astype(o_ref.dtype)
+
+
+def safl_aggregate(updates: jax.Array, weights: jax.Array,
+                   params: jax.Array | None = None,
+                   server_lr: float = 1.0, mode: str = "fedsgd",
+                   block_d: int = BLOCK_D,
+                   interpret: bool = True) -> jax.Array:
+    """updates (K, D), weights (K,), params (D,) [fedsgd] -> (D,).
+
+    D is padded to a multiple of ``block_d`` internally.
+    """
+    K, D = updates.shape
+    pad = (-D) % block_d
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+        if params is not None:
+            params = jnp.pad(params, (0, pad))
+    Dp = D + pad
+    grid = (Dp // block_d,)
+    out_dtype = params.dtype if params is not None else jnp.float32
+    if mode == "fedsgd":
+        assert params is not None
+        args = (weights, updates, params)
+        in_specs = [
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K, block_d), lambda i: (0, i)),
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+        ]
+    else:
+        args = (weights, updates)
+        in_specs = [
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K, block_d), lambda i: (0, i)),
+        ]
+    kern = functools.partial(
+        _agg_kernel if mode == "fedsgd" else _avg_kernel,
+        server_lr=server_lr, mode=mode)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Dp,), out_dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:D]
+
+
+def _avg_kernel(w_ref, u_ref, o_ref, *, server_lr: float, mode: str):
+    del server_lr, mode
+    w = w_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    wsum = jnp.maximum(jnp.sum(w), 1e-12)
+    o_ref[...] = (jnp.einsum("k,kd->d", w, u) / wsum).astype(o_ref.dtype)

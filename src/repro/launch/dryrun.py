@@ -1,0 +1,357 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks device count on first init.
+"""Multi-pod dry-run (DESIGN.md §6): lower + compile every
+(architecture x input shape) on the production meshes, record
+memory_analysis / cost_analysis / per-collective byte sums.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch starcoder2-3b \
+      --shape train_4k --mesh single            # one pair
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single,multi \
+      --out experiments/dryrun                  # the full matrix
+
+Writes one JSON per (arch, shape, mesh[, variant]) into --out.
+"""
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config
+from repro.launch import specs as S
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh, mesh_chips)
+from repro.launch.steps import (make_decode_step, make_fl_train_step,
+                                make_prefill_step, make_train_step)
+from repro.models import build_model
+from repro.sharding import param_specs
+from repro.sharding.ctx import activation_sharding
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(?P<out>\([^)]*\)|\S+)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-operand bytes of every collective op in post-SPMD HLO."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue  # async pair: count the -start only
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        nbytes = 0
+        for dt, dims in _SHAPE_RE.findall(m.group("out")):
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES[dt]
+        key = m.group("op")
+        out[key] = out.get(key, 0) + nbytes
+    return out
+
+
+def _opt_state_structs_and_specs(opt, params, pspecs):
+    ostate = jax.eval_shape(opt.init, params)
+    # optimizer state mirrors params structure per top-level key
+    if not jax.tree_util.tree_leaves(ostate):
+        return ostate, jax.tree_util.tree_map(lambda x: x, ostate)
+    ospecs = {k: pspecs for k in ostate.keys()}
+    return ostate, ospecs
+
+
+def build_lowered(arch: str, shape_name: str, mesh, *,
+                  fl_aggregation: str = "fedsgd", variant_cfg=None):
+    """Returns (lowered, meta) for one (arch, shape, mesh) pair."""
+    cfg = variant_cfg or get_config(arch)
+    sh = INPUT_SHAPES[shape_name]
+    model = build_model(cfg)
+    params = S.param_structs(model)
+    pspecs = param_specs(params, cfg, mesh)
+    multi_pod = "pod" in mesh.shape
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": dict(mesh.shape), "kind": sh.kind,
+            "family": cfg.family}
+
+    if sh.kind == "train":
+        batch = S.train_batch_structs(cfg, shape_name, mesh)
+        if multi_pod:
+            n_pods = mesh.shape["pod"]
+            step_fn, opt = make_fl_train_step(
+                model, cfg, aggregation=fl_aggregation,
+                inner_steps=4 if fl_aggregation == "fedavg" else 1)
+            params = S.stack_structs(params, n_pods)
+            pspecs = S.prepend_pod(pspecs, mesh)
+            ostate, ospecs = _opt_state_structs_and_specs(
+                opt, params, pspecs)
+            w = jax.ShapeDtypeStruct((n_pods,), jnp.float32,
+                                     sharding=NamedSharding(mesh, P()))
+            stepnum = jax.ShapeDtypeStruct((), jnp.int32,
+                                           sharding=NamedSharding(mesh, P()))
+            jitted = jax.jit(step_fn,
+                             in_shardings=(pspecs, ospecs, None, None, None),
+                             out_shardings=(pspecs, ospecs, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params, ostate, batch, stepnum, w)
+            meta["fl_aggregation"] = fl_aggregation
+        else:
+            step_fn, opt = make_train_step(model, cfg)
+            ostate, ospecs = _opt_state_structs_and_specs(
+                opt, params, pspecs)
+            stepnum = jax.ShapeDtypeStruct((), jnp.int32,
+                                           sharding=NamedSharding(mesh, P()))
+            jitted = jax.jit(step_fn,
+                             in_shardings=(pspecs, ospecs, None, None),
+                             out_shardings=(pspecs, ospecs, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params, ostate, batch, stepnum)
+
+    elif sh.kind == "prefill":
+        batch = S.prompt_batch_structs(cfg, sh.global_batch, sh.seq_len, mesh)
+        step_fn = make_prefill_step(model)
+        jitted = jax.jit(step_fn, in_shardings=(pspecs, None))
+        lowered = jitted.lower(params, batch)
+
+    else:  # decode
+        cache, pos, capacity = S.decode_cache_structs(cfg, model, shape_name,
+                                                      mesh)
+        win = S.decode_window(cfg, shape_name)
+        step_fn = make_decode_step(model, window=win)
+        B = sh.global_batch
+        dsize = mesh.shape.get("data", 1)
+        tok_spec = P("data") if B % dsize == 0 and B >= dsize else P()
+        tokens = jax.ShapeDtypeStruct(
+            (B,), jnp.int32, sharding=NamedSharding(mesh, tok_spec))
+        posv = jax.ShapeDtypeStruct((), jnp.int32,
+                                    sharding=NamedSharding(mesh, P()))
+        jitted = jax.jit(step_fn, in_shardings=(pspecs, None, None, None),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(params, cache, tokens, posv)
+        meta["window"] = win
+        meta["capacity"] = capacity
+    return lowered, meta
+
+
+def model_flops(cfg, shape_name: str) -> float:
+    """MODEL_FLOPS = 6*N*D (dense) / 6*N_active*D (MoE) for train; forward
+    only (2*N*D) for serving shapes; decode D = new tokens = batch."""
+    sh = INPUT_SHAPES[shape_name]
+    model = build_model(cfg)
+    params = S.param_structs(model)
+    n_params = sum(int(jnp.prod(jnp.array(l.shape)))
+                   for l in jax.tree_util.tree_leaves(params))
+    if cfg.family == "moe":
+        # active params: count expert tables at their top_k/E fraction
+        import re as _re
+        from repro.sharding.rules import _path_str
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        n_active = 0
+        for path, l in flat:
+            sz = int(jnp.prod(jnp.array(l.shape)))
+            ps = _path_str(path)
+            if _re.search(r"moe\.w[123]$", ps):
+                sz = sz * cfg.top_k // cfg.n_experts
+            n_active += sz
+    else:
+        n_active = n_params
+    if sh.kind == "train":
+        tokens = sh.global_batch * sh.seq_len
+        return 6.0 * n_active * tokens
+    if sh.kind == "prefill":
+        tokens = sh.global_batch * sh.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * sh.global_batch  # decode: one token per seq
+
+
+def run_pair(arch: str, shape_name: str, mesh_kind: str, out_dir: str,
+             fl_aggregation: str = "fedsgd", variant_cfg=None,
+             tag: str = "") -> Dict:
+    cfg = variant_cfg or get_config(arch)
+    sh = INPUT_SHAPES[shape_name]
+    if sh.kind == "decode" and not cfg.supports_long_decode \
+            and shape_name == "long_500k":
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "SKIP",
+               "reason": "enc-dec speech model has no 500k-token "
+                         "autoregressive decode (DESIGN.md §4)"}
+        _dump(rec, out_dir, arch, shape_name, mesh_kind, tag)
+        return rec
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    t0 = time.time()
+    # batch axes for activation constraints: multi-pod serving shards the
+    # request batch over ("pod","data"); the multi-pod FL train step vmaps
+    # over the pod dim, so inner activations see "data" only (§Perf)
+    if mesh_kind == "multi" and sh.kind != "train":
+        axes = ("pod", "data")
+    elif mesh_kind == "multi":
+        # FL train step vmaps over the pod dim; sharding constraints inside
+        # vmap mis-place the batch spec -> disable (GSPMD handles the
+        # vmapped program well; verified no batch replication, §Perf)
+        axes = None
+    else:
+        axes = ("data",)
+    batch_total = 1
+    for a in (axes or ()):
+        batch_total *= mesh.shape.get(a, 1)
+    try:
+        ctx = activation_sharding(axes, mesh.shape.get("model", 0),
+                                  batch_total) if axes else _nullctx()
+        with mesh, ctx:
+            lowered, meta = build_lowered(arch, shape_name, mesh,
+                                          fl_aggregation=fl_aggregation,
+                                          variant_cfg=variant_cfg)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo_text = compiled.as_text()
+        chips = mesh_chips(mesh)
+        from repro.launch.hlo_cost import analyze as hlo_analyze
+        corrected = hlo_analyze(hlo_text)
+        flops = float(corrected["flops"])  # trip-count-corrected (hlo_cost)
+        bytes_acc = float(corrected["bytes"])
+        coll = {k: int(v) for k, v in corrected["collectives"].items()}
+        raw_flops = float(cost.get("flops", 0.0))
+        raw_bytes = float(cost.get("bytes accessed", 0.0))
+        coll_total = float(sum(coll.values()))
+        mf = model_flops(cfg, shape_name)
+        # corrected hlo_cost numbers come from the post-GSPMD *per-device*
+        # program; global = per-device x chips.  Roofline terms are
+        # per-chip time = per-device work / per-chip peak.
+        global_flops = flops * chips
+        rec = {
+            "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+            "status": "OK", **meta,
+            "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+            "hlo_flops_per_device": flops, "hlo_flops_global": global_flops,
+            "hlo_bytes_per_device": bytes_acc,
+            "xla_raw_flops": raw_flops, "xla_raw_bytes": raw_bytes,
+            "collective_bytes": coll, "collective_total": coll_total,
+            "model_flops": mf,
+            "useful_flops_ratio": mf / global_flops if flops else None,
+            "memory": {
+                "argument_size_B": getattr(mem, "argument_size_in_bytes", 0),
+                "output_size_B": getattr(mem, "output_size_in_bytes", 0),
+                "temp_size_B": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_size_B": getattr(
+                    mem, "generated_code_size_in_bytes", 0),
+            },
+            "roofline": {
+                "compute_s": flops / PEAK_FLOPS_BF16,
+                "memory_s": bytes_acc / HBM_BW,
+                "collective_s": coll_total / ICI_BW,
+            },
+        }
+        r = rec["roofline"]
+        rec["bottleneck"] = max(r, key=r.get)
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "FAIL", "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+    _dump(rec, out_dir, arch, shape_name, mesh_kind, tag)
+    return rec
+
+
+import contextlib
+
+
+def _nullctx():
+    return contextlib.nullcontext()
+
+
+def _dump(rec: Dict, out_dir: str, arch: str, shape: str, mesh_kind: str,
+          tag: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    name = f"{arch}__{shape}__{mesh_kind}" + (f"__{tag}" if tag else "")
+    with open(os.path.join(out_dir, name + ".json"), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+
+
+# §Perf variants: named config transforms applied on top of the baseline
+VARIANTS = {
+    "": lambda c: c,
+    "online": lambda c: dataclasses.replace(c, attn_impl="online"),
+    "online_kv2048": lambda c: dataclasses.replace(
+        c, attn_impl="online", attn_kv_chunk=2048),
+    "online_kv512": lambda c: dataclasses.replace(
+        c, attn_impl="online", attn_kv_chunk=512),
+    "moebf16": lambda c: dataclasses.replace(
+        c, moe_dispatch_dtype="bfloat16"),
+    "online_moebf16": lambda c: dataclasses.replace(
+        c, attn_impl="online", moe_dispatch_dtype="bfloat16"),
+    "online_moebf16_g256": lambda c: dataclasses.replace(
+        c, attn_impl="online", moe_dispatch_dtype="bfloat16",
+        moe_group_size=256),
+    "moescatter": lambda c: dataclasses.replace(
+        c, moe_dispatch_impl="scatter"),
+    "online_moescatter": lambda c: dataclasses.replace(
+        c, attn_impl="online", moe_dispatch_impl="scatter"),
+    "seqchunk4096": lambda c: dataclasses.replace(c, attn_chunk=4096),
+    "unroll": lambda c: dataclasses.replace(c, scan_layers=False),
+    "unroll_megatron": lambda c: dataclasses.replace(
+        c, scan_layers=False, sharding="megatron"),
+    "attn_norep": lambda c: c,  # grouped-GQA decode (now default; tag only)
+    "chunk1024": lambda c: dataclasses.replace(c, attn_chunk=1024),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--fl-aggregation", default="fedsgd")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--variant", default="", choices=list(VARIANTS))
+    args = ap.parse_args()
+
+    # explicit --arch/--shape take precedence over --all
+    archs = args.arch.split(",") if args.arch not in (None, "all") \
+        else list(ARCHS)
+    shapes = args.shape.split(",") if args.shape not in (None, "all") \
+        else list(INPUT_SHAPES)
+    meshes = args.mesh.split(",")
+
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                t0 = time.time()
+                vcfg = (VARIANTS[args.variant](get_config(arch))
+                        if args.variant else None)
+                rec = run_pair(arch, shape, mk, args.out,
+                               fl_aggregation=args.fl_aggregation,
+                               variant_cfg=vcfg,
+                               tag=args.tag or args.variant)
+                status = rec["status"]
+                extra = rec.get("bottleneck", rec.get("reason",
+                                rec.get("error", "")))
+                print(f"[{status}] {arch} x {shape} x {mk} "
+                      f"({time.time()-t0:.0f}s) {str(extra)[:120]}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,315 @@
+"""Corrected HLO cost analysis.
+
+XLA's built-in ``cost_analysis()`` counts a ``while`` body ONCE, so any
+scan-over-layers program (ours: every assigned arch) under-reports FLOPs and
+bytes by ~n_layers x.  Post-optimization HLO carries
+``backend_config={"known_trip_count":{"n":...}}`` on every counted loop, so we
+re-derive totals by walking the computation graph:
+
+  flops_total(comp)  = dot-FLOPs in comp (recursing into fusions)
+                       + Σ while-calls trip_n * flops_total(body)
+                       + Σ call/conditional flops_total(callee)
+  bytes_total(comp)  = Σ top-level op boundary bytes (operands + results;
+                       fusions = one op — XLA's HBM-traffic fusion model)
+                       + Σ while trip_n * bytes_total(body)
+
+FLOPs counted: dot (2*prod(result)*prod(contracted)) and convolution
+(2*prod(result)*prod(kernel_spatial)*C_in); elementwise flops are ignored
+(<~5% for transformer steps — documented in EXPERIMENTS.md §Roofline).
+Collective bytes are summed separately in dryrun.collective_bytes().
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16,
+                "s4": 1, "u4": 1, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\([^()]*\)|\S+)\s+([\w\-]+)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_ATTR = re.compile(
+    r"(?:body|calls|to_apply|branch_computations)=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_DIMS_RE = {
+    "lhs_c": re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}"),
+    "lhs_b": re.compile(r"lhs_batch_dims=\{([0-9,]*)\}"),
+}
+_WINDOW_RE = re.compile(r"window=\{size=([0-9x]+)")
+
+
+def _shape_elems_bytes(type_str: str) -> Tuple[int, int]:
+    """Total (elements, bytes) across all array shapes in a type string."""
+    elems = 0
+    nbytes = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+class Op:
+    __slots__ = ("name", "type_str", "opcode", "line")
+
+    def __init__(self, name, type_str, opcode, line):
+        self.name, self.type_str, self.opcode, self.line = \
+            name, type_str, opcode, line
+
+
+class Computation:
+    def __init__(self, name: str):
+        self.name = name
+        self.ops: List[Op] = []
+        self.symbols: Dict[str, str] = {}  # op name -> result type str
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m:
+            cur = Computation(m.group(1))
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        mo = _OP_RE.match(line)
+        if mo:
+            name, type_str, opcode = mo.groups()
+            cur.ops.append(Op(name, type_str, opcode, line))
+            cur.symbols[name] = type_str
+        else:
+            # parameters: "%p = f32[..] parameter(0)" matches _OP_RE; other
+            # lines (constants spanning lines etc.) are ignored
+            pass
+    return comps
+
+
+def _operand_types(op: Op, comp: Computation) -> List[str]:
+    # operands inside the (...) after opcode; resolve via symbol table
+    inner = op.line.split(op.opcode + "(", 1)[-1]
+    inner = inner.split(")", 1)[0]
+    out = []
+    for nm in _OPERAND_RE.findall(inner):
+        if nm in comp.symbols:
+            out.append(comp.symbols[nm])
+    # some dumps inline shapes directly in operands
+    if not out:
+        out = [inner]
+    return out
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    res_elems, _ = _shape_elems_bytes(op.type_str)
+    mc = _DIMS_RE["lhs_c"].search(op.line)
+    contracted = 1
+    opnds = _operand_types(op, comp)
+    if mc and opnds:
+        lhs_dims = []
+        sh = _SHAPE_RE.search(opnds[0])
+        if sh:
+            lhs_dims = [int(d) for d in sh.group(2).split(",") if d]
+        for di in mc.group(1).split(","):
+            if di and lhs_dims and int(di) < len(lhs_dims):
+                contracted *= lhs_dims[int(di)]
+    return 2.0 * res_elems * contracted
+
+
+def _conv_flops(op: Op, comp: Computation) -> float:
+    res_elems, _ = _shape_elems_bytes(op.type_str)
+    mw = _WINDOW_RE.search(op.line)
+    spatial = 1
+    if mw:
+        for d in mw.group(1).split("x"):
+            spatial *= int(d)
+    # * C_in: take from rhs (kernel) input-feature dim — approximate with
+    # kernel elements / spatial / C_out; fall back to spatial only
+    opnds = _operand_types(op, comp)
+    cin = 1
+    if len(opnds) >= 2:
+        k_elems, _ = _shape_elems_bytes(opnds[1])
+        res_sh = _SHAPE_RE.search(op.type_str)
+        cout = 1
+        if res_sh:
+            dims = [int(d) for d in res_sh.group(2).split(",") if d]
+            cout = dims[-1] if dims else 1
+        if spatial * cout:
+            cin = max(1, k_elems // (spatial * cout))
+    return 2.0 * res_elems * spatial * cin
+
+
+_SKIP_BYTES_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+                   "bitcast", "copy"}
+
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def analyze(text: str) -> Dict[str, float]:
+    comps = parse_hlo(text)
+    memo_f: Dict[str, float] = {}
+    memo_b: Dict[str, float] = {}
+    memo_c: Dict[str, Dict[str, float]] = {}
+
+    def callees(op: Op) -> List[str]:
+        out = []
+        for m in _CALL_ATTR.finditer(op.line):
+            for nm in m.group(1).split(","):
+                nm = nm.strip().lstrip("%")
+                if nm in comps:
+                    out.append(nm)
+        return out
+
+    def trip(op: Op) -> int:
+        m = _TRIP_RE.search(op.line)
+        return int(m.group(1)) if m else 1
+
+    def flops(cname: str) -> float:
+        if cname in memo_f:
+            return memo_f[cname]
+        memo_f[cname] = 0.0  # break cycles
+        total = 0.0
+        comp = comps[cname]
+        for op in comp.ops:
+            if op.opcode == "dot":
+                total += _dot_flops(op, comp)
+            elif op.opcode == "convolution":
+                total += _conv_flops(op, comp)
+            elif op.opcode == "while":
+                body = callees(op)
+                total += trip(op) * sum(flops(b) for b in body)
+            elif op.opcode in ("fusion", "call", "conditional", "map",
+                               "custom-call", "reduce", "reduce-window",
+                               "scatter", "select-and-scatter", "sort",
+                               "all-reduce", "reduce-scatter"):
+                total += sum(flops(b) for b in callees(op))
+        memo_f[cname] = total
+        return total
+
+    def nbytes(cname: str) -> float:
+        if cname in memo_b:
+            return memo_b[cname]
+        memo_b[cname] = 0.0
+        total = 0.0
+        comp = comps[cname]
+        for op in comp.ops:
+            if op.opcode in _SKIP_BYTES_OPS:
+                continue
+            if op.opcode == "while":
+                total += trip(op) * sum(nbytes(b) for b in callees(op))
+                continue
+            if op.opcode in ("call", "conditional"):
+                total += sum(nbytes(b) for b in callees(op))
+                continue
+            _, rb = _shape_elems_bytes(op.type_str)
+            ob = 0
+            for t in _operand_types(op, comp):
+                _, b = _shape_elems_bytes(t)
+                ob += b
+            total += rb + ob
+        memo_b[cname] = total
+        return total
+
+    def coll(cname: str) -> Dict[str, float]:
+        if cname in memo_c:
+            return memo_c[cname]
+        memo_c[cname] = {}
+        total: Dict[str, float] = {}
+
+        def acc(d: Dict[str, float], mult: float = 1.0):
+            for k, v in d.items():
+                total[k] = total.get(k, 0.0) + v * mult
+
+        comp = comps[cname]
+        for op in comp.ops:
+            base = op.opcode.replace("-start", "")
+            if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                _, rb = _shape_elems_bytes(op.type_str)
+                total[base] = total.get(base, 0.0) + rb
+            elif op.opcode == "while":
+                t = trip(op)
+                for b in callees(op):
+                    acc(coll(b), t)
+            elif op.opcode in ("fusion", "call", "conditional"):
+                for b in callees(op):
+                    acc(coll(b))
+        memo_c[cname] = total
+        return total
+
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = _COMP_HDR.match(line)
+            if m:
+                entry = m.group(1)
+            break
+    if entry is None:  # fall back: computation named main-ish
+        cand = [c for c in comps if "main" in c]
+        entry = cand[0] if cand else next(iter(comps))
+    return {"flops": flops(entry), "bytes": nbytes(entry),
+            "collectives": coll(entry)}
+
+
+def profile_bytes(text: str, top: int = 25):
+    """Per-op byte attribution with loop-trip multipliers — the §Perf
+    'profiler': returns [(bytes, trips, opcode, result_type, metadata_hint)]
+    sorted desc.  Use to find what dominates the memory roofline term."""
+    comps = parse_hlo(text)
+    rows = []
+
+    def callees(op):
+        out = []
+        for m in _CALL_ATTR.finditer(op.line):
+            for nm in m.group(1).split(","):
+                nm = nm.strip().lstrip("%")
+                if nm in comps:
+                    out.append(nm)
+        return out
+
+    def walk(cname: str, mult: float):
+        comp = comps[cname]
+        for op in comp.ops:
+            if op.opcode == "while":
+                m = _TRIP_RE.search(op.line)
+                t = int(m.group(1)) if m else 1
+                for b in callees(op):
+                    walk(b, mult * t)
+                continue
+            if op.opcode in ("call", "conditional"):
+                for b in callees(op):
+                    walk(b, mult)
+                continue
+            if op.opcode in _SKIP_BYTES_OPS:
+                continue
+            _, rb = _shape_elems_bytes(op.type_str)
+            ob = 0
+            for ty in _operand_types(op, comp):
+                _, bb = _shape_elems_bytes(ty)
+                ob += bb
+            meta = ""
+            if "op_name=" in op.line:
+                meta = op.line.split('op_name="', 1)[-1].split('"')[0][-90:]
+            rows.append(((rb + ob) * mult, mult, op.opcode,
+                         op.type_str[:48], meta))
+
+    entry = [c for c in comps if "main" in c]
+    walk(entry[0] if entry else next(iter(comps)), 1.0)
+    rows.sort(key=lambda r: -r[0])
+    return rows[:top]

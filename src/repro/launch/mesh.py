@@ -1,0 +1,36 @@
+"""Production mesh construction (TPU v5e pods; DESIGN.md §5).
+
+Single pod: 16 x 16 = 256 chips, axes ("data", "model").
+Multi-pod:  2 x 16 x 16 = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis carries the paper's federated aggregation collective.
+
+Functions only (no module-level jax device state) so imports stay pure; the
+dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 before any
+jax import (see dryrun.py).
+"""
+from __future__ import annotations
+
+import jax
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_devices: int = 1):
+    """CPU-sized mesh for tests: (1, n) over ("data", "model")."""
+    return jax.make_mesh((1, n_devices), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

@@ -1,0 +1,89 @@
+"""Serving launcher: batched prefill + autoregressive decode.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch xlstm-125m --reduced \
+        --batch 8 --prompt-len 32 --max-new 64
+
+Demonstrates the full serving path (prefill fills the KV/state cache, decode
+steps against it) with greedy or temperature sampling.  Full configs are
+exercised shape-only via dryrun.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, get_config, reduced_config
+from repro.models import build_model
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-125m", choices=list(ARCHS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--max-new", type=int, default=64)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced_config(cfg)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = args.batch, args.prompt_len
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)}
+    prefix = 0
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = jnp.asarray(
+            rng.normal(0, 0.1, (B, cfg.n_prefix_tokens, cfg.d_model)),
+            jnp.float32)
+        prefix = cfg.n_prefix_tokens
+    if cfg.family == "audio":
+        batch["enc_frames"] = jnp.asarray(
+            rng.normal(0, 0.1, (B, S, cfg.d_model)), jnp.float32)
+
+    capacity = S + prefix + args.max_new
+    t0 = time.time()
+    if cfg.family == "ssm":
+        prefill = jax.jit(model.prefill)
+        logits, cache = prefill(params, batch)
+    else:
+        prefill = jax.jit(lambda p, b: model.prefill(p, b,
+                                                     capacity=capacity))
+        logits, cache = prefill(params, batch)
+    t_prefill = time.time() - t0
+
+    decode = jax.jit(model.decode_step)
+    key = jax.random.PRNGKey(1)
+    outs = []
+    t0 = time.time()
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    for i in range(args.max_new):
+        outs.append(np.array(tok))
+        logits, cache = decode(params, cache, tok,
+                               jnp.int32(S + prefix + i))
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(
+                sub, logits / args.temperature, axis=-1).astype(jnp.int32)
+        else:
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    jax.block_until_ready(logits)
+    t_decode = time.time() - t0
+    gen = np.stack(outs, axis=1)
+    print(f"arch={cfg.name} prefill({B}x{S}) {t_prefill*1e3:.0f} ms; "
+          f"decode {args.max_new} steps {t_decode*1e3:.0f} ms "
+          f"({t_decode/args.max_new*1e3:.1f} ms/tok/batch)")
+    print("sample token ids[0]:", gen[0][:16].tolist())
+    assert np.all(gen >= 0) and np.all(gen < cfg.padded_vocab)
+
+
+if __name__ == "__main__":
+    main()

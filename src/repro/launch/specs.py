@@ -1,0 +1,134 @@
+"""ShapeDtypeStruct input builders for every (arch x input-shape) pair —
+shardable stand-ins, no device allocation (dry-run contract, DESIGN.md §6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES
+from repro.models import build_model
+from repro.optim import make_optimizer
+from repro.sharding import batch_spec, cache_specs, param_specs
+
+Pytree = Any
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _ns(mesh, *spec):
+    return NamedSharding(mesh, P(*spec))
+
+
+def param_structs(model) -> Pytree:
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+
+
+def stack_structs(tree: Pytree, n: int) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct((n,) + l.shape, l.dtype), tree)
+
+
+def prepend_pod(spec_tree: Pytree, mesh) -> Pytree:
+    return jax.tree_util.tree_map(
+        lambda ns: NamedSharding(mesh, P("pod", *ns.spec)), spec_tree)
+
+
+def train_batch_structs(cfg, shape_name: str, mesh) -> Dict[str, Any]:
+    """Token/embedding stand-ins for a training step."""
+    sh = INPUT_SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    bs = NamedSharding(mesh, batch_spec(mesh))
+    batch = {}
+    if cfg.family == "vlm":
+        S_text = S - cfg.n_prefix_tokens
+        batch["tokens"] = _sds((B, S_text), jnp.int32, bs)
+        batch["prefix_embeds"] = _sds(
+            (B, cfg.n_prefix_tokens, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype), bs)
+    elif cfg.family == "audio":
+        batch["tokens"] = _sds((B, S), jnp.int32, bs)
+        batch["enc_frames"] = _sds((B, S, cfg.d_model),
+                                   jnp.dtype(cfg.compute_dtype), bs)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32, bs)
+    return batch
+
+
+def prompt_batch_structs(cfg, B: int, S: int, mesh) -> Dict[str, Any]:
+    """Prefill-shape prompt (full prompt of length S)."""
+    bs = NamedSharding(mesh, batch_spec(mesh))
+    batch = {}
+    if cfg.family == "vlm":
+        S_text = max(1, S - cfg.n_prefix_tokens)
+        batch["tokens"] = _sds((B, S_text), jnp.int32, bs)
+        batch["prefix_embeds"] = _sds(
+            (B, cfg.n_prefix_tokens, cfg.d_model),
+            jnp.dtype(cfg.compute_dtype), bs)
+    elif cfg.family == "audio":
+        batch["tokens"] = _sds((B, S), jnp.int32, bs)
+        batch["enc_frames"] = _sds((B, S, cfg.d_model),
+                                   jnp.dtype(cfg.compute_dtype), bs)
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32, bs)
+    return batch
+
+
+def decode_window(cfg, shape_name: str) -> Optional[int]:
+    """Ring-buffer window for long-context decode of softmax-attention
+    decoders (DESIGN.md §4); None = linear cache."""
+    sh = INPUT_SHAPES[shape_name]
+    if shape_name == "long_500k" and cfg.family in ("dense", "moe", "vlm"):
+        return cfg.sliding_window or cfg.long_context_window
+    return cfg.sliding_window  # native window (starcoder2) applies always
+
+
+def decode_cache_structs(cfg, model, shape_name: str, mesh):
+    """Cache ShapeDtypeStructs via eval_shape of prefill (no allocation).
+
+    Returns (cache_structs_with_sharding, pos_value, capacity).
+    """
+    sh = INPUT_SHAPES[shape_name]
+    B, S = sh.global_batch, sh.seq_len
+    win = decode_window(cfg, shape_name)
+    if cfg.family in ("dense", "moe", "vlm", "audio", "hybrid"):
+        capacity = min(S, win) if win else S
+    else:
+        capacity = 0  # state caches are O(1)
+
+    # minimal prompt; audio needs encoder length = S (cross-attn memory)
+    if cfg.family == "audio":
+        prompt = prompt_batch_structs(cfg, B, S, mesh)
+        prompt["tokens"] = _sds((B, 1), jnp.int32,
+                                NamedSharding(mesh, batch_spec(mesh)))
+    elif cfg.family == "vlm":
+        prompt = {
+            "tokens": _sds((B, 1), jnp.int32,
+                           NamedSharding(mesh, batch_spec(mesh))),
+            "prefix_embeds": _sds((B, cfg.n_prefix_tokens, cfg.d_model),
+                                  jnp.dtype(cfg.compute_dtype),
+                                  NamedSharding(mesh, batch_spec(mesh))),
+        }
+    else:
+        prompt = {"tokens": _sds((B, 1), jnp.int32,
+                                 NamedSharding(mesh, batch_spec(mesh)))}
+
+    params = param_structs(model)
+    if cfg.family == "ssm":
+        _, cache = jax.eval_shape(model.prefill, params, prompt)
+    else:
+        _, cache = jax.eval_shape(
+            functools.partial(model.prefill, capacity=max(capacity, 2)),
+            params, prompt)
+    cspecs = cache_specs(cache, mesh, B)
+    cache = jax.tree_util.tree_map(
+        lambda l, s: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=s),
+        cache, cspecs)
+    pos = S - 1  # ring caches index pos % capacity; linear caches clamp
+    return cache, pos, capacity

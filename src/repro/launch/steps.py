@@ -1,0 +1,117 @@
+"""Step builders: train / prefill / decode, with the paper's FL aggregation
+as a first-class cross-pod feature.
+
+``make_train_step``   — standard pjit step: grads psum'd over data/model by
+    XLA (this IS synchronous FedSGD, Eq. 4–5, with K = all shards).
+``make_fl_train_step``— multi-pod FL step: params carry a leading clients
+    axis sharded over "pod"; each pod takes ``inner_steps`` local optimizer
+    steps (vmapped), then the round closes per the paper's target:
+      fedsgd: staleness-weighted gradient mean across pods -> one server step
+      fedavg: weight-weighted parameter mean across pods (Eq. 6)
+    The cross-pod mean lowers to an all-reduce over pod ICI links — the
+    collective measured in §Roofline.
+``make_prefill_step`` / ``make_decode_step`` — serving paths.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import make_optimizer
+
+Pytree = Any
+
+
+def _tmean_over_leading(tree: Pytree, weights: jnp.ndarray) -> Pytree:
+    """Weighted mean over leading (pod-sharded) dim; result broadcast back."""
+    wsum = jnp.maximum(jnp.sum(weights), 1e-12)
+
+    def red(x):
+        w = weights.reshape((-1,) + (1,) * (x.ndim - 1)).astype(jnp.float32)
+        m = jnp.sum(x.astype(jnp.float32) * w, axis=0, keepdims=True) / wsum
+        return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+
+    return jax.tree_util.tree_map(red, tree)
+
+
+def make_train_step(model, cfg, lr: float = 1e-3) -> Callable:
+    opt = make_optimizer(cfg.optimizer, lr=lr)
+    vg = jax.value_and_grad(model.train_loss, has_aux=True)
+
+    def train_step(params, opt_state, batch, step):
+        (loss, metrics), grads = vg(params, batch)
+        params, opt_state = opt.update(params, grads, opt_state, step)
+        return params, opt_state, metrics
+
+    return train_step, opt
+
+
+def make_fl_train_step(model, cfg, *, aggregation: str = "fedsgd",
+                       lr: float = 1e-3, server_lr: float = 1.0,
+                       inner_steps: int = 1) -> Callable:
+    """FL across the "pod" axis.  params/opt_state leaves have a leading
+    n_pods dim (sharded P("pod", ...)); batch is the global batch.
+
+    weights: (n_pods,) participation/staleness weights — the semi-async
+    buffer mask (0 = straggler pod excluded this round, per DESIGN.md §5).
+    """
+    opt = make_optimizer(cfg.optimizer, lr=lr)
+    vg = jax.value_and_grad(model.train_loss, has_aux=True)
+
+    def local_round(params, opt_state, batch, step):
+        """One pod's local work: inner_steps over microbatch slices."""
+        def body(carry, mb):
+            p, s, k = carry
+            (loss, _), g = vg(p, mb)
+            if aggregation == "fedavg":  # local SGD steps (model target)
+                p, s = opt.update(p, g, s, k)
+            return (p, s, k + 1), (loss, g)
+
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape((inner_steps, x.shape[0] // inner_steps)
+                                + x.shape[1:]), batch)
+        (p, s, _), (losses, grads) = jax.lax.scan(
+            body, (params, opt_state, step), mbs)
+        gsum = jax.tree_util.tree_map(lambda g: jnp.sum(g, axis=0), grads)
+        return p, s, gsum, jnp.mean(losses)
+
+    def fl_train_step(params_stacked, opt_stacked, batch, step, weights):
+        n_pods = weights.shape[0]
+        batch_p = jax.tree_util.tree_map(
+            lambda x: x.reshape((n_pods, x.shape[0] // n_pods) + x.shape[1:]),
+            batch)
+        p_loc, s_loc, gsum, losses = jax.vmap(
+            local_round, in_axes=(0, 0, 0, None))(
+                params_stacked, opt_stacked, batch_p, step)
+
+        if aggregation == "fedavg":
+            # Eq. (6): parameter average across pods (weights ~ |D_i| or
+            # staleness mask), broadcast back to every pod
+            new_params = _tmean_over_leading(p_loc, weights)
+            new_opt = s_loc
+        else:
+            # Eq. (4)-(5): gradient mean across pods, one server step,
+            # identical on every pod
+            gmean = _tmean_over_leading(gsum, weights)
+            upd = jax.vmap(lambda p, g, s: opt.update(p, g, s, step))
+            new_params, new_opt = upd(params_stacked, gmean, opt_stacked)
+        return new_params, new_opt, {"loss": jnp.mean(losses)}
+
+    return fl_train_step, opt
+
+
+def make_prefill_step(model, window: Optional[int] = None) -> Callable:
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill_step
+
+
+def make_decode_step(model, window: Optional[int] = None) -> Callable:
+    def decode_step(params, cache, tokens, pos):
+        return model.decode_step(params, cache, tokens, pos, window=window)
+
+    return decode_step

@@ -1,0 +1,376 @@
+"""Core transformer building blocks (pure-functional JAX).
+
+All modules are (init, apply) pairs over plain dict pytrees so that layer
+stacks can be scanned (params stacked on a leading layer axis) and sharded by
+path-based rules in :mod:`repro.sharding.rules`.
+
+Attention supports:
+  * GQA (n_kv_heads <= n_heads) with RoPE and optional per-head qk RMS-norm,
+  * causal + sliding-window masks,
+  * three execution shapes: full training/prefill (naive or q-chunked
+    online-softmax), and single-token decode against a KV cache
+    (linear or ring-buffer/window layout).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sharding.ctx import constrain_batch, constrain_scores
+
+# ---------------------------------------------------------------------------
+# initialisation helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim)) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim)) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype=dtype)}
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    """Variance in f32; the normalize multiply stays in x.dtype so backward
+    residual-stream cotangents keep the compute dtype (§Perf: the f32
+    upcast made every (B,S,D) backward intermediate 2x wider)."""
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * params["scale"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, cfg, dtype) -> dict:
+    hd = cfg.hd
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(kq, cfg.d_model, cfg.n_heads * hd, dtype),
+        "wk": dense_init(kk, cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wv": dense_init(kv, cfg.d_model, cfg.n_kv_heads * hd, dtype),
+        "wo": dense_init(ko, cfg.n_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _cast(w, x):
+    return w.astype(x.dtype)
+
+
+def _qkv(params, cfg, x, positions, rope: bool = True):
+    B, S, _ = x.shape
+    hd = cfg.hd
+    q = constrain_batch(
+        (x @ _cast(params["wq"], x)).reshape(B, S, cfg.n_heads, hd))
+    k = constrain_batch(
+        (x @ _cast(params["wk"], x)).reshape(B, S, cfg.n_kv_heads, hd))
+    v = constrain_batch(
+        (x @ _cast(params["wv"], x)).reshape(B, S, cfg.n_kv_heads, hd))
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+    if rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    if n_rep == 1:
+        return x
+    B, S, H, hd = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (B, S, H, n_rep, hd)).reshape(
+        B, S, H * n_rep, hd)
+
+
+def _mask(q_pos, k_pos, window: Optional[int], causal: bool) -> jax.Array:
+    """Boolean (len_q, len_k) mask; True = attend."""
+    m = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if causal:
+        m &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        m &= q_pos[:, None] - k_pos[None, :] < window
+    return m
+
+
+def _sdpa(q, k, v, mask) -> jax.Array:
+    """q: (B,Sq,Hq,hd) k,v: (B,Sk,Hq,hd), mask (Sq,Sk) -> (B,Sq,Hq,hd)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32)
+    scores = constrain_scores(scores, scores.shape[1])
+    scores = scores / np.sqrt(hd)
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+
+
+def full_attention(params, cfg, x, positions, *, causal=True,
+                   window: Optional[int] = None,
+                   memory: Optional[jax.Array] = None,
+                   rope: bool = True, return_kv: bool = False):
+    """Training / prefill attention over the full sequence.
+
+    ``memory`` (B, Sm, D), if given, turns this into cross-attention
+    (keys/values from memory; no mask, no rope).
+    ``return_kv`` additionally returns the (roped, un-repeated) K and V so a
+    prefill pass can populate the serving cache in the same sweep.
+    """
+    B, S, _ = x.shape
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    if memory is not None:
+        hd = cfg.hd
+        q = (x @ _cast(params["wq"], x)).reshape(B, S, cfg.n_heads, hd)
+        k = (memory @ _cast(params["wk"], x)).reshape(
+            B, memory.shape[1], cfg.n_kv_heads, hd)
+        v = (memory @ _cast(params["wv"], x)).reshape(
+            B, memory.shape[1], cfg.n_kv_heads, hd)
+        mask = jnp.ones((S, memory.shape[1]), dtype=bool)
+        k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+        out = _sdpa(q, k, v, mask)
+        return out.reshape(B, S, -1) @ _cast(params["wo"], x)
+
+    q, k, v = _qkv(params, cfg, x, positions, rope=rope)
+    kv = (k, v)
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    if (getattr(cfg, "attn_impl", "chunked") == "online"
+            and cfg.attn_chunk and S > cfg.attn_chunk
+            and S % cfg.attn_chunk == 0
+            and S % min(cfg.attn_kv_chunk, S) == 0):
+        out = _online_attention(q, k, v, positions, window, cfg.attn_chunk,
+                                min(cfg.attn_kv_chunk, S))
+    elif cfg.attn_chunk and S > cfg.attn_chunk:
+        out = _chunked_attention(q, k, v, positions, window, cfg.attn_chunk)
+    else:
+        mask = _mask(positions[0] if positions.ndim > 1 else positions,
+                     positions[0] if positions.ndim > 1 else positions,
+                     window, causal=causal)
+        out = _sdpa(q, k, v, mask)
+    out = out.reshape(B, S, -1) @ _cast(params["wo"], x)
+    if return_kv:
+        return out, kv
+    return out
+
+
+def _online_attention(q, k, v, positions, window, q_chunk, kv_chunk):
+    """Flash-style online-softmax attention in pure XLA: outer scan over
+    query chunks, inner scan over KV chunks carrying the running
+    (max, denom, accumulator).  Never materializes an (S, S) slab — the
+    largest live tensor is (B, H, q_chunk, kv_chunk).  This is the XLA
+    twin of kernels/flash_attention.py (the memory-term lever, §Perf)."""
+    B, S, H, hd = q.shape
+    pos = positions[0] if positions.ndim > 1 else positions  # (S,)
+    nq = S // q_chunk
+    nk = S // kv_chunk
+    qc = q.reshape(B, nq, q_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    kc = k.reshape(B, nk, kv_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, kv_chunk, H, hd).transpose(1, 0, 3, 2, 4)
+    scale = 1.0 / np.sqrt(hd)
+
+    def outer(_, qx):
+        q_i, qpos = qx  # (B,H,cq,hd), (cq,)
+
+        def inner(carry, kx):
+            m, l, acc = carry
+            k_j, v_j, kpos = kx  # (B,H,ck,hd)
+            s = constrain_scores(
+                jnp.einsum("bhqd,bhkd->bhqk", q_i, k_j,
+                           preferred_element_type=jnp.float32),
+                q_i.shape[1]) * scale
+            mask = qpos[:, None] >= kpos[None, :]
+            if window is not None:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1)
+            acc_new = (acc * alpha[..., None]
+                       + jnp.einsum("bhqk,bhkd->bhqd",
+                                    p.astype(v_j.dtype), v_j)
+                       .astype(jnp.float32))
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, q_chunk), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        a0 = jnp.zeros((B, H, q_chunk, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            inner, (m0, l0, a0),
+            (kc, vc, pos.reshape(nk, kv_chunk)))
+        out = acc / jnp.maximum(l, 1e-20)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, out = jax.lax.scan(outer, None, (qc, pos.reshape(nq, q_chunk)))
+    # (nq, B, H, cq, hd) -> (B, S, H, hd)
+    return out.transpose(1, 0, 3, 2, 4).reshape(B, S, H, hd)
+
+
+def _chunked_attention(q, k, v, positions, window, chunk):
+    """q-chunked attention: scan over query chunks; each chunk attends to the
+    full (or windowed) key range.  Peak score tensor is (B,H,chunk,S) instead
+    of (B,H,S,S) — the memory-term lever for prefill shapes."""
+    B, S, H, hd = q.shape
+    pos = positions[0] if positions.ndim > 1 else positions  # (S,)
+    n_chunks = S // chunk
+    qc = q.reshape(B, n_chunks, chunk, H, hd).transpose(1, 0, 2, 3, 4)
+    pc = pos.reshape(n_chunks, chunk)
+
+    def body(_, xs):
+        q_i, p_i = xs
+        mask = _mask(p_i, pos, window, causal=True)
+        return None, _sdpa(q_i, k, v, mask)
+
+    _, out = jax.lax.scan(body, None, (qc, pc))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, S, H, hd)
+
+
+def decode_attention(params, cfg, x, cache_k, cache_v, pos, *,
+                     window: Optional[int] = None):
+    """Single-token decode. x: (B,1,D). cache_[kv]: (B, C, Hkv, hd) where C is
+    seq capacity (full seq or ring-buffer window).  ``pos`` scalar int32 is the
+    absolute position of the new token.  Returns (out, new_k, new_v).
+
+    With a ring buffer (window is not None, C == window capacity), the cache
+    index is pos % C and the mask accounts for not-yet-written slots.
+    """
+    B = x.shape[0]
+    hd = cfg.hd
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    positions = jnp.full((1,), pos, dtype=jnp.int32)
+    q, k_new, v_new = _qkv(params, cfg, x, positions)
+    C = cache_k.shape[1]
+    slot = jnp.minimum(pos, C - 1) if window is None else pos % C
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, slot, axis=1)
+    # validity: slot i holds absolute position (for ring: reconstructed)
+    idx = jnp.arange(C)
+    if window is None:
+        valid = idx <= pos
+    else:
+        # ring buffer: slot i holds position p where p % C == i and
+        # pos - C < p <= pos
+        p_at = pos - ((pos - idx) % C)
+        valid = (p_at >= 0) & (p_at > pos - window)
+    # grouped-GQA einsum: never materialize the repeated KV (a 16x cache
+    # copy + reshard when the cache is model-axis sharded — §Perf iter. 3)
+    n_kv = cfg.n_kv_heads
+    qg = q.reshape(B, 1, n_kv, n_rep, hd)
+    scores = jnp.einsum("bqgrd,bcgd->bgrqc", qg, cache_k,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqc,bcgd->bqgrd", probs.astype(cache_v.dtype),
+                     cache_v)
+    out = out.reshape(B, 1, -1) @ _cast(params["wo"], x)
+    return out, cache_k, cache_v
+
+
+def cross_attention_decode(params, cfg, x, mem_k, mem_v):
+    """Decode-time cross-attention against precomputed encoder K/V
+    (B, Sm, Hkv, hd) cached at prefill."""
+    B = x.shape[0]
+    hd = cfg.hd
+    n_rep = cfg.n_heads // cfg.n_kv_heads
+    q = (x @ _cast(params["wq"], x)).reshape(B, 1, cfg.n_heads, hd)
+    k = _repeat_kv(mem_k, n_rep)
+    v = _repeat_kv(mem_v, n_rep)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out.reshape(B, 1, -1).astype(x.dtype) @ _cast(params["wo"], x)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def mlp_init(key, cfg, dtype, d_ff: Optional[int] = None) -> dict:
+    d_ff = d_ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {
+            "w1": dense_init(k1, cfg.d_model, d_ff, dtype),
+            "w3": dense_init(k3, cfg.d_model, d_ff, dtype),
+            "w2": dense_init(k2, d_ff, cfg.d_model, dtype),
+        }
+    return {
+        "w1": dense_init(k1, cfg.d_model, d_ff, dtype),
+        "w2": dense_init(k2, d_ff, cfg.d_model, dtype),
+    }
+
+
+def mlp(params: dict, cfg, x: jax.Array) -> jax.Array:
+    if cfg.act == "swiglu":
+        return (jax.nn.silu(x @ _cast(params["w1"], x))
+                * (x @ _cast(params["w3"], x))) @ _cast(params["w2"], x)
+    return jax.nn.gelu(x @ _cast(params["w1"], x)) @ _cast(params["w2"], x)
+
+
+# ---------------------------------------------------------------------------
+# LM head / embedding
+# ---------------------------------------------------------------------------
+
+
+def lm_head(embed: jax.Array, head: Optional[jax.Array], x: jax.Array,
+            tie: bool) -> jax.Array:
+    w = embed.T if tie else head
+    return jnp.einsum("bsd,dv->bsv", x, w.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array,
+                  mask: Optional[jax.Array] = None) -> jax.Array:
+    """logits (B,S,V) fp32, targets (B,S) int32; mean NLL over valid tokens."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    nll = logz - jnp.take_along_axis(
+        logits, targets[..., None], axis=-1)[..., 0]
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,62 @@
+"""The paper's LSTM model (§4.3.4): embedding + LSTM + fully-connected.
+
+Two task heads, matching §4.1:
+  * ``char``  — next-character prediction (Shakespeare, 80-symbol vocab),
+    loss over every position;
+  * ``sentiment`` — sequence classification (Sentiment140, 2 classes),
+    head on the final hidden state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def lstm_init(key, *, vocab=80, embed=64, hidden=128, n_out=80):
+    ks = jax.random.split(key, 4)
+    return {
+        "embed": jax.random.normal(ks[0], (vocab, embed)) * 0.1,
+        "wx": jax.random.normal(ks[1], (embed, 4 * hidden)) / np.sqrt(embed),
+        "wh": jax.random.normal(ks[2], (hidden, 4 * hidden)) / np.sqrt(hidden),
+        "b": jnp.zeros((4 * hidden,)),
+        "fc": jax.random.normal(ks[3], (hidden, n_out)) / np.sqrt(hidden),
+        "fcb": jnp.zeros((n_out,)),
+    }, {}
+
+
+def _cell(params, carry, x_t):
+    h, c = carry
+    gates = x_t @ params["wx"] + h @ params["wh"] + params["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+def lstm_apply(params, state, tokens, train: bool, task: str = "char"):
+    """tokens: (B, S) int32 -> logits.
+
+    char: (B, S, n_out) per-position next-token logits.
+    sentiment: (B, n_out) classification logits from the last hidden state.
+    """
+    del train
+    B, S = tokens.shape
+    x = params["embed"][tokens]  # (B,S,E)
+    H = params["wh"].shape[0]
+    carry = (jnp.zeros((B, H)), jnp.zeros((B, H)))
+    carry, hs = jax.lax.scan(lambda c, xt: _cell(params, c, xt),
+                             carry, x.transpose(1, 0, 2))
+    hs = hs.transpose(1, 0, 2)  # (B,S,H)
+    if task == "char":
+        return hs @ params["fc"] + params["fcb"], state
+    return carry[0] @ params["fc"] + params["fcb"], state
+
+
+def build_lstm(key, task: str = "char", **kw):
+    import functools
+    if task == "sentiment":
+        kw.setdefault("n_out", 2)
+        kw.setdefault("vocab", 1000)
+    p, s = lstm_init(key, **kw)
+    return p, s, functools.partial(lstm_apply, task=task)

@@ -1,0 +1,166 @@
+"""Mixture-of-Experts layer — GShard/GLaM-style dense dispatch.
+
+TPU-native formulation: token groups, top-k gating with per-expert capacity,
+dispatch/combine einsums (pure MXU matmuls; no ragged scatter).  The expert
+dimension shards over the "model" mesh axis (expert parallelism); groups shard
+over batch/data.
+
+Aux load-balance loss (Switch-style) is returned so the train step can add it.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.sharding.ctx import constrain_batch
+
+
+def moe_init(key, cfg, dtype) -> dict:
+    kg, k1, k2, k3, ks = jax.random.split(key, 5)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    p = {
+        "router": layers.dense_init(kg, D, E, jnp.float32),
+        "w1": (jax.random.normal(k1, (E, D, F)) / jnp.sqrt(D)).astype(dtype),
+        "w3": (jax.random.normal(k3, (E, D, F)) / jnp.sqrt(D)).astype(dtype),
+        "w2": (jax.random.normal(k2, (E, F, D)) / jnp.sqrt(F)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.mlp_init(
+            ks, cfg, dtype, d_ff=cfg.d_ff * cfg.n_shared_experts)
+    return p
+
+
+def _capacity(cfg, group_size: int) -> int:
+    c = int(cfg.capacity_factor * group_size * cfg.top_k / cfg.n_experts)
+    return max(4, c)
+
+
+def moe_apply_scatter(params: dict, cfg, x: jax.Array):
+    """Scatter/gather dispatch (§Perf): replaces the dense dispatch/combine
+    einsums — whose FLOPs (2*T*E*C*D) exceed the *expert* compute by ~50x for
+    kimi-k2 — with segment-sum routing (FLOP-free data movement).
+
+    Same capacity semantics as :func:`moe_apply` (per-expert queue of C
+    slots, k-priority ordering); outputs match the einsum path exactly for
+    kept tokens.
+    """
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    gs = min(cfg.moe_group_size, B * S)
+    T = B * S
+    assert T % gs == 0
+    G = T // gs
+    cdt = jnp.dtype(cfg.compute_dtype)
+    xt = x.reshape(G, gs, D)
+
+    logits = (xt.astype(jnp.float32) @ params["router"])  # (G, gs, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (G, gs, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    C = _capacity(cfg, gs)
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)
+    oh_k_major = onehot.transpose(0, 2, 1, 3).reshape(G, K * gs, E)
+    pos_in_e = jnp.cumsum(oh_k_major, axis=1) - oh_k_major
+    pos = jnp.einsum("gke,gke->gk", pos_in_e, oh_k_major)
+    keep = pos < C
+    pos = pos.reshape(G, K, gs).transpose(0, 2, 1).astype(jnp.int32)
+    keep = keep.reshape(G, K, gs).transpose(0, 2, 1)
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+
+    # flat slot id per (g, s, k): g*E*C + e*C + pos  (dropped -> overflow bin)
+    slot = gate_idx * C + pos  # (G, gs, K) within group
+    gidx = jnp.arange(G, dtype=jnp.int32)[:, None, None]
+    flat_slot = jnp.where(keep, gidx * E * C + slot, G * E * C)
+    flat_slot = flat_slot.reshape(-1)
+
+    xk = jnp.broadcast_to(xt[:, :, None, :].astype(cdt),
+                          (G, gs, K, D)).reshape(-1, D)
+    expert_in = jax.ops.segment_sum(
+        xk, flat_slot, num_segments=G * E * C + 1)[:-1]
+    expert_in = expert_in.reshape(G, E, C, D)
+
+    h1 = jnp.einsum("gecd,edf->gecf", expert_in, params["w1"].astype(cdt))
+    h3 = jnp.einsum("gecd,edf->gecf", expert_in, params["w3"].astype(cdt))
+    h = jax.nn.silu(h1) * h3
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["w2"].astype(cdt))
+
+    # combine: gather each (token, k)'s slot output, weight, sum over k
+    out_flat = expert_out.reshape(G * E * C, D)
+    out_flat = jnp.concatenate(
+        [out_flat, jnp.zeros((1, D), out_flat.dtype)], axis=0)
+    y_k = out_flat[flat_slot].reshape(G, gs, K, D)
+    y = jnp.einsum("gskd,gsk->gsd", y_k, gate_vals.astype(cdt))
+    y = y.reshape(B, S, D).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        y = y + layers.mlp(params["shared"], cfg, x)
+
+    frac_tokens = jnp.mean(onehot[:, :, 0, :], axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * mean_probs)
+    return y, aux
+
+
+def moe_apply(params: dict, cfg, x: jax.Array):
+    """x: (B, S, D) -> (y, aux_loss)."""
+    if getattr(cfg, "moe_dispatch_impl", "einsum") == "scatter":
+        return moe_apply_scatter(params, cfg, x)
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    gs = min(cfg.moe_group_size, B * S)
+    T = B * S
+    assert T % gs == 0, f"tokens {T} not divisible by group {gs}"
+    G = T // gs
+    xt = constrain_batch(x.reshape(G, gs, D))
+
+    logits = (xt.astype(jnp.float32) @ params["router"])  # (G, gs, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)  # (G, gs, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    C = _capacity(cfg, gs)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    ddt = jnp.dtype(getattr(cfg, "moe_dispatch_dtype", "float32"))
+    # position of each (token, k) choice inside its expert queue.
+    # The cumsum counts positions (up to gs > 256) -> must stay f32/int;
+    # the big (G,gs,E,C) dispatch/combine tensors are exact 0/1 (and
+    # gate-weighted) values -> built directly in compute dtype (§Perf:
+    # halves the dominant MoE memory-term contribution).
+    onehot = jax.nn.one_hot(gate_idx, E, dtype=jnp.float32)  # (G, gs, K, E)
+    # flatten k-choices in priority order: all k=0 first, then k=1, ...
+    oh_k_major = onehot.transpose(0, 2, 1, 3).reshape(G, K * gs, E)
+    pos_in_e = (jnp.cumsum(oh_k_major, axis=1) - oh_k_major)  # (G, K*gs, E)
+    pos = jnp.einsum("gke,gke->gk", pos_in_e, oh_k_major)  # (G, K*gs)
+    keep = pos < C
+    pos = pos.reshape(G, K, gs).transpose(0, 2, 1)  # (G, gs, K)
+    keep = keep.reshape(G, K, gs).transpose(0, 2, 1)
+
+    gate_vals = gate_vals * keep.astype(gate_vals.dtype)
+    # dispatch (G, gs, E, C) and combine tensors
+    pos_oh = jax.nn.one_hot(pos, C, dtype=ddt)  # (G, gs, K, C)
+    dispatch = jnp.einsum("gske,gskc->gsec", onehot.astype(ddt),
+                          pos_oh * keep[..., None].astype(ddt))
+    combine = jnp.einsum("gsec,gsk,gske->gsec", dispatch,
+                         gate_vals.astype(ddt), onehot.astype(ddt))
+
+    expert_in = jnp.einsum("gsec,gsd->gecd", dispatch.astype(cdt),
+                           xt.astype(cdt))  # (G, E, C, D)
+    h1 = jnp.einsum("gecd,edf->gecf", expert_in, params["w1"].astype(cdt))
+    h3 = jnp.einsum("gecd,edf->gecf", expert_in, params["w3"].astype(cdt))
+    h = jax.nn.silu(h1) * h3
+    expert_out = jnp.einsum("gecf,efd->gecd", h, params["w2"].astype(cdt))
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(cdt), expert_out)
+    y = y.reshape(B, S, D).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        y = y + layers.mlp(params["shared"], cfg, x)
+
+    # Switch aux loss: E * sum_e f_e * p_e
+    frac_tokens = jnp.mean(onehot[:, :, 0, :], axis=(0, 1))  # top-1 fraction
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * mean_probs)
+    return y, aux

@@ -1,0 +1,174 @@
+"""Mamba2 (SSD — state-space duality) block, chunked TPU-friendly form.
+
+Training/prefill uses the quadratic-within-chunk + recurrent-across-chunk
+decomposition from the Mamba2 paper: all heavy math is batched matmuls (MXU),
+with a ``lax.scan`` only over chunks.  Decode is the O(1) recurrent update on
+a per-head state of shape (heads, head_dim, ssm_state).
+
+Dimensions follow the paper: d_inner = expand * d_model, heads = d_inner /
+head_dim (P), state N = cfg.ssm_state, depthwise causal conv (k=4) on x/B/C.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+
+def ssm_init(key, cfg, dtype) -> dict:
+    D, DI, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    keys = jax.random.split(key, 6)
+    in_dim = 2 * DI + 2 * N + H  # z, x, B, C, dt
+    p = {
+        "in_proj": layers.dense_init(keys[0], D, in_dim, dtype),
+        "out_proj": layers.dense_init(keys[1], DI, D, dtype),
+        "conv_w": (jax.random.normal(keys[2], (cfg.ssm_conv, DI + 2 * N))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((DI + 2 * N,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), dtype),
+        "norm": layers.rmsnorm_init(DI, dtype),
+    }
+    return p
+
+
+def _split_proj(cfg, proj):
+    DI, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z, xBC, dt = jnp.split(proj, [DI, 2 * DI + 2 * N], axis=-1)
+    return z, xBC, dt  # xBC still needs conv then split
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv over time.  xBC (B,S,Ch), w (k,Ch)."""
+    k = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(dA):
+    """dA: (..., L) -> cumulative decay matrix (..., L, L) lower-triangular:
+    M[i,j] = sum_{j<t<=i} dA[t] (log-space)."""
+    L = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]  # (..., L, L): sum_(j,i]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(params, cfg, u: jax.Array, state=None, return_state=False):
+    """u: (B, S, d_model) -> y (B, S, d_model).
+
+    S must be a multiple of cfg.ssm_chunk for the chunked path.
+    ``state``: optional (B, H, P, N) initial state.
+    """
+    B, S, _ = u.shape
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    Q = min(cfg.ssm_chunk, S)
+    while S % Q:  # fall back to the largest divisor (tests / odd prompts)
+        Q -= 1
+    nc = S // Q
+
+    proj = u @ params["in_proj"].astype(u.dtype)
+    z, xBC_in, dt = _split_proj(cfg, proj)
+    xBC = _causal_conv(xBC_in, params["conv_w"].astype(u.dtype),
+                       params["conv_b"].astype(u.dtype))
+    x, Bmat, Cmat = jnp.split(xBC, [DI, DI + N], axis=-1)
+    x = x.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(params["A_log"])  # (H,) negative
+    dA = dt * A  # (B,S,H) log-decay per step
+
+    # chunk views
+    xc = x.reshape(B, nc, Q, H, P)
+    Bc = Bmat.reshape(B, nc, Q, N).astype(jnp.float32)
+    Cc = Cmat.reshape(B, nc, Q, N).astype(jnp.float32)
+    dAc = dA.reshape(B, nc, Q, H).transpose(0, 1, 3, 2)  # (B,nc,H,Q)
+    dtc = dt.reshape(B, nc, Q, H)
+
+    # --- intra-chunk (quadratic, batched matmul) ---
+    L = jnp.exp(_segsum(dAc))  # (B,nc,H,Q,Q)
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)  # (B,nc,Q,Q)
+    M = CB[:, :, None] * L  # (B,nc,H,Q,Q)
+    xdt = xc * dtc[..., None]  # (B,nc,Q,H,P) weighted input
+    y_diag = jnp.einsum("bchqk,bckhp->bcqhp", M.astype(u.dtype),
+                        xdt.astype(u.dtype))
+
+    # --- chunk states ---
+    # decay from position t to end of chunk: total - cumsum_t  (exclusive)
+    total = jnp.sum(dAc, axis=-1, keepdims=True)  # (B,nc,H,1)
+    decay_states = jnp.exp(total - jnp.cumsum(dAc, axis=-1))  # (B,nc,H,Q)
+    chunk_states = jnp.einsum("bckn,bchk,bckhp->bchpn", Bc,
+                              decay_states, xdt.astype(jnp.float32))
+
+    # --- inter-chunk recurrence (scan over chunks) ---
+    chunk_decay = jnp.exp(total.squeeze(-1))  # (B,nc,H)
+
+    def scan_fn(s, inp):
+        cs, cd = inp  # (B,H,P,N), (B,H)
+        s_new = s * cd[..., None, None] + cs
+        return s_new, s  # emit state *entering* the chunk
+
+    if state is None:
+        state = jnp.zeros((B, H, P, N), jnp.float32)
+    elif isinstance(state, dict):
+        state = state["ssm"]
+    final_state, states_in = jax.lax.scan(
+        scan_fn, state,
+        (chunk_states.transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(1, 0, 2)))
+    states_in = states_in.transpose(1, 0, 2, 3, 4)  # (B,nc,H,P,N)
+
+    # --- contribution of incoming state to each position ---
+    decay_from_start = jnp.exp(jnp.cumsum(dAc, axis=-1))  # (B,nc,H,Q)
+    y_off = jnp.einsum("bcqn,bchq,bchpn->bcqhp", Cc, decay_from_start,
+                       states_in).astype(u.dtype)
+
+    y = (y_diag + y_off).reshape(B, S, H, P)
+    y = y + x * params["D_skip"][None, None, :, None].astype(u.dtype)
+    y = y.reshape(B, S, DI)
+    y = layers.rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    out = y @ params["out_proj"].astype(u.dtype)
+    if return_state:
+        # conv ring state: last (k-1) pre-activation conv inputs
+        # (zero-padded on the left for prompts shorter than the kernel)
+        kc = params["conv_w"].shape[0]
+        padded = jnp.pad(xBC_in, ((0, 0), (max(0, kc - 1 - S), 0), (0, 0)))
+        conv_state = padded[:, padded.shape[1] - (kc - 1):, :]
+        return out, {"ssm": final_state, "conv": conv_state}
+    return out
+
+
+def ssd_decode_step(params, cfg, u, state):
+    """u: (B, 1, d_model); state {"ssm": (B,H,P,N), "conv": (B,k-1,Ch)}
+    -> (y, new_state).  Exact: the conv ring holds the last k-1 pre-conv
+    inputs so decode matches the training-time causal conv."""
+    B = u.shape[0]
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    sstate, cstate = state["ssm"], state["conv"]
+    proj = u @ params["in_proj"].astype(u.dtype)
+    z, xBC_in, dt = _split_proj(cfg, proj)
+    w = params["conv_w"].astype(u.dtype)  # (k, Ch)
+    window = jnp.concatenate([cstate.astype(u.dtype), xBC_in], axis=1)
+    xBC = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, w)[:, None, :]
+                      + params["conv_b"].astype(u.dtype))
+    new_cstate = window[:, 1:, :]
+    x, Bmat, Cmat = jnp.split(xBC, [DI, DI + N], axis=-1)
+    x = x.reshape(B, 1, H, P)[:, 0]  # (B,H,P)
+    Bv = Bmat[:, 0].astype(jnp.float32)  # (B,N)
+    Cv = Cmat[:, 0].astype(jnp.float32)
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * A)  # (B,H)
+    upd = jnp.einsum("bhp,bn,bh->bhpn", x.astype(jnp.float32), Bv, dt)
+    sstate = sstate * da[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", sstate, Cv).astype(u.dtype)
+    y = y + x * params["D_skip"][None, :, None].astype(u.dtype)
+    y = y.reshape(B, 1, DI)
+    y = layers.rmsnorm(params["norm"], y, cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return (y @ params["out_proj"].astype(u.dtype),
+            {"ssm": sstate, "conv": new_cstate})

@@ -1,0 +1,231 @@
+"""The paper's image-classification models (§4.3): CNN, ResNet-18, VGG-16.
+
+Pure-functional JAX (init/apply over dict pytrees).  These are the FL *client*
+models driven by the SAFL/SFL engines.  ResNet-18 carries BatchNorm running
+statistics as non-trainable ``state`` — exactly the payload that makes FedAvg
+transmit more bytes than FedSGD in the paper's Table 2 (gradients exist only
+for trainables; FedAvg ships the whole state dict).
+
+Reduced variants (``width_mult``, ``depth``) keep CPU CI fast; the full-fidelity
+shapes match §4.3 (3x3 kernels, stride 1, ReLU; ResNet-18 = 4 stages x 2
+basic blocks; VGG-16 = 13 conv + 3 fc).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout)) * np.sqrt(2.0 / fan_in)
+
+
+def _dense_init(key, cin, cout):
+    return jax.random.normal(key, (cin, cout)) * np.sqrt(2.0 / cin)
+
+
+def conv2d(x, w, stride=1, padding="SAME"):
+    return jax.lax.conv_general_dilated(
+        x, w, (stride, stride), padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def maxpool(x, k=2):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                                 (1, k, k, 1), (1, k, k, 1), "VALID")
+
+
+def avgpool_global(x):
+    return jnp.mean(x, axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm (with running stats -> FedAvg's extra payload)
+# ---------------------------------------------------------------------------
+
+
+def bn_init(c):
+    return ({"scale": jnp.ones((c,)), "bias": jnp.zeros((c,))},
+            {"mean": jnp.zeros((c,)), "var": jnp.ones((c,))})
+
+
+def bn_apply(params, state, x, train: bool, momentum=0.9, eps=1e-5):
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new_state = {"mean": momentum * state["mean"] + (1 - momentum) * mean,
+                     "var": momentum * state["var"] + (1 - momentum) * var}
+    else:
+        mean, var = state["mean"], state["var"]
+        new_state = state
+    inv = jax.lax.rsqrt(var + eps)
+    return (x - mean) * inv * params["scale"] + params["bias"], new_state
+
+
+# ---------------------------------------------------------------------------
+# Paper CNN (§4.3.1): 3 conv (3x3, s1) + maxpool + 2 fc, ReLU
+# ---------------------------------------------------------------------------
+
+
+def cnn_init(key, *, in_ch=3, n_classes=10, image_size=32, width=32):
+    ks = jax.random.split(key, 5)
+    c1, c2, c3 = width, width * 2, width * 2
+    feat = (image_size // 2) ** 2 * c3
+    params = {
+        "c1": _conv_init(ks[0], 3, 3, in_ch, c1),
+        "c2": _conv_init(ks[1], 3, 3, c1, c2),
+        "c3": _conv_init(ks[2], 3, 3, c2, c3),
+        "f1": _dense_init(ks[3], feat, 128),
+        "b1": jnp.zeros((128,)),
+        "f2": _dense_init(ks[4], 128, n_classes),
+        "b2": jnp.zeros((n_classes,)),
+    }
+    return params, {}  # no non-trainable state
+
+
+def cnn_apply(params, state, x, train: bool):
+    x = jax.nn.relu(conv2d(x, params["c1"]))
+    x = jax.nn.relu(conv2d(x, params["c2"]))
+    x = jax.nn.relu(conv2d(x, params["c3"]))
+    x = maxpool(x)
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["f1"] + params["b1"])
+    return x @ params["f2"] + params["b2"], state
+
+
+# ---------------------------------------------------------------------------
+# ResNet-18 (§4.3.2)
+# ---------------------------------------------------------------------------
+
+
+def _basic_block_init(key, cin, cout, stride):
+    ks = jax.random.split(key, 3)
+    p1, s1 = bn_init(cout)
+    p2, s2 = bn_init(cout)
+    p = {"c1": _conv_init(ks[0], 3, 3, cin, cout), "bn1": p1,
+         "c2": _conv_init(ks[1], 3, 3, cout, cout), "bn2": p2}
+    s = {"bn1": s1, "bn2": s2}
+    if stride != 1 or cin != cout:
+        pd, sd = bn_init(cout)
+        p["down"] = _conv_init(ks[2], 1, 1, cin, cout)
+        p["bnd"] = pd
+        s["bnd"] = sd
+    return p, s
+
+
+def _basic_block_apply(p, s, x, stride, train):
+    h, s1 = bn_apply(p["bn1"], s["bn1"],
+                     conv2d(x, p["c1"], stride=stride), train)
+    h = jax.nn.relu(h)
+    h, s2 = bn_apply(p["bn2"], s["bn2"], conv2d(h, p["c2"]), train)
+    news = {"bn1": s1, "bn2": s2}
+    if "down" in p:
+        x, sd = bn_apply(p["bnd"], s["bnd"],
+                         conv2d(x, p["down"], stride=stride), train)
+        news["bnd"] = sd
+    return jax.nn.relu(h + x), news
+
+
+def resnet18_init(key, *, in_ch=3, n_classes=10, width=64):
+    stages = [(width, 1), (width * 2, 2), (width * 4, 2), (width * 8, 2)]
+    ks = jax.random.split(key, 2 + 8)
+    p_stem, s_stem = bn_init(width)
+    params = {"stem": _conv_init(ks[0], 3, 3, in_ch, width), "bn0": p_stem}
+    state = {"bn0": s_stem}
+    cin = width
+    i = 1
+    for si, (cout, stride) in enumerate(stages):
+        for bi in range(2):
+            st = stride if bi == 0 else 1
+            p, s = _basic_block_init(ks[i], cin, cout, st)
+            params[f"s{si}b{bi}"] = p
+            state[f"s{si}b{bi}"] = s
+            cin = cout
+            i += 1
+    params["fc"] = _dense_init(ks[i], cin, n_classes)
+    params["fcb"] = jnp.zeros((n_classes,))
+    return params, state
+
+
+def resnet18_apply(params, state, x, train: bool, width=64):
+    stages = [(width, 1), (width * 2, 2), (width * 4, 2), (width * 8, 2)]
+    h, s0 = bn_apply(params["bn0"], state["bn0"],
+                     conv2d(x, params["stem"]), train)
+    h = jax.nn.relu(h)
+    news = {"bn0": s0}
+    for si, (cout, stride) in enumerate(stages):
+        for bi in range(2):
+            st = stride if bi == 0 else 1
+            h, s = _basic_block_apply(params[f"s{si}b{bi}"],
+                                      state[f"s{si}b{bi}"], h, st, train)
+            news[f"s{si}b{bi}"] = s
+    h = avgpool_global(h)
+    return h @ params["fc"] + params["fcb"], news
+
+
+# ---------------------------------------------------------------------------
+# VGG-16 (§4.3.3): 13 conv + 3 fc
+# ---------------------------------------------------------------------------
+
+_VGG_PLAN = [64, 64, "M", 128, 128, "M", 256, 256, 256, "M",
+             512, 512, 512, "M", 512, 512, 512, "M"]
+
+
+def vgg16_init(key, *, in_ch=3, n_classes=10, image_size=32, width_mult=1.0):
+    ks = jax.random.split(key, 16)
+    params = {}
+    cin, i = in_ch, 0
+    for item in _VGG_PLAN:
+        if item == "M":
+            continue
+        cout = max(8, int(item * width_mult))
+        params[f"c{i}"] = _conv_init(ks[i], 3, 3, cin, cout)
+        cin = cout
+        i += 1
+    feat = (image_size // 32) ** 2 * cin if image_size >= 32 else cin
+    params["f1"] = _dense_init(ks[13], feat, 512)
+    params["fb1"] = jnp.zeros((512,))
+    params["f2"] = _dense_init(ks[14], 512, 512)
+    params["fb2"] = jnp.zeros((512,))
+    params["f3"] = _dense_init(ks[15], 512, n_classes)
+    params["fb3"] = jnp.zeros((n_classes,))
+    return params, {}
+
+
+def vgg16_apply(params, state, x, train: bool):
+    i = 0
+    for item in _VGG_PLAN:
+        if item == "M":
+            x = maxpool(x)
+        else:
+            x = jax.nn.relu(conv2d(x, params[f"c{i}"]))
+            i += 1
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["f1"] + params["fb1"])
+    x = jax.nn.relu(x @ params["f2"] + params["fb2"])
+    return x @ params["f3"] + params["fb3"], state
+
+
+# ---------------------------------------------------------------------------
+# registry for the FL engines
+# ---------------------------------------------------------------------------
+
+
+def build_paper_model(name: str, key, **kw):
+    """Returns (params, state, apply_fn) for the paper's models."""
+    if name == "cnn":
+        p, s = cnn_init(key, **kw)
+        return p, s, cnn_apply
+    if name == "resnet18":
+        width = kw.pop("width", 64)
+        p, s = resnet18_init(key, width=width, **kw)
+        return p, s, functools.partial(resnet18_apply, width=width)
+    if name == "vgg16":
+        p, s = vgg16_init(key, **kw)
+        return p, s, vgg16_apply
+    raise ValueError(name)

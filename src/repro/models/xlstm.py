@@ -1,0 +1,248 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, recurrent scan), stabilized exponential gating.
+
+mLSTM has two equivalent forms implemented here:
+  * parallel (attention-like, used for train/prefill — MXU matmuls), and
+  * recurrent (O(1) state (C, n, m) per head, used for decode).
+Property tests check the two forms agree.
+
+Block layout (xlstm-125m, d_ff=0 ⇒ projections live inside the blocks):
+  mLSTM block: LN → up-proj (2×d_inner) → mLSTM ⊙ silu(gate) → down-proj + res
+  sLSTM block: LN → sLSTM → GeGLU FFN (4/3 factor) + res
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def mlstm_init(key, d_in: int, n_heads: int, dtype) -> dict:
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": layers.dense_init(ks[0], d_in, d_in, dtype),
+        "wk": layers.dense_init(ks[1], d_in, d_in, dtype),
+        "wv": layers.dense_init(ks[2], d_in, d_in, dtype),
+        "wi": layers.dense_init(ks[3], d_in, n_heads, jnp.float32),
+        "wf": layers.dense_init(ks[4], d_in, n_heads, jnp.float32),
+        "bi": jnp.zeros((n_heads,), jnp.float32),
+        "bf": jnp.full((n_heads,), 3.0, jnp.float32),  # open forget gates
+        "norm": layers.rmsnorm_init(d_in, dtype),
+    }
+
+
+def _mlstm_gates(p, x):
+    i_pre = x.astype(jnp.float32) @ p["wi"] + p["bi"]  # (B,S,H)
+    f_pre = x.astype(jnp.float32) @ p["wf"] + p["bf"]
+    return i_pre, jax.nn.log_sigmoid(f_pre)
+
+
+def mlstm_parallel(p, x, n_heads: int):
+    """x: (B,S,D) -> (B,S,D).  Stabilized parallel form."""
+    B, S, D = x.shape
+    hd = D // n_heads
+    q = (x @ p["wq"].astype(x.dtype)).reshape(
+        B, S, n_heads, hd).transpose(0, 2, 1, 3)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(
+        B, S, n_heads, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(
+        B, S, n_heads, hd).transpose(0, 2, 1, 3)
+    i_pre, logf = _mlstm_gates(p, x)  # (B,S,H)
+    i_pre = i_pre.transpose(0, 2, 1)  # (B,H,S)
+    logf = logf.transpose(0, 2, 1)
+    F = jnp.cumsum(logf, axis=-1)  # (B,H,S) inclusive
+    # D̃[t,s] = F[t] - F[s] + i[s]  for s <= t
+    Dtil = F[..., :, None] - F[..., None, :] + i_pre[..., None, :]
+    causal = jnp.tril(jnp.ones((S, S), bool))
+    Dtil = jnp.where(causal, Dtil, -jnp.inf)
+    m = jnp.max(Dtil, axis=-1, keepdims=True)  # (B,H,S,1)
+    m = jnp.maximum(m, -1e30)  # guard all -inf rows
+    Dmat = jnp.exp(Dtil - m)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k,
+                        preferred_element_type=jnp.float32) / np.sqrt(hd)
+    C = scores * Dmat
+    norm = jnp.maximum(jnp.abs(jnp.sum(C, axis=-1, keepdims=True)),
+                       jnp.exp(-m))
+    h = jnp.einsum("bhst,bhtd->bhsd", (C / norm).astype(v.dtype), v)
+    h = h.transpose(0, 2, 1, 3).reshape(B, S, D)
+    return layers.rmsnorm(p["norm"], h)
+
+
+def mlstm_final_state(p, x, n_heads: int):
+    """Closed-form recurrent state after consuming x (B,S,D) — equals running
+    ``mlstm_decode`` over every position.  Used by prefill.
+
+    C_S = sum_s exp(F_S - F_s + i_s - m) v_s k_s^T / ...,  m = max_s(.)
+    """
+    B, S, D = x.shape
+    hd = D // n_heads
+    k = (x @ p["wk"].astype(x.dtype)).reshape(
+        B, S, n_heads, hd).transpose(0, 2, 1, 3)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(
+        B, S, n_heads, hd).transpose(0, 2, 1, 3)
+    i_pre, logf = _mlstm_gates(p, x)
+    i_pre = i_pre.transpose(0, 2, 1)  # (B,H,S)
+    F = jnp.cumsum(logf.transpose(0, 2, 1), axis=-1)
+    a = F[..., -1:] - F + i_pre  # (B,H,S) log-weights
+    m = jnp.max(a, axis=-1, keepdims=True)
+    w = jnp.exp(a - m)
+    kf = k.astype(jnp.float32) / np.sqrt(hd)
+    Cm = jnp.einsum("bhs,bhsd,bhse->bhde", w, v.astype(jnp.float32), kf)
+    n = jnp.einsum("bhs,bhse->bhe", w, kf)
+    return Cm, n, m[..., 0]
+
+
+def mlstm_decode(p, x, state, n_heads: int):
+    """x: (B,1,D); state = (C (B,H,hd,hd), n (B,H,hd), m (B,H))."""
+    B, _, D = x.shape
+    hd = D // n_heads
+    Cm, n, m = state
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, n_heads, hd)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, n_heads, hd)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, n_heads, hd)
+    i_pre, logf = _mlstm_gates(p, x)
+    i_pre, logf = i_pre[:, 0], logf[:, 0]  # (B,H)
+    m_new = jnp.maximum(logf + m, i_pre)
+    f_s = jnp.exp(logf + m - m_new)[..., None, None]
+    i_s = jnp.exp(i_pre - m_new)[..., None, None]
+    kf = k.astype(jnp.float32) / np.sqrt(hd)
+    Cm = f_s * Cm + i_s * jnp.einsum("bhd,bhe->bhde",
+                                     v.astype(jnp.float32), kf)
+    n = f_s[..., 0] * n + i_s[..., 0] * kf
+    hnum = jnp.einsum("bhde,bhe->bhd", Cm, q.astype(jnp.float32))
+    hden = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", n,
+                                          q.astype(jnp.float32))),
+                       jnp.exp(-m_new))[..., None]
+    h = (hnum / hden).reshape(B, 1, D).astype(x.dtype)
+    return layers.rmsnorm(p["norm"], h), (Cm, n, m_new)
+
+
+def mlstm_state_init(B, D, n_heads, dtype=jnp.float32):
+    hd = D // n_heads
+    return (jnp.zeros((B, n_heads, hd, hd), dtype),
+            jnp.zeros((B, n_heads, hd), dtype),
+            jnp.full((B, n_heads), -1e30, dtype))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def slstm_init(key, d: int, n_heads: int, dtype) -> dict:
+    hd = d // n_heads
+    ks = jax.random.split(key, 3)
+    return {
+        # input weights for z,i,f,o stacked: (D, 4D)
+        "w": layers.dense_init(ks[0], d, 4 * d, dtype),
+        # block-diagonal recurrent weights per head: (4, H, hd, hd)
+        "r": (jax.random.normal(ks[1], (4, n_heads, hd, hd))
+              / np.sqrt(hd)).astype(jnp.float32),
+        "b": jnp.concatenate([jnp.zeros((2 * d,)),
+                              jnp.full((d,), 3.0),
+                              jnp.zeros((d,))]).astype(jnp.float32),
+        "norm": layers.rmsnorm_init(d, dtype),
+    }
+
+
+def slstm_scan(p, x, n_heads: int, state=None):
+    """x: (B,S,D) -> (B,S,D); recurrent scan over time."""
+    B, S, D = x.shape
+    hd = D // n_heads
+    pre_all = (x @ p["w"].astype(x.dtype)).astype(jnp.float32) + p["b"]  # (B,S,4D)
+
+    if state is None:
+        state = slstm_state_init(B, D, n_heads)
+
+    def step(carry, pre_t):
+        c, n, h, m = carry  # (B,H,hd) x3, m (B,H,hd)
+        rec = jnp.einsum("ghde,bhe->bghd", p["r"], h)  # (4,B? ) -> (B,4,H,hd)
+        pre = pre_t.reshape(B, 4, n_heads, hd) + rec.transpose(0, 1, 2, 3)
+        zt = jnp.tanh(pre[:, 0])
+        i_pre = pre[:, 1]
+        f_pre = pre[:, 2]
+        o = jax.nn.sigmoid(pre[:, 3])
+        logf = jax.nn.log_sigmoid(f_pre)
+        m_new = jnp.maximum(logf + m, i_pre)
+        i_s = jnp.exp(i_pre - m_new)
+        f_s = jnp.exp(logf + m - m_new)
+        c = f_s * c + i_s * zt
+        n = f_s * n + i_s
+        h_new = o * c / jnp.maximum(n, 1.0)
+        return (c, n, h_new, m_new), h_new
+
+    pre_seq = pre_all.reshape(B, S, 4, n_heads, hd).transpose(1, 0, 2, 3, 4)
+    carry, hs = jax.lax.scan(step, state, pre_seq)
+    out = hs.transpose(1, 0, 2, 3).reshape(B, S, D).astype(x.dtype)
+    return layers.rmsnorm(p["norm"], out), carry
+
+
+def slstm_state_init(B, D, n_heads, dtype=jnp.float32):
+    hd = D // n_heads
+    z = jnp.zeros((B, n_heads, hd), dtype)
+    return (z, z, z, jnp.full((B, n_heads, hd), -1e30, dtype))
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+def mlstm_block_init(key, cfg, dtype) -> dict:
+    d, di = cfg.d_model, 2 * cfg.d_model
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": layers.rmsnorm_init(d, dtype),
+        "up": layers.dense_init(ks[0], d, 2 * di, dtype),
+        "cell": mlstm_init(ks[1], di, cfg.n_heads, dtype),
+        "down": layers.dense_init(ks[2], di, d, dtype),
+    }
+
+
+def mlstm_block(p, cfg, x, state=None, decode=False, return_state=False):
+    h = layers.rmsnorm(p["ln"], x, cfg.norm_eps)
+    u = h @ p["up"].astype(h.dtype)
+    u, gate = jnp.split(u, 2, axis=-1)
+    if decode:
+        y, state = mlstm_decode(p["cell"], u, state, cfg.n_heads)
+    else:
+        y = mlstm_parallel(p["cell"], u, cfg.n_heads)
+        if return_state:
+            state = mlstm_final_state(p["cell"], u, cfg.n_heads)
+    y = y * jax.nn.silu(gate)
+    return x + y @ p["down"].astype(y.dtype), state
+
+
+def slstm_block_init(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    dff = max(1, (4 * d) // 3)
+    ks = jax.random.split(key, 4)
+    return {
+        "ln": layers.rmsnorm_init(d, dtype),
+        "cell": slstm_init(ks[0], d, 4, dtype),  # paper: 4 sLSTM heads
+        "ln2": layers.rmsnorm_init(d, dtype),
+        "ff1": layers.dense_init(ks[1], d, 2 * dff, dtype),
+        "ff2": layers.dense_init(ks[2], dff, d, dtype),
+    }
+
+
+def slstm_block(p, cfg, x, state=None):
+    h = layers.rmsnorm(p["ln"], x, cfg.norm_eps)
+    y, state = slstm_scan(p["cell"], h, 4, state)
+    x = x + y
+    h = layers.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    a, b = jnp.split(h @ p["ff1"].astype(h.dtype), 2, axis=-1)
+    x = x + (jax.nn.gelu(a) * b) @ p["ff2"].astype(h.dtype)
+    return x, state
+
+
+def slstm_decode_block(p, cfg, x, state):
+    """x (B,1,D) single-step via the same scan (S=1)."""
+    return slstm_block(p, cfg, x, state)

@@ -1,0 +1,2 @@
+from repro.optim.optim import (Optimizer, make_optimizer, sgd, sgdm, adamw,  # noqa: F401
+                               cosine_schedule, warmup_cosine)

@@ -1,0 +1,113 @@
+"""Pytree optimizers (no external deps): SGD, SGD-momentum, AdamW +
+warmup/cosine schedules.
+
+Interface mirrors optax minimally:
+    opt = make_optimizer(cfg.optimizer, lr=...)
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state, step)
+
+The big-model train steps keep optimizer state in the same sharding as the
+parameters (rules in repro/sharding), so memory scales correctly under fsdp.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Pytree], Pytree]
+    update: Callable  # (params, grads, state, step) -> (params, state)
+
+
+def _tmap(f, *trees):
+    return jax.tree_util.tree_map(f, *trees)
+
+
+def cosine_schedule(lr: float, total_steps: int, final_frac: float = 0.1):
+    def sched(step):
+        frac = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr * (final_frac + (1 - final_frac) * cos)
+    return sched
+
+
+def warmup_cosine(lr: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_schedule(lr, total_steps - warmup, final_frac)
+    def sched(step):
+        w = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        return jnp.where(step < warmup, lr * w, cos(step - warmup))
+    return sched
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+def sgd(lr=1e-2) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(params, grads, state, step):
+        eta = _lr_at(lr, step)
+        return _tmap(lambda p, g: (p - eta * g.astype(p.dtype)).astype(
+            p.dtype), params, grads), state
+
+    return Optimizer("sgd", init, update)
+
+
+def sgdm(lr=1e-2, momentum=0.9) -> Optimizer:
+    def init(params):
+        return {"m": _tmap(lambda p: jnp.zeros_like(p), params)}
+
+    def update(params, grads, state, step):
+        eta = _lr_at(lr, step)
+        m = _tmap(lambda m, g: momentum * m + g.astype(m.dtype),
+                  state["m"], grads)
+        params = _tmap(lambda p, m: (p - eta * m.astype(p.dtype)).astype(
+            p.dtype), params, m)
+        return params, {"m": m}
+
+    return Optimizer("sgdm", init, update)
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, wd=0.01) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, jnp.float32)
+        return {"m": _tmap(z, params), "v": _tmap(z, params)}
+
+    def update(params, grads, state, step):
+        eta = _lr_at(lr, step)
+        t = step + 1
+        m = _tmap(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                  state["m"], grads)
+        v = _tmap(lambda v, g: b2 * v
+                  + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                  state["v"], grads)
+        def upd(p, mm, vv):
+            mh = mm / (1 - b1 ** t)
+            vh = vv / (1 - b2 ** t)
+            step_ = mh / (jnp.sqrt(vh) + eps) + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - eta * step_).astype(p.dtype)
+        return _tmap(upd, params, m, v), {"m": m, "v": v}
+
+    return Optimizer("adamw", init, update)
+
+
+def make_optimizer(name: str, lr=1e-2, **kw) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "sgdm":
+        return sgdm(lr, kw.get("momentum", 0.9))
+    if name == "adamw":
+        return adamw(lr, **{k: v for k, v in kw.items()
+                            if k in ("b1", "b2", "eps", "wd")})
+    raise ValueError(name)

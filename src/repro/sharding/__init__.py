@@ -1,0 +1,2 @@
+from repro.sharding.rules import (param_specs, batch_spec, cache_specs,  # noqa: F401
+                                  spec_for_path, add_fsdp)

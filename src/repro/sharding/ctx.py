@@ -1,0 +1,88 @@
+"""Activation-sharding constraint context (§Perf iteration: GSPMD chose to
+replicate the batch dim of attention score slabs inside scanned layers —
+f32[256,H,2048,4096] per device for kimi train_4k, a 16x memory-term blowup.
+Explicit ``with_sharding_constraint`` pins activations to batch-sharded.)
+
+Disabled by default (tests run on 1 device, no mesh context); the launch
+layer enables it while lowering under a mesh.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_BATCH_AXES: Optional[Tuple[str, ...]] = None
+_MODEL_SIZE: int = 0
+_BATCH_SIZE_TOTAL: int = 1  # product of the batch-axis mesh sizes
+
+
+def enable(batch_axes: Tuple[str, ...], model_size: int = 0,
+           batch_total: int = 1) -> None:
+    global _BATCH_AXES, _MODEL_SIZE, _BATCH_SIZE_TOTAL
+    _BATCH_AXES = tuple(batch_axes)
+    _MODEL_SIZE = model_size
+    _BATCH_SIZE_TOTAL = max(batch_total, 1)
+
+
+def disable() -> None:
+    global _BATCH_AXES, _MODEL_SIZE, _BATCH_SIZE_TOTAL
+    _BATCH_AXES = None
+    _MODEL_SIZE = 0
+    _BATCH_SIZE_TOTAL = 1
+
+
+class activation_sharding:
+    """Context: with activation_sharding(("data",), 16, 16): lower(...)"""
+
+    def __init__(self, batch_axes, model_size: int = 0,
+                 batch_total: int = 1):
+        self.axes = tuple(batch_axes)
+        self.model_size = model_size
+        self.batch_total = batch_total
+
+    def __enter__(self):
+        enable(self.axes, self.model_size, self.batch_total)
+
+    def __exit__(self, *exc):
+        disable()
+
+
+def constrain_batch(x: jax.Array, batch_dim: int = 0) -> jax.Array:
+    """Pin ``x``'s batch dim to the data-parallel axes; other dims free.
+
+    No-op when the batch dim cannot shard over the axes (batch-1 decode:
+    pinning a size-1 dim forced XLA to gather weights instead of moving
+    activations — a 169 GB/step regression on kimi long_500k, §Perf)."""
+    if _BATCH_AXES is None:
+        return x
+    if x.shape[batch_dim] % _BATCH_SIZE_TOTAL or             x.shape[batch_dim] < _BATCH_SIZE_TOTAL:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = _BATCH_AXES if len(_BATCH_AXES) > 1 else _BATCH_AXES[0]
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def constrain_scores(x: jax.Array, n_heads: int) -> jax.Array:
+    """Attention score slabs (B, H, q, k): batch on data AND heads on model
+    (when divisible) — GSPMD otherwise replicates one of them (§Perf).
+
+    Head counts not divisible by the model axis (minitron: 24 heads on a
+    16-way axis) fall back to sequence-parallel scores: shard the KV dim —
+    the softmax then needs only a small cross-shard max/sum reduction.
+    """
+    if _BATCH_AXES is None:
+        return x
+    spec = [None] * x.ndim
+    if x.shape[0] % _BATCH_SIZE_TOTAL == 0 and \
+            x.shape[0] >= _BATCH_SIZE_TOTAL:
+        spec[0] = _BATCH_AXES if len(_BATCH_AXES) > 1 else _BATCH_AXES[0]
+    if _MODEL_SIZE and n_heads % _MODEL_SIZE == 0:
+        spec[1] = "model"
+    elif _MODEL_SIZE and x.shape[-1] % _MODEL_SIZE == 0 \
+            and x.shape[-1] >= _MODEL_SIZE:
+        spec[-1] = "model"
+    if all(sp is None for sp in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))

@@ -1,0 +1,192 @@
+"""Path-based sharding rules: params pytree -> PartitionSpec pytree.
+
+Two policies (selected per arch config, DESIGN.md §5):
+
+  * ``megatron`` — tensor parallel on the "model" axis:
+      column-parallel: wq/wk/wv, mlp w1/w3, ssm in_proj, xlstm up/w
+      row-parallel:    wo, mlp w2, ssm out_proj, xlstm down
+      vocab-parallel:  embed/head on the (padded) vocab dim
+      MoE:             expert dim on "model" (expert parallelism)
+  * ``fsdp`` — megatron + every parameter additionally sharded on "data"
+      over its largest still-replicated divisible dim (ZeRO-3; XLA inserts
+      the all-gathers).  Required for the 1T kimi-k2 config.
+
+Leading *scan* dims (stacked layers; zamba2 has two: groups x per-group) are
+never sharded.  Non-divisible dims fall back to replication, so every config
+lowers on any mesh.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Pytree = Any
+
+# container name -> number of leading stacked (scan) dims to skip
+_SCAN_CONTAINERS = {
+    "layers_dense": 1, "layers_moe": 1, "mamba": 2, "mblocks": 1,
+    "sblocks": 1, "enc": 1, "dec": 1,
+}
+
+# (regex on the dot-joined path, spec for the *trailing* dims)
+# "C" = column-parallel (shard last dim), "R" = row-parallel (shard dim 0 of
+# the trailing shape), "V" = vocab-parallel, "E" = expert-parallel, None = rep
+_RULES = [
+    (r"(^|\.)embed$", "V"),
+    (r"(^|\.)head$", "C"),
+    (r"\b(wq|wk|wv)$", "C"),
+    (r"\bwo$", "R"),
+    (r"\b(w1|w3)$", "_moe_or_col"),
+    (r"\bw2$", "_moe_or_row"),
+    (r"\brouter$", None),
+    (r"\bin_proj$", "C"),
+    (r"\bout_proj$", "R"),
+    (r"\bconv_w$", "C"),
+    (r"\b(up|ff1)$", "C"),
+    (r"\b(down|ff2)$", "R"),
+    (r"\bw$", "C"),  # slstm input weights
+    (r"\bprojector$", "C"),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return ".".join(parts)
+
+
+def _n_scan_dims(path_s: str) -> int:
+    for name, n in _SCAN_CONTAINERS.items():
+        if re.search(rf"(^|\.){name}(\.|$)", path_s):
+            return n
+    return 0
+
+
+def _divisible(dim: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.shape and dim % mesh.shape[axis] == 0
+
+
+def spec_for_path(path_s: str, shape: Tuple[int, ...], mesh: Mesh,
+                  policy: str, is_moe_expert_table: bool) -> P:
+    n_scan = _n_scan_dims(path_s)
+    trail = shape[n_scan:]
+    spec: list = [None] * len(shape)
+
+    kind = None
+    for pat, k in _RULES:
+        if re.search(pat, path_s):
+            kind = k
+            break
+    if kind == "_moe_or_col":
+        kind = "E" if is_moe_expert_table else "C"
+    if kind == "_moe_or_row":
+        kind = "E" if is_moe_expert_table else "R"
+
+    if kind and len(trail) >= 1:
+        if kind == "C" and len(trail) >= 1 and _divisible(
+                trail[-1], mesh, "model"):
+            spec[len(shape) - 1] = "model"
+        elif kind == "R" and len(trail) >= 2 and _divisible(
+                trail[0], mesh, "model"):
+            spec[n_scan] = "model"
+        elif kind == "V" and _divisible(trail[0], mesh, "model"):
+            spec[n_scan] = "model"
+        elif kind == "E" and _divisible(trail[0], mesh, "model"):
+            spec[n_scan] = "model"  # expert dim
+
+    if policy == "fsdp":
+        spec = add_fsdp(spec, shape, n_scan, mesh)
+    return P(*spec)
+
+
+def add_fsdp(spec: list, shape: Tuple[int, ...], n_scan: int,
+             mesh: Mesh) -> list:
+    """Shard the largest still-replicated, divisible trailing dim on "data"."""
+    if "data" not in mesh.shape:
+        return spec
+    cands = [(shape[i], i) for i in range(n_scan, len(shape))
+             if spec[i] is None and _divisible(shape[i], mesh, "data")]
+    if cands:
+        _, i = max(cands)
+        spec[i] = "data"
+    return spec
+
+
+def param_specs(params: Pytree, cfg, mesh: Mesh) -> Pytree:
+    """NamedSharding pytree matching ``params``."""
+
+    def one(path, leaf):
+        ps = _path_str(path)
+        is_expert = bool(re.search(r"(^|\.)moe\.", ps)) and \
+            re.search(r"\bw[123]$", ps) is not None
+        return NamedSharding(
+            mesh, spec_for_path(ps, leaf.shape, mesh, cfg.sharding,
+                                is_expert))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def batch_spec(mesh: Mesh) -> P:
+    """Global batch dim over all data-parallel axes present."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    return P(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
+
+
+def cache_specs(cache: Pytree, mesh: Mesh, batch: int) -> Pytree:
+    """KV/state caches: batch dim on "data" when divisible, else the
+    sequence/capacity dim; everything else replicated.
+
+    Cache leaves: (L, B, C, H, hd) attn; (L/G, B, H, P, N) ssm states;
+    xlstm states (L, B, H, ...).
+    """
+    dsize = mesh.shape.get("data", 1)
+    msize = mesh.shape.get("model", 1)
+    # batch shards over every data-parallel axis present (pod + data) so the
+    # cache layout matches the activation constraints (§Perf: a data-only
+    # cache forced a per-layer reshard on the multi-pod serve path)
+    baxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    btotal = 1
+    for a in baxes:
+        btotal *= mesh.shape[a]
+    bspec = baxes if len(baxes) > 1 else (baxes[0] if baxes else None)
+
+    def one(leaf):
+        spec = [None] * leaf.ndim
+        if leaf.ndim >= 2:
+            # find batch dim: the first dim equal to `batch` after dim 0
+            for i in range(leaf.ndim):
+                if leaf.shape[i] == batch and batch % btotal == 0 and \
+                        batch >= btotal:
+                    spec[i] = bspec
+                    break
+            else:
+                # fall back: shard the largest divisible dim (seq capacity)
+                cands = [(leaf.shape[i], i) for i in range(1, leaf.ndim)
+                         if leaf.shape[i] % dsize == 0
+                         and leaf.shape[i] >= dsize]
+                if cands:
+                    _, i = max(cands)
+                    spec[i] = "data"
+            # also shard the largest remaining dim over "model" (KV seq
+            # capacity / state heads) — otherwise decode caches replicate
+            # across the model axis (86 GB/device for internvl2 decode_32k,
+            # §Perf iteration 2).  Small dims (ring-buffer windows) stay
+            # replicated: a model-sharded ring cache pays a cross-shard
+            # reshard on every DUS write (§Perf regression kimi long_500k).
+            cands = [(leaf.shape[i], i) for i in range(1, leaf.ndim)
+                     if spec[i] is None and leaf.shape[i] % msize == 0
+                     and leaf.shape[i] >= max(msize, 16_384)]
+            if cands:
+                _, i = max(cands)
+                spec[i] = "model"
+        return NamedSharding(mesh, P(*spec))
+
+    return jax.tree_util.tree_map(one, cache)

@@ -1,0 +1,104 @@
+"""Unit tests for the aggregation strategies (paper §3, Eq. 4-6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import aggregation as agg
+
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+@pytest.fixture
+def params():
+    k = jax.random.PRNGKey(0)
+    return {"w": jax.random.normal(k, (8, 4)), "b": jnp.ones((4,))}
+
+
+def test_fedavg_is_weighted_mean(params):
+    clients = [jax.tree_util.tree_map(lambda p, i=i: p + i, params)
+               for i in range(3)]
+    sizes = jnp.array([100.0, 200.0, 700.0])
+    out = agg.fedavg(_stack(clients), sizes)
+    want = 0.1 * 0 + 0.2 * 1 + 0.7 * 2
+    np.testing.assert_allclose(np.array(out["b"]), 1.0 + want, rtol=1e-6)
+
+
+def test_fedsgd_equals_sgd_step(params):
+    grads = [jax.tree_util.tree_map(jnp.ones_like, params)
+             for _ in range(4)]
+    out = agg.fedsgd(params, _stack(grads), jnp.ones(4), server_lr=0.5)
+    np.testing.assert_allclose(np.array(out["b"]), 1.0 - 0.5, rtol=1e-6)
+
+
+def test_fedsgd_staleness_weighting_downweights(params):
+    fresh = jax.tree_util.tree_map(jnp.ones_like, params)
+    stale = jax.tree_util.tree_map(lambda p: -jnp.ones_like(p), params)
+    w = agg.staleness_poly(jnp.array([0.0, 8.0]), alpha=1.0)
+    out = agg.fedsgd(params, _stack([fresh, stale]), w, server_lr=1.0)
+    # fresh gradient (weight 1) dominates the stale one (weight 1/9)
+    assert float(out["b"][0]) < 1.0  # moved along the fresh direction
+
+
+def test_staleness_functions_monotone_and_bounded():
+    tau = jnp.arange(0, 20, dtype=jnp.float32)
+    for fn, kw in [(agg.staleness_poly, {"alpha": 0.5}),
+                   (agg.staleness_hinge, {})]:
+        w = np.array(fn(tau, **kw))
+        assert np.all(w > 0) and np.all(w <= 1.0)
+        assert np.all(np.diff(w) <= 1e-7)  # non-increasing
+    np.testing.assert_array_equal(np.array(agg.staleness_const(tau)), 1.0)
+
+
+def test_fedasync_mix_interpolates(params):
+    client = jax.tree_util.tree_map(lambda p: p + 2.0, params)
+    out = agg.fedasync_mix(params, client, jnp.float32(0.25))
+    np.testing.assert_allclose(np.array(out["b"]), 1.0 + 0.5, rtol=1e-6)
+
+
+def test_fedopt_adam_moves_and_keeps_state(params):
+    grads = _stack([jax.tree_util.tree_map(jnp.ones_like, params)] * 2)
+    new, opt = agg.fedopt_adam(params, grads, jnp.ones(2),
+                               agg.ServerOptState(), server_lr=0.1)
+    assert opt.step == 1 and opt.adam_m is not None
+    assert float(new["b"][0]) < 1.0
+    new2, opt2 = agg.fedopt_adam(new, grads, jnp.ones(2), opt, server_lr=0.1)
+    assert opt2.step == 2
+    assert float(new2["b"][0]) < float(new["b"][0])
+
+
+def test_sdga_damps_oscillation(params):
+    """Alternating +g/-g gradients: plain FedSGD oscillates with full
+    amplitude; SDGA's momentum+EMA damp the swing."""
+    g_pos = _stack([jax.tree_util.tree_map(jnp.ones_like, params)])
+    g_neg = _stack([jax.tree_util.tree_map(
+        lambda p: -jnp.ones_like(p), params)])
+    tau = jnp.zeros(1)
+
+    p_sgd = params
+    amp_sgd = []
+    for i in range(10):
+        g = g_pos if i % 2 == 0 else g_neg
+        p_new = agg.fedsgd(p_sgd, g, jnp.ones(1), server_lr=1.0)
+        amp_sgd.append(abs(float(p_new["b"][0]) - float(p_sgd["b"][0])))
+        p_sgd = p_new
+
+    p_s = params
+    opt = agg.ServerOptState()
+    amp_sdga = []
+    for i in range(10):
+        g = g_pos if i % 2 == 0 else g_neg
+        p_new, opt = agg.sdga(p_s, g, tau, opt, server_lr=1.0,
+                              momentum=0.8, ema_anchor=0.05)
+        amp_sdga.append(abs(float(p_new["b"][0]) - float(p_s["b"][0])))
+        p_s = p_new
+    assert np.mean(amp_sdga[2:]) < np.mean(amp_sgd[2:])
+
+
+def test_weighted_mean_ignores_zero_weight(params):
+    a = jax.tree_util.tree_map(jnp.ones_like, params)
+    b = jax.tree_util.tree_map(lambda p: 100 * jnp.ones_like(p), params)
+    out = agg.weighted_mean(_stack([a, b]), jnp.array([1.0, 0.0]))
+    np.testing.assert_allclose(np.array(out["b"]), 1.0, rtol=1e-6)

@@ -1,0 +1,99 @@
+"""Partition-scheme tests (paper §4.2): coverage, disjointness, and the
+distributional property each scheme claims."""
+import numpy as np
+import pytest
+
+from repro.data import (build_client_shards, label_histogram, make_dataset,
+                        partition, train_test_split)
+
+
+@pytest.fixture(scope="module")
+def labels():
+    rng = np.random.default_rng(0)
+    return rng.integers(0, 10, 2000).astype(np.int32)
+
+
+@pytest.mark.parametrize("scheme,kw", [
+    ("iid", {}),
+    ("shards", {"n_labels": 2}),
+    ("unbalanced_dirichlet", {"sigma": 0.5}),
+    ("hetero_dirichlet", {"alpha": 0.5}),
+])
+def test_partition_disjoint_and_complete(labels, scheme, kw):
+    parts = partition(scheme, labels, 10, seed=0, **kw)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(labels)
+    assert len(np.unique(allidx)) == len(labels)  # disjoint
+
+
+def test_shards_limits_labels_per_client(labels):
+    parts = partition("shards", labels, 10, n_labels=2, seed=0)
+    counts = [len(np.unique(labels[p])) for p in parts]
+    # each shard spans at most 2 labels at a boundary -> <= 2*n_labels,
+    # and typically ~n_labels
+    assert max(counts) <= 4
+    assert np.median(counts) <= 3
+
+
+def test_unbalanced_dirichlet_quantity_skew(labels):
+    parts = partition("unbalanced_dirichlet", labels, 20, sigma=1.0, seed=0)
+    sizes = np.array([len(p) for p in parts])
+    assert sizes.max() > 2 * sizes.min()  # lognormal imbalance
+    # label MIX stays near-uniform per client (same distribution everywhere)
+    big = [p for p in parts if len(p) > 50]
+    for p in big[:5]:
+        hist = np.bincount(labels[p], minlength=10) / len(p)
+        assert hist.max() < 0.35
+
+
+def test_hetero_dirichlet_label_skew(labels):
+    parts = partition("hetero_dirichlet", labels, 10, alpha=0.1, seed=0)
+    # low alpha -> strongly skewed label mixes
+    skews = []
+    for p in parts:
+        if len(p) < 20:
+            continue
+        hist = np.bincount(labels[p], minlength=10) / len(p)
+        skews.append(hist.max())
+    assert np.median(skews) > 0.4
+
+
+def test_by_role_assigns_distinct_roles():
+    ds = make_dataset("shakespeare", n=500, seed=0)
+    parts = partition("by_role", ds.y[:, 0] * 0, 5, roles=ds.roles, seed=0)
+    seen = []
+    for p in parts:
+        seen.append(set(np.unique(ds.roles[p]).tolist()))
+    for i in range(len(seen)):
+        for j in range(i + 1, len(seen)):
+            assert not (seen[i] & seen[j])  # role sets disjoint
+
+
+def test_build_client_shards_padding_and_mask():
+    ds = make_dataset("cifar10", n=500, seed=0, hw=16)
+    tr, te = train_test_split(ds)
+    shards = build_client_shards(tr, "unbalanced_dirichlet", 8, 32,
+                                 sigma=1.0)
+    nb = shards[0]["xs"].shape[0]
+    for sh in shards:
+        assert sh["xs"].shape[0] == nb  # one shared XLA program
+        assert sh["mask"].sum() == min(sh["n"], nb * 32)
+
+
+def test_synthetic_datasets_learnable_structure():
+    for name in ("cifar10", "femnist"):
+        ds = make_dataset(name, n=400, seed=0)
+        # same-class images more similar than cross-class (template structure)
+        x = ds.x.reshape(len(ds.x), -1)
+        c0 = x[ds.y == 0]
+        c1 = x[ds.y == 1]
+        if len(c0) > 2 and len(c1) > 2:
+            d_same = np.linalg.norm(c0[0] - c0[1])
+            d_diff = np.linalg.norm(c0[0] - c1[0])
+            assert d_same < d_diff
+
+
+def test_sentiment_labels_balanced():
+    ds = make_dataset("sentiment140", n=1000, seed=0)
+    frac = ds.y.mean()
+    assert 0.4 < frac < 0.6

@@ -1,0 +1,112 @@
+"""Integration tests for the SFL/SAFL engines (paper §2.2, §5)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import FLEngine
+from repro.core.client import make_local_train, pytree_bytes
+from repro.data import build_client_shards, make_dataset, train_test_split
+from repro.models.vision_cnn import build_paper_model
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("cifar10", n=600, seed=0, hw=16)
+    tr, te = train_test_split(ds)
+    shards = build_client_shards(tr, "iid", n_clients=8, batch_size=16)
+    p0, s0, apply_fn = build_paper_model("cnn", jax.random.PRNGKey(0),
+                                         width=4, image_size=16)
+    return shards, te, p0, s0, apply_fn
+
+
+def _run(setup, mode, aggregation, rounds=6, **kw):
+    shards, te, p0, s0, apply_fn = setup
+    # server lr per target: gradient-mean targets reuse the client lr
+    # (Eq. 5); Adam-normalized server steps (fedopt) need a small lr
+    slr = {"fedsgd": 0.05, "sdga": 0.05, "fedbuff": 0.05,
+           "fedopt": 0.005}.get(aggregation, 1.0)
+    cfg = FLConfig(n_clients=8, k=4, mode=mode, aggregation=aggregation,
+                   client_lr=0.05, server_lr=slr,
+                   target_accuracy=0.3, **kw)
+    eng = FLEngine(cfg, apply_fn, "image", p0, s0, shards,
+                   te.x[:200], te.y[:200])
+    return eng.run(rounds)
+
+
+@pytest.mark.parametrize("mode", ["sync", "semi_async"])
+@pytest.mark.parametrize("aggregation", ["fedsgd", "fedavg"])
+def test_four_paper_modes_run_and_learn(setup, mode, aggregation):
+    res = _run(setup, mode, aggregation)
+    s = res.metrics.summary()
+    assert s["rounds"] == 6
+    assert s["best_accuracy"] > 0.15  # better than 10-class chance
+    assert s["duration_s"] > 0 and s["tx_GB"] > 0
+
+
+@pytest.mark.parametrize("aggregation", ["sdga", "fedbuff", "fedopt",
+                                         "fedasync"])
+def test_variant_aggregators_run(setup, aggregation):
+    res = _run(setup, "semi_async", aggregation, rounds=4)
+    assert res.metrics.summary()["rounds"] == 4
+    for leaf in jax.tree_util.tree_leaves(res.final_params):
+        assert np.all(np.isfinite(np.asarray(leaf)))
+
+
+def test_safl_has_staleness_sfl_does_not(setup):
+    r_sync = _run(setup, "sync", "fedsgd")
+    r_async = _run(setup, "semi_async", "fedsgd")
+    assert r_sync.metrics.summary()["mean_staleness"] == 0.0
+    assert max(r_async.staleness_hist) > 0  # some stale updates buffered
+
+
+def test_sfl_straggler_idle_time(setup):
+    """SFL wastes time on stragglers (paper Fig. 1a); SAFL does not."""
+    r_sync = _run(setup, "sync", "fedavg")
+    r_async = _run(setup, "semi_async", "fedavg")
+    assert r_sync.idle_time > 0.0
+    assert r_async.idle_time == 0.0
+
+
+def test_fedsgd_transmits_fewer_bytes_than_fedavg(setup):
+    """Paper Table 2: gradient upload < full-model upload (state + envelope)."""
+    r_sgd = _run(setup, "semi_async", "fedsgd")
+    r_avg = _run(setup, "semi_async", "fedavg")
+    # per-round uploads are equal in count; compare cumulative tx at equal
+    # round counts
+    assert r_sgd.metrics.total_tx_bytes() < r_avg.metrics.total_tx_bytes()
+
+
+def test_fedsgd_single_client_equals_central_sgd(setup):
+    """With 1 client, K=1, sync, server_lr == client_lr: the global model
+    after a round == the client's locally trained model (Eq. 4-5 closure)."""
+    shards, te, p0, s0, apply_fn = setup
+    cfg = FLConfig(n_clients=1, k=1, mode="sync", aggregation="fedsgd",
+                   client_lr=0.05, server_lr=0.05, target_accuracy=0.3)
+    eng = FLEngine(cfg, apply_fn, "image", p0, s0, shards[:1],
+                   te.x[:64], te.y[:64])
+    res = eng.run(1)
+    epoch = make_local_train(apply_fn, "image")
+    w_direct, _, _ = epoch(p0, s0, shards[0]["xs"], shards[0]["ys"],
+                           shards[0]["mask"], 0.05)
+    err = max(jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))),
+        res.final_params, w_direct)))
+    assert err < 1e-5
+
+
+def test_deterministic_given_seed(setup):
+    a = _run(setup, "semi_async", "fedsgd", rounds=3)
+    b = _run(setup, "semi_async", "fedsgd", rounds=3)
+    assert a.metrics.summary() == b.metrics.summary()
+
+
+def test_compressed_updates_cut_tx_and_still_learn(setup):
+    """Beyond-paper: int8 update compression ~4x channel reduction with
+    comparable accuracy (kernels/quantize.py is the TPU path)."""
+    base = _run(setup, "semi_async", "fedsgd")
+    comp = _run(setup, "semi_async", "fedsgd", compress_updates=True)
+    assert comp.metrics.total_tx_bytes() < base.metrics.total_tx_bytes() / 3
+    assert comp.metrics.summary()["best_accuracy"] > \
+        base.metrics.summary()["best_accuracy"] - 0.1

@@ -1,0 +1,99 @@
+"""Per-kernel shape/dtype sweeps, allclose vs the pure-jnp oracles
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("K,D,block_d", [(4, 1000, 256), (16, 4096, 512),
+                                         (1, 300, 128), (32, 8192, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_safl_agg_fedsgd(K, D, block_d, dtype):
+    k = jax.random.PRNGKey(K * D)
+    u = jax.random.normal(k, (K, D), jnp.float32).astype(dtype)
+    w = jax.random.uniform(jax.random.PRNGKey(1), (K,)) + 0.05
+    p = jax.random.normal(jax.random.PRNGKey(2), (D,), jnp.float32)
+    got = ops.safl_aggregate(u, w, p, server_lr=0.7, mode="fedsgd",
+                             block_d=block_d)
+    want = ref.safl_agg_ref(u, w, p, 0.7)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.array(got, np.float32),
+                               np.array(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+@pytest.mark.parametrize("K,D", [(8, 1024), (3, 777)])
+def test_safl_agg_avg(K, D):
+    u = jax.random.normal(jax.random.PRNGKey(0), (K, D))
+    w = jnp.arange(1.0, K + 1.0)
+    got = ops.safl_aggregate(u, w, mode="avg", block_d=256)
+    want = ref.weighted_avg_ref(u, w)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5)
+
+
+@pytest.mark.parametrize("R,B", [(8, 256), (37, 512), (1, 128), (100, 1024)])
+def test_quantize_matches_ref(R, B):
+    x = jax.random.normal(jax.random.PRNGKey(R), (R, B)) * 5
+    q, s = ops.quantize_int8(x)
+    qr, sr = ref.quantize_ref(x)
+    np.testing.assert_array_equal(np.array(q), np.array(qr))
+    np.testing.assert_allclose(np.array(s), np.array(sr), rtol=1e-6)
+
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(jax.random.PRNGKey(0), (16, 512)) * 3
+    q, s = ops.quantize_int8(x)
+    xd = ops.dequantize_int8(q, s)
+    # absolute error bounded by half a quantization step per block
+    bound = np.array(s)[:, None] * 0.5 + 1e-6
+    assert np.all(np.abs(np.array(xd) - np.array(x)) <= bound)
+
+
+@pytest.mark.parametrize("S,H,Hkv,hd,bq,bk", [
+    (128, 4, 4, 64, 64, 64),    # MHA
+    (256, 8, 2, 32, 128, 128),  # GQA 4:1
+    (64, 2, 1, 128, 32, 64),    # MQA, uneven blocks
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(S, H, Hkv, hd, bq, bk, dtype):
+    B = 2
+    ks = jax.random.split(jax.random.PRNGKey(S + H), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32).astype(dtype)
+    got = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.array(got, np.float32),
+                               np.array(want, np.float32), atol=tol,
+                               rtol=tol)
+
+
+def test_flash_attention_noncausal():
+    B, S, H, hd = 1, 128, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    got = ops.flash_attention(q, k, v, causal=False, block_q=64, block_k=64)
+    want = ref.flash_attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_attention_causality():
+    """Output at position t must not depend on inputs after t."""
+    B, S, H, hd = 1, 128, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    out1 = ops.flash_attention(q, k, v, block_q=64, block_k=64)
+    k2 = k.at[:, 100:].set(99.0)
+    v2 = v.at[:, 100:].set(-99.0)
+    out2 = ops.flash_attention(q, k2, v2, block_q=64, block_k=64)
+    np.testing.assert_allclose(np.array(out1[:, :100]),
+                               np.array(out2[:, :100]), atol=1e-6)

@@ -1,0 +1,128 @@
+"""Mathematical correctness of the model-zoo building blocks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ModelConfig
+from repro.models import layers, ssm
+from repro.models import moe as moe_lib
+
+
+def _mini_cfg(**kw):
+    base = dict(name="mini", family="dense", n_layers=2, d_model=64,
+                n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                attn_chunk=0, param_dtype="float32",
+                compute_dtype="float32")
+    base.update(kw)
+    return ModelConfig(**base)
+
+
+def test_chunked_attention_equals_naive(key):
+    cfg = _mini_cfg()
+    p = layers.attention_init(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 64))
+    pos = jnp.arange(32, dtype=jnp.int32)
+    naive = layers.full_attention(p, cfg, x, pos)
+    cfg_c = _mini_cfg(attn_chunk=8)
+    chunked = layers.full_attention(p, cfg_c, x, pos)
+    np.testing.assert_allclose(np.array(naive), np.array(chunked),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_sliding_window_masks_older_positions(key):
+    cfg = _mini_cfg()
+    p = layers.attention_init(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 64))
+    pos = jnp.arange(32, dtype=jnp.int32)
+    full = layers.full_attention(p, cfg, x, pos)
+    win = layers.full_attention(p, cfg, x, pos, window=8)
+    # first window-1 positions see the same history -> identical outputs
+    np.testing.assert_allclose(np.array(full[:, :8]), np.array(win[:, :8]),
+                               atol=1e-5)
+    # later positions differ (older keys masked)
+    assert np.abs(np.array(full[:, -1] - win[:, -1])).max() > 1e-4
+
+
+def test_rope_relative_position_property(key):
+    """RoPE: <q_i, k_j> depends only on i-j (per head)."""
+    hd = 32
+    q = jax.random.normal(key, (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+    def dot_at(i, j):
+        qi = layers.apply_rope(q, jnp.array([i]), 10000.0)
+        kj = layers.apply_rope(k, jnp.array([j]), 10000.0)
+        return float(jnp.sum(qi * kj))
+    assert abs(dot_at(5, 3) - dot_at(25, 23)) < 1e-4
+    assert abs(dot_at(5, 3) - dot_at(6, 3)) > 1e-4  # sanity: differs
+
+
+def test_ssd_chunked_equals_naive_recurrence(key):
+    """Chunked SSD == step-by-step recurrence (Mamba2 duality)."""
+    cfg = _mini_cfg(family="hybrid", hybrid_attn_every=2, ssm_state=8,
+                    ssm_head_dim=16, ssm_chunk=4)
+    p = ssm.ssm_init(key, cfg, jnp.float32)
+    B, S = 1, 12
+    u = 0.5 * jax.random.normal(jax.random.PRNGKey(2), (B, S, cfg.d_model))
+    y_chunked, st = ssm.ssd_forward(p, cfg, u, return_state=True)
+    # naive: decode step by step (uses the conv ring cache)
+    kconv = p["conv_w"].shape[0]
+    state = {"ssm": jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim,
+                               cfg.ssm_state), jnp.float32),
+             "conv": jnp.zeros((B, kconv - 1, 2 * cfg.d_inner
+                                + 2 * cfg.ssm_state - cfg.d_inner),
+                               jnp.float32)}
+    # conv channel dim = d_inner + 2*ssm_state
+    state["conv"] = jnp.zeros((B, kconv - 1,
+                               cfg.d_inner + 2 * cfg.ssm_state), jnp.float32)
+    outs = []
+    for t in range(S):
+        y, state = ssm.ssd_decode_step(p, cfg, u[:, t:t + 1], state)
+        outs.append(np.array(y)[:, 0])
+    y_naive = np.stack(outs, axis=1)
+    np.testing.assert_allclose(np.array(y_chunked), y_naive, atol=2e-4,
+                               rtol=2e-3)
+    # final chunked state == final recurrent state
+    np.testing.assert_allclose(np.array(st["ssm"]), np.array(state["ssm"]),
+                               atol=2e-4, rtol=2e-3)
+
+
+def test_moe_capacity_drops_tokens_when_tight(key):
+    cfg = _mini_cfg(family="moe", n_experts=4, top_k=2,
+                    capacity_factor=0.25, moe_group_size=16)
+    p = moe_lib.moe_init(key, cfg, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, 64))
+    y_tight, _ = moe_lib.moe_apply(p, cfg, x)
+    cfg_loose = dataclasses.replace(cfg, capacity_factor=8.0)
+    y_loose, _ = moe_lib.moe_apply(p, cfg_loose, x)
+    assert np.abs(np.array(y_tight - y_loose)).max() > 1e-4
+
+
+def test_moe_aux_loss_uniform_router_is_one(key):
+    """Switch aux loss == 1.0 for a perfectly uniform router."""
+    cfg = _mini_cfg(family="moe", n_experts=4, top_k=1,
+                    moe_group_size=32, capacity_factor=8.0)
+    p = moe_lib.moe_init(key, cfg, jnp.float32)
+    p = dict(p, router=jnp.zeros_like(p["router"]))  # uniform gates
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 16, 64))
+    _, aux = moe_lib.moe_apply(p, cfg, x)
+    # top-1 of equal gates is argmax-tie -> all tokens to expert 0:
+    # f = (1,0,0,0), p = 1/4 each -> aux = E * sum f*p = 4 * 1/4 = 1
+    assert 0.9 < float(aux) < 1.1
+
+
+def test_cross_entropy_matches_uniform(key):
+    logits = jnp.zeros((2, 5, 16))
+    targets = jnp.ones((2, 5), jnp.int32)
+    ce = layers.cross_entropy(logits, targets)
+    np.testing.assert_allclose(float(ce), np.log(16), rtol=1e-5)
+
+
+def test_rmsnorm_scale_invariance(key):
+    p = layers.rmsnorm_init(32, jnp.float32)
+    x = jax.random.normal(key, (2, 3, 32))
+    a = layers.rmsnorm(p, x)
+    b = layers.rmsnorm(p, 10.0 * x)
+    np.testing.assert_allclose(np.array(a), np.array(b), atol=1e-4)

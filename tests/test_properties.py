@@ -1,0 +1,109 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core.metrics import MetricsLog
+from repro.kernels import ops, ref
+from repro.models import xlstm
+
+hypothesis.settings.register_profile(
+    "ci", deadline=None, max_examples=25,
+    suppress_health_check=[hypothesis.HealthCheck.too_slow])
+hypothesis.settings.load_profile("ci")
+
+floats = st.floats(-10, 10, allow_nan=False, width=32)
+
+
+@hypothesis.given(
+    u=hnp.arrays(np.float32, (5, 33), elements=floats),
+    w=hnp.arrays(np.float32, (5,),
+                 elements=st.floats(0.015625, 10, width=32)),
+)
+def test_weighted_mean_convexity(u, w):
+    """Weighted mean lies within [min, max] per coordinate (convexity)."""
+    out = np.array(agg.weighted_mean(jnp.asarray(u), jnp.asarray(w)))
+    assert np.all(out <= u.max(axis=0) + 1e-4)
+    assert np.all(out >= u.min(axis=0) - 1e-4)
+
+
+@hypothesis.given(
+    u=hnp.arrays(np.float32, (4, 17), elements=floats),
+    w=hnp.arrays(np.float32, (4,), elements=st.floats(0.015625, 5, width=32)),
+    perm=st.permutations(range(4)),
+)
+def test_aggregation_permutation_invariant(u, w, perm):
+    """Server aggregation must not depend on buffer arrival order."""
+    perm = np.array(perm)
+    a = np.array(agg.weighted_mean(jnp.asarray(u), jnp.asarray(w)))
+    b = np.array(agg.weighted_mean(jnp.asarray(u[perm]),
+                                   jnp.asarray(w[perm])))
+    np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+@hypothesis.given(
+    x=hnp.arrays(np.float32, (3, 128),
+                 elements=st.floats(-100, 100, allow_nan=False, width=32)))
+def test_quantize_roundtrip_bound(x):
+    q, s = ops.quantize_int8(jnp.asarray(x))
+    xd = np.array(ops.dequantize_int8(q, s))
+    bound = np.array(s)[:, None] * 0.5 + 1e-5
+    assert np.all(np.abs(xd - x) <= bound)
+
+
+@hypothesis.given(tau=hnp.arrays(np.float32, (8,),
+                                 elements=st.floats(0, 50, width=32)),
+                  alpha=st.floats(0.125, 2.0, width=32))
+def test_staleness_weights_in_unit_interval(tau, alpha):
+    w = np.array(agg.staleness_poly(jnp.asarray(tau), alpha))
+    assert np.all((w > 0) & (w <= 1.0 + 1e-6))
+
+
+@hypothesis.given(acc=st.lists(st.floats(0, 1, width=32), min_size=2,
+                               max_size=60))
+def test_metrics_invariants(acc):
+    log = MetricsLog(target_accuracy=0.5, oscillation_thresholds=(0.05, 0.15))
+    for i, a in enumerate(acc):
+        log.record(round=i + 1, sim_time=float(i), accuracy=float(a),
+                   loss=1.0 - a, tx_bytes=i, rx_bytes=i, mean_staleness=0.0,
+                   max_staleness=0, nan_event=False)
+    tf, ts = log.t_f(), log.t_s()
+    if tf is not None and ts is not None:
+        assert ts >= tf  # can't stabilize before first reaching the target
+    osc = log.oscillations()
+    assert osc[0.15] <= osc[0.05]  # bigger threshold, fewer events
+    assert 0 <= osc[0.05] <= len(acc) - 1
+
+
+@hypothesis.given(
+    x=hnp.arrays(np.float32, (1, 12, 32),
+                 elements=st.floats(-2, 2, width=32)))
+def test_mlstm_parallel_equals_recurrent(x):
+    """The two mLSTM forms (parallel train path / recurrent decode path)
+    agree position-by-position — the xLSTM paper's core identity."""
+    n_heads = 2
+    p = xlstm.mlstm_init(jax.random.PRNGKey(0), 32, n_heads, jnp.float32)
+    par = np.array(xlstm.mlstm_parallel(p, jnp.asarray(x), n_heads))
+    state = xlstm.mlstm_state_init(1, 32, n_heads)
+    outs = []
+    for t in range(x.shape[1]):
+        o, state = xlstm.mlstm_decode(p, jnp.asarray(x[:, t:t + 1]), state,
+                                      n_heads)
+        outs.append(np.array(o)[:, 0])
+    rec = np.stack(outs, axis=1)
+    np.testing.assert_allclose(par, rec, atol=2e-4, rtol=2e-3)
+
+
+@hypothesis.given(
+    w=hnp.arrays(np.float32, (6,), elements=st.floats(0.125, 5, width=32)),
+    scale=st.floats(0.5, 2.0, width=32))
+def test_fedavg_scale_equivariance(w, scale):
+    """FedAvg(c*params) == c*FedAvg(params) — linearity of Eq. 6."""
+    u = np.linspace(-1, 1, 6 * 11).reshape(6, 11).astype(np.float32)
+    a = np.array(agg.weighted_mean(jnp.asarray(u * scale), jnp.asarray(w)))
+    b = np.array(agg.weighted_mean(jnp.asarray(u), jnp.asarray(w))) * scale
+    np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)

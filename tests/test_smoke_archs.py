@@ -1,0 +1,167 @@
+"""Per-architecture smoke tests (assignment contract): REDUCED variant of
+each family (<=4 layers, d_model<=512, <=4 experts) runs one forward/train
+step on CPU, asserting output shapes and no NaNs; plus the
+prefill+decode == full-forward consistency invariant for every family.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, INPUT_SHAPES, get_config, reduced_config
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+
+ARCH_IDS = list(ARCHS)
+
+
+def _batch(cfg, key, B=2, S=16):
+    batch = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = 0.1 * jax.random.normal(
+            key, (B, cfg.n_prefix_tokens, cfg.d_model))
+    if cfg.family == "audio":
+        batch["enc_frames"] = 0.1 * jax.random.normal(key,
+                                                      (B, S, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_validates(arch):
+    cfg = get_config(arch)
+    cfg.validate()
+    # exact assigned dimensions
+    assert cfg.name == arch
+    assert cfg.source  # every config cites its source
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_forward_and_train_step(arch, key):
+    cfg = reduced_config(ARCHS[arch])
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    loss, metrics = jax.jit(model.train_loss)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch}: NaN/inf loss"
+
+    step_fn, opt = make_train_step(model, cfg, lr=1e-2)
+    ostate = opt.init(params)
+    p2, o2, m2 = jax.jit(step_fn)(params, ostate, batch, jnp.int32(0))
+    # params actually moved and stayed finite
+    moved = jax.tree_util.tree_map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), params, p2)
+    assert max(jax.tree_util.tree_leaves(moved)) > 0
+    for leaf in jax.tree_util.tree_leaves(p2):
+        assert np.all(np.isfinite(np.asarray(leaf, np.float32)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_decode_matches_forward(arch, key):
+    """decode_step(prefill(S), token_S) == prefill(S+1) last logits."""
+    cfg = reduced_config(ARCHS[arch])
+    if cfg.family == "moe":
+        # eliminate capacity-based token dropping (batch-composition
+        # dependent by construction) so the comparison is exact
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    if cfg.family == "hybrid":
+        cfg = dataclasses.replace(cfg, ssm_chunk=8)
+    model = build_model(cfg)
+    params = model.init(key)
+    B, S = 2, 16
+    full = _batch(cfg, key, B, S + 1)
+    if cfg.family == "audio":  # encoder memory must be identical
+        enc = full["enc_frames"]
+        pre = {"tokens": full["tokens"][:, :S], "enc_frames": enc}
+    elif cfg.family == "vlm":
+        pre = {"tokens": full["tokens"][:, :S],
+               "prefix_embeds": full["prefix_embeds"]}
+    else:
+        pre = {"tokens": full["tokens"][:, :S]}
+
+    lg_full, _ = jax.jit(model.prefill)(params, full)
+    if cfg.family == "ssm":
+        lg_pre, cache = jax.jit(model.prefill)(params, pre)
+    else:
+        cap = S + 2 + (cfg.n_prefix_tokens if cfg.family == "vlm" else 0)
+        lg_pre, cache = jax.jit(
+            lambda p, b: model.prefill(p, b, capacity=cap))(params, pre)
+    pos = S + (cfg.n_prefix_tokens if cfg.family == "vlm" else 0)
+    lg_dec, _ = jax.jit(model.decode_step)(
+        params, cache, full["tokens"][:, S], jnp.int32(pos))
+    err = float(np.abs(np.array(lg_full - lg_dec)).max())
+    assert err < 2e-3, f"{arch}: decode diverges from forward by {err}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_shapes_and_finiteness(arch, key):
+    cfg = reduced_config(ARCHS[arch])
+    model = build_model(cfg)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    logits, cache = (jax.jit(model.prefill)(params, batch)
+                     if cfg.family == "ssm" else
+                     jax.jit(lambda p, b: model.prefill(p, b, capacity=32))(
+                         params, batch))
+    assert logits.shape == (2, cfg.padded_vocab)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos = jnp.int32(16 + (cfg.n_prefix_tokens if cfg.family == "vlm" else 0))
+    lg2, cache2 = jax.jit(model.decode_step)(params, cache, tok, pos)
+    assert lg2.shape == (2, cfg.padded_vocab)
+    assert np.all(np.isfinite(np.asarray(lg2, np.float32)))
+
+
+def test_long_decode_skip_policy():
+    """The one sanctioned skip: enc-dec audio x long_500k (DESIGN.md §4)."""
+    skips = [a for a in ARCH_IDS
+             if not get_config(a).supports_long_decode]
+    assert skips == ["seamless-m4t-medium"]
+
+
+@pytest.mark.parametrize("arch", ["starcoder2-3b", "qwen3-1.7b"])
+def test_sliding_window_ring_decode(arch, key):
+    """Windowed ring-buffer decode == full-cache decode when the window
+    covers the whole history."""
+    cfg = dataclasses.replace(reduced_config(ARCHS[arch]),
+                              sliding_window=None)
+    model = build_model(cfg)
+    params = model.init(key)
+    B, S, W = 2, 12, 16  # window larger than history -> identical
+    batch = _batch(cfg, key, B, S)
+    _, cache = jax.jit(lambda p, b: model.prefill(p, b, capacity=W))(
+        params, batch)
+    tok = jnp.zeros((B,), jnp.int32)
+    lg_full, _ = jax.jit(
+        lambda p, c, t: model.decode_step(p, c, t, jnp.int32(S)))(
+            params, cache, tok)
+    lg_ring, _ = jax.jit(
+        lambda p, c, t: model.decode_step(p, c, t, jnp.int32(S), window=W))(
+            params, cache, tok)
+    np.testing.assert_allclose(np.array(lg_full), np.array(lg_ring),
+                               atol=2e-4, rtol=1e-3)
+
+
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "granite-moe-1b-a400m"])
+def test_unrolled_decode_matches_scan(arch, key):
+    """scan_layers=False (the §Perf serving path: per-layer cache leaves,
+    in-place updates) must produce identical logits to the scanned path."""
+    cfg = dataclasses.replace(reduced_config(ARCHS[arch]),
+                              capacity_factor=8.0)
+    cfg_u = dataclasses.replace(cfg, scan_layers=False)
+    m_s = build_model(cfg)
+    m_u = build_model(cfg_u)
+    params = m_s.init(key)
+    B, S = 2, 12
+    batch = _batch(cfg, key, B, S)
+    lg_s, cache_s = jax.jit(lambda p, b: m_s.prefill(p, b, capacity=16))(
+        params, batch)
+    lg_u, cache_u = jax.jit(lambda p, b: m_u.prefill(p, b, capacity=16))(
+        params, batch)
+    np.testing.assert_allclose(np.array(lg_s), np.array(lg_u), atol=1e-5)
+    tok = jnp.argmax(lg_s, -1).astype(jnp.int32)
+    d_s, _ = jax.jit(m_s.decode_step)(params, cache_s, tok, jnp.int32(S))
+    d_u, _ = jax.jit(m_u.decode_step)(params, cache_u, tok, jnp.int32(S))
+    np.testing.assert_allclose(np.array(d_s), np.array(d_u), atol=1e-4,
+                               rtol=1e-4)

@@ -1,0 +1,66 @@
+"""End-to-end behaviour tests: the paper's qualitative findings emerge from
+the system (reduced scale), and the big-model train path optimizes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced_config
+from repro.configs.base import FLConfig
+from repro.core import FLEngine
+from repro.data import build_client_shards, make_dataset, train_test_split
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.models.vision_cnn import build_paper_model
+
+
+def test_reduced_arch_training_reduces_loss(key):
+    cfg = reduced_config(ARCHS["qwen3-1.7b"])
+    model = build_model(cfg)
+    params = model.init(key)
+    step_fn, opt = make_train_step(model, cfg, lr=5e-3)
+    ostate = opt.init(params)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32),
+                                          0, cfg.vocab_size)}
+    jstep = jax.jit(step_fn)
+    losses = []
+    for i in range(8):
+        params, ostate, m = jstep(params, ostate, batch, jnp.int32(i))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+@pytest.fixture(scope="module")
+def fl_setup():
+    ds = make_dataset("cifar10", n=900, seed=1, hw=16)
+    tr, te = train_test_split(ds)
+    shards = build_client_shards(tr, "hetero_dirichlet", n_clients=12,
+                                 batch_size=32, alpha=0.3)
+    p0, s0, apply_fn = build_paper_model("cnn", jax.random.PRNGKey(0),
+                                         width=4, image_size=16)
+    return shards, te, p0, s0, apply_fn
+
+
+def _run(fl_setup, mode, aggregation, rounds=14, seed=0):
+    shards, te, p0, s0, apply_fn = fl_setup
+    cfg = FLConfig(n_clients=12, k=4, mode=mode, aggregation=aggregation,
+                   client_lr=0.05,
+                   server_lr=0.05 if aggregation != "fedavg" else 1.0,
+                   target_accuracy=0.35, speed_sigma=0.8, seed=seed)
+    eng = FLEngine(cfg, apply_fn, "image", p0, s0, shards,
+                   te.x[:250], te.y[:250])
+    return eng.run(rounds).metrics.summary()
+
+
+@pytest.mark.slow
+def test_paper_qualitative_findings(fl_setup):
+    """The headline orderings of the paper, at CI scale:
+       (1) SFL accuracy >= SAFL accuracy (same target),
+       (2) FedSGD transmits less than FedAvg,
+       (3) SAFL exhibits staleness, SFL none."""
+    ss = _run(fl_setup, "sync", "fedsgd")
+    as_ = _run(fl_setup, "semi_async", "fedsgd")
+    aa = _run(fl_setup, "semi_async", "fedavg")
+    assert ss["best_accuracy"] >= as_["best_accuracy"] - 0.05
+    assert as_["tx_GB"] < aa["tx_GB"]
+    assert as_["mean_staleness"] > 0 and ss["mean_staleness"] == 0
