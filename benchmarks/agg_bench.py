@@ -1,0 +1,151 @@
+"""Server-aggregation benchmark: seed tree_map/stack path vs flat buffer.
+
+Times one server round both ways on the same host, over K in {8, 16, 64}
+buffered updates and D in {1M, 4M} parameters:
+
+  * ``seed``: the pre-refactor ``FLEngine._aggregate`` hot path — restack
+    every leaf of K update pytrees with ``tree_map`` + ``jnp.stack``, then
+    the eager per-leaf weighted reduction + server step (one XLA dispatch
+    chain per leaf, K+1 HBM copies of the model).
+  * ``flat``: the flat-buffer path — ONE jitted donating server program
+    (:class:`repro.core.aggregation.FlatServer`) over the preallocated
+    (K, D) buffer, plus the per-round unravel back to the model pytree.
+
+Writes machine-readable ``BENCH_agg.json`` (rounds/sec and µs/aggregation
+for both paths per grid point) so the perf trajectory is tracked across
+PRs, and prints both numbers per point.
+
+    PYTHONPATH=src python -m benchmarks.agg_bench
+"""
+from __future__ import annotations
+
+import json
+import multiprocessing
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core import flatbuf
+
+KS = (8, 16, 64)
+DS = (1 << 20, 1 << 22)  # 1M, 4M
+SERVER_LR = 0.05
+OUT_PATH = "BENCH_agg.json"
+
+
+def _leaf_shapes(d: int, n_leaves: int = 48):
+    """Split D into a realistic mix of matrix/vector leaves (a CNN/LSTM
+    pytree is dozens of heterogeneous leaves, not one big vector)."""
+    sizes = []
+    rest = d
+    rng = np.random.default_rng(0)
+    for i in range(n_leaves - 1):
+        frac = float(rng.uniform(0.5, 1.5)) / n_leaves
+        s = max(16, int(d * frac))
+        s = min(s, rest - (n_leaves - 1 - i) * 16)
+        sizes.append(s)
+        rest -= s
+    sizes.append(rest)
+    shapes = []
+    for s in sizes:
+        r = int(np.sqrt(s))
+        shapes.append((r, s // r) if r > 1 and s % r == 0 else (s,))
+    return shapes
+
+
+def _make_tree(shapes, key, scale=1.0):
+    ks = jax.random.split(key, len(shapes))
+    return {f"l{i:03d}": jax.random.normal(k, s, jnp.float32) * scale
+            for i, (s, k) in enumerate(zip(shapes, ks))}
+
+
+def _block(tree):
+    for leaf in jax.tree_util.tree_leaves(tree):
+        leaf.block_until_ready()
+
+
+def _time_rounds(fn, iters):
+    fn()  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6  # us/round
+
+
+def bench_point(K: int, d: int) -> dict:
+    shapes = _leaf_shapes(d)
+    d = int(sum(int(np.prod(s)) for s in shapes))
+    params = _make_tree(shapes, jax.random.PRNGKey(0))
+    grads = [_make_tree(shapes, jax.random.PRNGKey(i + 1), 0.01)
+             for i in range(K)]
+    w = jnp.ones((K,), jnp.float32)
+    # keep per-point wall time bounded: ~2 GB of touched bytes per pass
+    iters = max(3, min(20, int(2e9 / ((K + 2) * d * 4))))
+
+    # --- seed path: per-round tree_map+stack + eager per-leaf reduction ---
+    def seed_round():
+        stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *grads)
+        out = agg.fedsgd(params, stacked, w, SERVER_LR)
+        _block(out)
+
+    seed_us = _time_rounds(seed_round, iters)
+
+    # --- flat path: one jitted donating program over the (K, D) buffer ---
+    codec = flatbuf.PytreeCodec(params)
+    srv = agg.FlatServer("fedsgd", codec.d, server_lr=SERVER_LR)
+    buf = jnp.asarray(np.stack(
+        [np.concatenate([np.ravel(np.asarray(l)) for l in
+                         jax.tree_util.tree_leaves(g)]) for g in grads]))
+    state = {"p": codec.ravel(params), "opt": srv.init_opt(codec.ravel(params))}
+
+    def flat_round():
+        state["p"], state["opt"], _ = srv.step(state["p"], buf, w,
+                                               state["opt"])
+        tree = codec.unravel(state["p"])
+        _block(tree)
+
+    flat_us = _time_rounds(flat_round, iters)
+    # -1 = compile count unavailable on this jax version, not a recompile
+    assert srv.compile_count in (1, -1), \
+        "flat server recompiled during bench"
+
+    return {"K": K, "D": d, "n_leaves": len(shapes), "iters": iters,
+            "seed_us_per_agg": round(seed_us, 1),
+            "flat_us_per_agg": round(flat_us, 1),
+            "seed_rounds_per_sec": round(1e6 / seed_us, 2),
+            "flat_rounds_per_sec": round(1e6 / flat_us, 2),
+            "speedup": round(seed_us / flat_us, 2)}
+
+
+def main() -> dict:
+    entries = []
+    print("# Server aggregation: seed tree_map/stack vs flat-buffer "
+          "jitted program (same host)")
+    print("K,D,seed_us,flat_us,seed_rounds_per_sec,flat_rounds_per_sec,"
+          "speedup")
+    for d in DS:
+        for K in KS:
+            e = bench_point(K, d)
+            entries.append(e)
+            print(f"{e['K']},{e['D']},{e['seed_us_per_agg']},"
+                  f"{e['flat_us_per_agg']},{e['seed_rounds_per_sec']},"
+                  f"{e['flat_rounds_per_sec']},{e['speedup']}x",
+                  flush=True)
+    report = {
+        "benchmark": "server_aggregation",
+        "backend": jax.default_backend(),
+        "cpu_count": multiprocessing.cpu_count(),
+        "server_lr": SERVER_LR,
+        "entries": entries,
+    }
+    with open(OUT_PATH, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"# wrote {OUT_PATH}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

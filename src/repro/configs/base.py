@@ -203,3 +203,7 @@ class FLConfig:
         assert 1 <= self.k <= self.n_clients
         assert self.aggregation in (
             "fedsgd", "fedavg", "sdga", "fedasync", "fedbuff", "fedopt")
+        # an upload period must contain at least one local epoch; 0 would
+        # make the client loop a no-op with no loss/update to report
+        assert self.local_epochs >= 1, "local_epochs must be >= 1"
+        assert self.local_batch_size >= 1

@@ -175,6 +175,140 @@ def sdga(global_params: Pytree, grads_stacked: Pytree,
 
 
 # ---------------------------------------------------------------------------
+# flat-buffer server program (the engine hot path)
+# ---------------------------------------------------------------------------
+
+
+class FlatServer:
+    """One jitted, donating server round over a flat (K, D) update buffer.
+
+    Replaces the per-leaf ``tree_map`` + ``jnp.stack`` aggregation: the
+    engine keeps client updates raveled in a preallocated (K, D) device
+    buffer (:mod:`repro.core.flatbuf`) and every round runs ONE compiled
+    XLA program that fuses the staleness discount, the K-way weighted
+    reduction, the server step (SGD / Adam / SDGA momentum+EMA) and the
+    update-norm metric.  ``params`` and the slow server state are donated,
+    so steady-state rounds allocate nothing.
+
+    Backend (see :func:`repro.kernels.safl_agg.default_backend`): the
+    compiled Pallas kernels on TPU, the jnp oracle (same math, XLA-fused)
+    on CPU; ``pallas_interpret`` forces the kernel bodies through the
+    interpreter for validation.
+
+    Modes: fedsgd / fedavg / fedbuff / fedopt / sdga.  The per-update
+    ``fedasync`` mixing is not a buffered reduction and stays on the tree
+    path.  The weight-input vector ``wvec`` is per-mode: unit weights
+    (fedsgd), data sizes (fedavg), staleness tau (fedbuff / fedopt / sdga —
+    discounted in-program).
+    """
+
+    MODES = ("fedsgd", "fedavg", "fedbuff", "fedopt", "sdga")
+
+    def __init__(self, mode: str, d: int, *, server_lr: float,
+                 alpha: float = 0.5, momentum: float = 0.8,
+                 ema_anchor: float = 0.05, ema_decay: float = 0.95,
+                 b1: float = 0.9, b2: float = 0.99, eps: float = 1e-8,
+                 backend: Optional[str] = None,
+                 block_d: Optional[int] = None):
+        from repro.kernels import ref as _ref
+        from repro.kernels import safl_agg as _k
+
+        assert mode in self.MODES, mode
+        self.mode = mode
+        self.d = d
+        self.backend = backend or _k.default_backend()
+        assert self.backend in ("pallas", "pallas_interpret", "xla")
+        use_pallas = self.backend != "xla"
+        interpret = self.backend == "pallas_interpret"
+        bd = block_d or _k.BLOCK_D
+
+        def discounted(wvec):
+            if mode in ("fedbuff", "fedopt", "sdga"):
+                return staleness_poly(wvec, alpha)
+            return wvec.astype(jnp.float32)
+
+        def _step(params, buf, wvec, opt):
+            p0 = params.astype(jnp.float32)
+            if mode in ("fedsgd", "fedavg", "fedbuff"):
+                if use_pallas:
+                    kmode = "avg" if mode == "fedavg" else "fedsgd"
+                    disc = "poly" if mode == "fedbuff" else "none"
+                    new = _k.safl_aggregate(
+                        buf, wvec, None if mode == "fedavg" else params,
+                        server_lr=server_lr, mode=kmode, block_d=bd,
+                        interpret=interpret, alpha=alpha, discount=disc)
+                else:
+                    w = discounted(wvec)
+                    if mode == "fedavg":
+                        new = _ref.weighted_avg_ref(buf, w)
+                    else:
+                        new = _ref.safl_agg_ref(buf, w, params, server_lr)
+                new_opt = opt
+            elif mode == "sdga":
+                if use_pallas:
+                    new, m, e = _k.sdga_aggregate(
+                        buf, wvec, params, opt["momentum"], opt["ema"],
+                        server_lr=server_lr, alpha=alpha, momentum=momentum,
+                        ema_anchor=ema_anchor, ema_decay=ema_decay,
+                        block_d=bd, interpret=interpret)
+                else:
+                    new, m, e = _ref.sdga_flat_ref(
+                        buf, wvec, params, opt["momentum"], opt["ema"],
+                        server_lr=server_lr, alpha=alpha, momentum=momentum,
+                        ema_anchor=ema_anchor, ema_decay=ema_decay)
+                new_opt = {"momentum": m, "ema": e,
+                           "step": opt["step"] + 1}
+            else:  # fedopt: server Adam over the discounted gradient mean
+                w = discounted(wvec)
+                wsum = jnp.maximum(jnp.sum(w), 1e-12)
+                g = jnp.einsum("k,kd->d", w,
+                               buf.astype(jnp.float32)) / wsum
+                step = opt["step"] + 1
+                m = b1 * opt["m"] + (1 - b1) * g
+                v = b2 * opt["v"] + (1 - b2) * jnp.square(g)
+                sf = step.astype(jnp.float32)
+                mh = m / (1 - jnp.power(b1, sf))
+                vh = v / (1 - jnp.power(b2, sf))
+                new = (p0 - server_lr * mh / (jnp.sqrt(vh) + eps)
+                       ).astype(params.dtype)
+                new_opt = {"m": m, "v": v, "step": step}
+            upd = new.astype(jnp.float32) - p0
+            metrics = {"update_norm": jnp.sqrt(jnp.sum(jnp.square(upd))),
+                       "weight_sum": jnp.sum(discounted(wvec))}
+            return new, new_opt, metrics
+
+        # donate params + slow state: steady-state rounds run in place
+        self._fn = jax.jit(_step, donate_argnums=(0, 3))
+
+    def init_opt(self, params_flat: jax.Array):
+        """Mode-matched slow state (flat f32 vectors, donated each round)."""
+        z = lambda: jnp.zeros((self.d,), jnp.float32)
+        if self.mode == "sdga":
+            # explicit copy: params and opt are donated separately, so the
+            # EMA must not alias the params buffer (f32 astype is a no-op)
+            return {"momentum": z(),
+                    "ema": jnp.array(params_flat, jnp.float32, copy=True),
+                    "step": jnp.zeros((), jnp.int32)}
+        if self.mode == "fedopt":
+            return {"m": z(), "v": z(), "step": jnp.zeros((), jnp.int32)}
+        return {}
+
+    def step(self, params_flat, buf, wvec, opt):
+        """(D,) params, (K, D) buffer, (K,) weight-input, opt ->
+        (new params, new opt, {update_norm, weight_sum})."""
+        return self._fn(params_flat, buf, wvec, opt)
+
+    @property
+    def compile_count(self) -> int:
+        """Number of XLA compilations of the server program (the recompile
+        guard: must stay 1 across rounds)."""
+        try:
+            return int(self._fn._cache_size())
+        except AttributeError:  # pragma: no cover - older/newer jax
+            return -1
+
+
+# ---------------------------------------------------------------------------
 # mesh-level FL step (the technique as a first-class pjit feature)
 # ---------------------------------------------------------------------------
 

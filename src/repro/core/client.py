@@ -69,23 +69,12 @@ def make_loss_fn(apply_fn: Callable, kind: str):
 _FN_CACHE: Dict = {}
 
 
-def make_local_train(apply_fn: Callable, kind: str):
-    """Returns jitted ``epoch(params, state, xs, ys, mask, lr)``.
-
-    xs: (n_batches, B, ...); ys likewise; mask (n_batches, B) marks real
-    samples (padding batches have mask 0 and are no-ops).
-    Returns (params', state', mean_loss).
-
-    Memoized on (apply_fn, kind) so multiple engines over the same model
-    share one XLA program (jit caches by function identity).
-    """
-    key = ("train", apply_fn, kind)
-    if key in _FN_CACHE:
-        return _FN_CACHE[key]
+def _make_epoch_body(apply_fn: Callable, kind: str):
+    """Unjitted one-epoch body (the shared core of the sequential and the
+    vmapped-batched client paths — identical numerics by construction)."""
     loss_fn = make_loss_fn(apply_fn, kind)
     vg = jax.value_and_grad(loss_fn, has_aux=True)
 
-    @jax.jit
     def epoch(params, model_state, xs, ys, mask, lr):
         def step(carry, batch):
             p, s = carry
@@ -103,8 +92,69 @@ def make_local_train(apply_fn: Callable, kind: str):
         n_valid = jnp.maximum(jnp.sum(jnp.any(mask > 0, axis=1)), 1)
         return p, s, jnp.sum(losses) / n_valid
 
+    return epoch
+
+
+def make_local_train(apply_fn: Callable, kind: str):
+    """Returns jitted ``epoch(params, state, xs, ys, mask, lr)``.
+
+    xs: (n_batches, B, ...); ys likewise; mask (n_batches, B) marks real
+    samples (padding batches have mask 0 and are no-ops).
+    Returns (params', state', mean_loss).
+
+    Memoized on (apply_fn, kind) so multiple engines over the same model
+    share one XLA program (jit caches by function identity).
+    """
+    key = ("train", apply_fn, kind)
+    if key in _FN_CACHE:
+        return _FN_CACHE[key]
+    epoch = jax.jit(_make_epoch_body(apply_fn, kind))
     _FN_CACHE[key] = epoch
     return epoch
+
+
+def make_batched_local_train(apply_fn: Callable, kind: str,
+                             target: str, local_epochs: int):
+    """One vmapped XLA program for a whole SFL round of K same-shape
+    clients: all K start from the broadcast global model, so only the shard
+    data is batched.  Emits the raveled (K, D) flat update buffer directly
+    (``target="grad"``: cumulative gradient (w0 - w_end)/lr per Eq. 3;
+    ``target="params"``: final local weights), plus the K-stacked final
+    model states and per-client losses — no per-client Python dispatch, no
+    per-leaf restacking.
+
+    Memoized on (apply_fn, kind, target, local_epochs) so engines over the
+    same model share one XLA program.
+    """
+    key = ("batched", apply_fn, kind, target, local_epochs)
+    if key in _FN_CACHE:
+        return _FN_CACHE[key]
+    epoch = _make_epoch_body(apply_fn, kind)
+
+    @jax.jit
+    def round_fn(params, model_state, xs_k, ys_k, mask_k, lr):
+        def per_client(xs, ys, mask):
+            p, s = params, model_state
+            loss = jnp.float32(0.0)
+            for _ in range(local_epochs):
+                p, s, loss = epoch(p, s, xs, ys, mask, lr)
+            if target == "grad":
+                leaves0 = jax.tree_util.tree_leaves(params)
+                leaves1 = jax.tree_util.tree_leaves(p)
+                vec = jnp.concatenate(
+                    [(jnp.ravel(a).astype(jnp.float32)
+                      - jnp.ravel(b).astype(jnp.float32)) / lr
+                     for a, b in zip(leaves0, leaves1)])
+            else:
+                vec = jnp.concatenate(
+                    [jnp.ravel(l).astype(jnp.float32)
+                     for l in jax.tree_util.tree_leaves(p)])
+            return vec, s, loss
+
+        return jax.vmap(per_client)(xs_k, ys_k, mask_k)
+
+    _FN_CACHE[key] = round_fn
+    return round_fn
 
 
 def cumulative_gradient(w_start: Pytree, w_end: Pytree, lr: float) -> Pytree:

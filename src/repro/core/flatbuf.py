@@ -1,0 +1,90 @@
+"""Flat (K, D) update-buffer codec — flatten-once / unravel-cached.
+
+The server round is a K-way weighted reduction over *flat* vectors; keeping
+client updates as pytrees forces the engine to re-stack every leaf with
+``tree_map`` + ``jnp.stack`` each round (K+1 HBM copies of the model, one
+XLA dispatch per leaf).  This module fixes the layout once at engine
+construction:
+
+  * :class:`PytreeCodec` records the treedef / shapes / dtypes of the model
+    pytree and provides jitted ``ravel`` (tree -> (D,) f32) and ``unravel``
+    ((D,) -> tree) programs, compiled one time and reused every upload.
+  * :func:`alloc_buffer` preallocates the (K, D) device buffer.
+  * :func:`write_slot` writes one raveled update into a buffer row with the
+    buffer argument *donated*, so XLA updates the row in place — uploads
+    never reallocate the K x D backing store.
+
+Everything downstream (:class:`repro.core.aggregation.FlatServer`, the
+fused Pallas kernels in :mod:`repro.kernels.safl_agg`) operates on the
+(K, D) buffer directly.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+class PytreeCodec:
+    """Bidirectional pytree <-> flat (D,) f32 vector codec.
+
+    Built once from a template pytree; ``ravel``/``unravel``/``ravel_delta``
+    are jitted closures over the static layout, so every call after the
+    first reuses one XLA program.
+    """
+
+    def __init__(self, template: Pytree):
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        self.treedef = treedef
+        self.shapes: List[Tuple[int, ...]] = [l.shape for l in leaves]
+        self.dtypes = [l.dtype for l in leaves]
+        self.sizes = [int(np.prod(s)) if s else 1 for s in self.shapes]
+        self.offsets = np.concatenate([[0], np.cumsum(self.sizes)])
+        self.d = int(self.offsets[-1])
+
+        def _ravel(tree: Pytree) -> jax.Array:
+            ls = jax.tree_util.tree_leaves(tree)
+            return jnp.concatenate(
+                [jnp.ravel(l).astype(jnp.float32) for l in ls])
+
+        def _ravel_delta(start: Pytree, end: Pytree, scale) -> jax.Array:
+            """ravel((start - end) / scale) — FedSGD's cumulative gradient
+            (client.cumulative_gradient) fused with the flatten."""
+            a = jax.tree_util.tree_leaves(start)
+            b = jax.tree_util.tree_leaves(end)
+            return jnp.concatenate(
+                [(jnp.ravel(x).astype(jnp.float32)
+                  - jnp.ravel(y).astype(jnp.float32)) / scale
+                 for x, y in zip(a, b)])
+
+        def _unravel(flat: jax.Array) -> Pytree:
+            parts = []
+            for i, (shape, dtype) in enumerate(zip(self.shapes, self.dtypes)):
+                seg = jax.lax.slice(flat, (int(self.offsets[i]),),
+                                    (int(self.offsets[i + 1]),))
+                parts.append(seg.reshape(shape).astype(dtype))
+            return jax.tree_util.tree_unflatten(self.treedef, parts)
+
+        self.ravel = jax.jit(_ravel)
+        self.ravel_delta = jax.jit(_ravel_delta)
+        self.unravel = jax.jit(_unravel)
+        # vmapped ravel: (K-leading stacked tree) -> (K, D) buffer in one call
+        self.ravel_stacked = jax.jit(jax.vmap(_ravel))
+
+
+def alloc_buffer(k: int, d: int) -> jax.Array:
+    """Preallocate the (K, D) f32 device update buffer."""
+    return jnp.zeros((k, d), jnp.float32)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def write_slot(buf: jax.Array, vec: jax.Array, slot: jax.Array) -> jax.Array:
+    """buf[slot] <- vec, in place (buf is donated; slot is traced so every
+    upload reuses one compiled program)."""
+    return jax.lax.dynamic_update_slice(
+        buf, vec.astype(buf.dtype)[None], (slot, jnp.int32(0)))

@@ -27,6 +27,9 @@ class RoundRecord:
     mean_staleness: float
     max_staleness: int
     nan_event: bool
+    # L2 norm of the applied global-model delta (computed inside the fused
+    # server program; 0.0 for paths that don't report it)
+    update_norm: float = 0.0
 
 
 class MetricsLog:

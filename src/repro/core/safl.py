@@ -7,16 +7,24 @@ program for every client (shards padded to a common batch count).
 
 Synchronous (SFL, Fig. 1a): each round the server activates K random
 clients, waits for all of them (round time = slowest active client — the
-straggler effect), aggregates, broadcasts.
+straggler effect), aggregates, broadcasts.  The K same-shape clients run as
+ONE vmapped XLA program (client.make_batched_local_train) that emits the
+raveled (K, D) update buffer directly.
 
 Semi-asynchronous (SAFL, Fig. 1b): clients train continuously at their own
 pace and upload after each local epoch; the server aggregates as soon as K
 updates are buffered and broadcasts; a client adopts the newest global model
 at its next upload boundary, otherwise continues training its local one —
-so buffered updates carry staleness τ = t_now − t_client_version.
+so buffered updates carry staleness τ = t_now − t_client_version.  Each
+upload is raveled (flatbuf.PytreeCodec) and written into its slot of the
+preallocated (K, D) device buffer with the buffer donated (in-place row
+write).
 
-Both aggregation targets (FedSGD gradients / FedAvg weights) and the
-staleness-aware variants are provided by :mod:`repro.core.aggregation`.
+The server round itself is ONE jitted, donating program
+(:class:`repro.core.aggregation.FlatServer` — fused staleness discount +
+weighted reduction + server step + update-norm metric, Pallas-backed on
+TPU) for every buffered-reduction aggregator (fedsgd / fedavg / fedbuff /
+fedopt / sdga); only fedasync's per-update mixing stays on the pytree path.
 """
 from __future__ import annotations
 
@@ -30,8 +38,10 @@ import numpy as np
 
 from repro.core import aggregation as agg
 from repro.core import compression
+from repro.core import flatbuf
 from repro.core.client import (ClientState, cumulative_gradient,
-                               make_eval_fn, make_local_train, pytree_bytes)
+                               make_batched_local_train, make_eval_fn,
+                               make_local_train, pytree_bytes)
 from repro.core.metrics import MetricsLog
 
 Pytree = Any
@@ -82,7 +92,6 @@ class FLEngine:
         self.global_params = init_params
         self.global_state = init_state
         self.t_global = 0
-        self.opt_state = agg.ServerOptState()
         self.rng = rng
 
         self.metrics = MetricsLog(fl_cfg.target_accuracy,
@@ -93,6 +102,24 @@ class FLEngine:
         self.idle_time = 0.0
         self._params_bytes = pytree_bytes(init_params)
         self._state_bytes = pytree_bytes(init_state)
+        self._last_update_norm = 0.0
+
+        # ---- flat-buffer server path ----
+        self.codec = flatbuf.PytreeCodec(init_params)
+        self._flat_params = self.codec.ravel(init_params)
+        self._flat = fl_cfg.aggregation in agg.FlatServer.MODES
+        if self._flat:
+            self._server = agg.FlatServer(
+                fl_cfg.aggregation, self.codec.d,
+                server_lr=fl_cfg.server_lr, alpha=fl_cfg.staleness_alpha,
+                momentum=fl_cfg.server_momentum or 0.8,
+                ema_anchor=fl_cfg.ema_anchor or 0.05)
+            self._opt = self._server.init_opt(self._flat_params)
+            self._buf = flatbuf.alloc_buffer(fl_cfg.k, self.codec.d)
+        else:
+            self._server = None
+            self._opt = None
+            self._buf = None
 
     # ------------------------------------------------------------------
     def _epoch_time(self, c: ClientState) -> float:
@@ -108,54 +135,67 @@ class FLEngine:
         """Run one local 'upload period' (local_epochs) for client c."""
         shard = self.shards[c.cid]
         params, state = c.params, c.model_state
+        loss = jnp.float32(0.0)
         for _ in range(self.cfg.local_epochs):
             params, state, loss = self.epoch_fn(
                 params, state, shard["xs"], shard["ys"], shard["mask"],
                 self.cfg.client_lr)
         return params, state, float(loss)
 
-    def _upload_payload(self, c: ClientState, w_end, s_end):
-        """Returns (payload, tx_bytes) per aggregation target."""
+    # ------------------------------------------------------------------
+    def _upload_nbytes(self) -> int:
+        """Channel cost of one (uncompressed) upload, per target."""
         if self.cfg.aggregation in ("fedavg", "fedasync"):
-            payload = {"params": w_end, "state": s_end,
+            return int((self._params_bytes + self._state_bytes)
+                       * (1 + _MODEL_ENVELOPE))
+        return int(self._params_bytes * (1 + _GRAD_ENVELOPE))
+
+    def _enqueue_upload(self, buffer: List[Dict], c: ClientState,
+                        w_end, s_end, staleness: int) -> None:
+        """Serialize one client upload.  Flat modes ravel the update and
+        write it into the buffer row for the next free slot (the buffer is
+        donated — an in-place device write); fedasync stashes the payload
+        pytree.  Must be called before ``c.params`` is refreshed (gradient
+        targets diff against the client's round-start weights)."""
+        cfg = self.cfg
+        entry: Dict = {"staleness": staleness, "cid": c.cid,
                        "n": c.n_samples}
-            nbytes = int((self._params_bytes + self._state_bytes)
-                         * (1 + _MODEL_ENVELOPE))
+        if cfg.aggregation == "fedasync":
+            entry["payload"] = {"params": w_end, "state": s_end}
+            nbytes = self._upload_nbytes()
+        elif cfg.aggregation == "fedavg":
+            vec = self.codec.ravel(w_end)
+            self._buf = flatbuf.write_slot(self._buf, vec,
+                                           jnp.int32(len(buffer)))
+            entry["state"] = s_end
+            nbytes = self._upload_nbytes()
         else:  # gradient targets: fedsgd, sdga, fedbuff, fedopt
-            grad = cumulative_gradient(c.params, w_end, self.cfg.client_lr)
-            if self.cfg.compress_updates:
+            if cfg.compress_updates:
                 # beyond-paper: int8 block quantization on the channel
                 # (kernels/quantize.py on TPU); dequantized server-side
+                grad = cumulative_gradient(c.params, w_end, cfg.client_lr)
                 qs, qbytes = compression.quantize_pytree(grad)
-                grad = compression.dequantize_pytree(qs)
+                vec = self.codec.ravel(compression.dequantize_pytree(qs))
                 nbytes = int(qbytes * (1 + _GRAD_ENVELOPE))
             else:
-                nbytes = int(self._params_bytes * (1 + _GRAD_ENVELOPE))
-            payload = {"grad": grad, "n": c.n_samples}
-        return payload, nbytes
+                vec = self.codec.ravel_delta(c.params, w_end,
+                                             cfg.client_lr)
+                nbytes = self._upload_nbytes()
+            self._buf = flatbuf.write_slot(self._buf, vec,
+                                           jnp.int32(len(buffer)))
+            entry["bn_state"] = s_end
+        self.tx_bytes += nbytes
+        buffer.append(entry)
 
     # ------------------------------------------------------------------
-    def _aggregate(self, buffer: List[Dict]) -> None:
+    def _aggregate(self, buffer: List[Dict],
+                   states_stacked: Optional[Pytree] = None) -> None:
         cfg = self.cfg
-        stale = jnp.asarray([b["staleness"] for b in buffer],
-                            dtype=jnp.float32)
         for b in buffer:
             s = int(b["staleness"])
             self.staleness_hist[s] = self.staleness_hist.get(s, 0) + 1
 
-        if cfg.aggregation == "fedavg":
-            stacked = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs),
-                *[b["payload"]["params"] for b in buffer])
-            sizes = jnp.asarray([b["payload"]["n"] for b in buffer],
-                                jnp.float32)
-            self.global_params = agg.fedavg(stacked, sizes)
-            states = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs),
-                *[b["payload"]["state"] for b in buffer])
-            if jax.tree_util.tree_leaves(states):
-                self.global_state = agg.weighted_mean(states, sizes)
-        elif cfg.aggregation == "fedasync":
+        if cfg.aggregation == "fedasync":
             for b in buffer:
                 a_tau = cfg.fedasync_alpha * float(
                     agg.staleness_poly(jnp.float32(b["staleness"]),
@@ -164,32 +204,41 @@ class FLEngine:
                     self.global_params, b["payload"]["params"],
                     jnp.float32(a_tau))
                 self.global_state = b["payload"]["state"]
+            self.t_global += 1
+            return
+
+        # flat-buffer path: ONE jitted donating program per round
+        if cfg.aggregation == "fedavg":
+            wvec = jnp.asarray([b["n"] for b in buffer], jnp.float32)
+        elif cfg.aggregation == "fedsgd":
+            wvec = jnp.ones((len(buffer),), jnp.float32)
+        else:  # staleness-discounted modes discount in-program
+            wvec = jnp.asarray([b["staleness"] for b in buffer],
+                               jnp.float32)
+        self._flat_params, self._opt, m = self._server.step(
+            self._flat_params, self._buf, wvec, self._opt)
+        self.global_params = self.codec.unravel(self._flat_params)
+        self._last_update_norm = float(m["update_norm"])
+
+        # non-trainable state (BN running stats) rides the tree path — it
+        # is tiny next to D and structurally heterogeneous
+        if cfg.aggregation == "fedavg":
+            if states_stacked is None and buffer and "state" in buffer[0]:
+                states_stacked = jax.tree_util.tree_map(
+                    lambda *xs: jnp.stack(xs),
+                    *[b["state"] for b in buffer])
+            if (states_stacked is not None
+                    and jax.tree_util.tree_leaves(states_stacked)):
+                sizes = jnp.asarray([b["n"] for b in buffer], jnp.float32)
+                self.global_state = agg.weighted_mean(states_stacked, sizes)
         else:
-            stacked = jax.tree_util.tree_map(
-                lambda *xs: jnp.stack(xs),
-                *[b["payload"]["grad"] for b in buffer])
-            if cfg.aggregation == "fedsgd":
-                w = jnp.ones((len(buffer),), jnp.float32)
-                self.global_params = agg.fedsgd(
-                    self.global_params, stacked, w, cfg.server_lr)
-            elif cfg.aggregation == "fedbuff":
-                self.global_params = agg.fedbuff(
-                    self.global_params, stacked, stale, cfg.server_lr,
-                    cfg.staleness_alpha)
-            elif cfg.aggregation == "fedopt":
-                w = agg.staleness_poly(stale, cfg.staleness_alpha)
-                self.global_params, self.opt_state = agg.fedopt_adam(
-                    self.global_params, stacked, w, self.opt_state,
-                    cfg.server_lr)
-            elif cfg.aggregation == "sdga":
-                self.global_params, self.opt_state = agg.sdga(
-                    self.global_params, stacked, stale, self.opt_state,
-                    server_lr=cfg.server_lr, alpha=cfg.staleness_alpha,
-                    momentum=cfg.server_momentum or 0.8,
-                    ema_anchor=cfg.ema_anchor or 0.05)
             # gradient targets adopt the newest buffered BN state
-            self.global_state = buffer[-1]["payload"].get(
-                "bn_state", self.global_state)
+            if states_stacked is not None:
+                self.global_state = jax.tree_util.tree_map(
+                    lambda s: s[-1], states_stacked)
+            else:
+                self.global_state = buffer[-1].get("bn_state",
+                                                   self.global_state)
         self.t_global += 1
 
     def _eval_and_record(self, now: float, stale_vals: Sequence[int]) -> None:
@@ -205,7 +254,7 @@ class FLEngine:
             tx_bytes=self.tx_bytes, rx_bytes=self.rx_bytes,
             mean_staleness=float(np.mean(stale_vals)) if stale_vals else 0.0,
             max_staleness=int(max(stale_vals)) if stale_vals else 0,
-            nan_event=nan_event)
+            nan_event=nan_event, update_norm=self._last_update_norm)
 
     # ------------------------------------------------------------------
     def run(self, n_rounds: int, log_every: int = 0) -> FLResult:
@@ -218,32 +267,56 @@ class FLEngine:
 
     # ----- SFL -----
     def _run_sync(self, n_rounds: int, log_every: int) -> None:
+        cfg = self.cfg
+        # the whole K-client round as one vmapped program (quantized
+        # channels still go client-by-client through the tree path)
+        batched = self._flat and not cfg.compress_updates
+        if batched:
+            target = "params" if cfg.aggregation == "fedavg" else "grad"
+            round_fn = make_batched_local_train(
+                self.apply_fn, self.kind, target, cfg.local_epochs)
         now = 0.0
         for _ in range(n_rounds):
-            active = self.rng.choice(len(self.clients), self.cfg.k,
+            active = self.rng.choice(len(self.clients), cfg.k,
                                      replace=False)
-            buffer = []
+            buffer: List[Dict] = []
             durations = []
-            for cid in active:
-                c = self.clients[cid]
-                c.params, c.model_state = self.global_params, self.global_state
-                c.version = self.t_global
-                w_end, s_end, _ = self._run_local(c)
-                payload, nbytes = self._upload_payload(c, w_end, s_end)
-                if self.cfg.aggregation not in ("fedavg", "fedasync"):
-                    payload["bn_state"] = s_end
-                self.tx_bytes += nbytes
-                buffer.append({"payload": payload, "staleness": 0,
-                               "cid": cid})
-                durations.append(self._epoch_time(c) + c.comm_time)
+            states_k = None
+            if batched:
+                xs_k = np.stack([self.shards[cid]["xs"] for cid in active])
+                ys_k = np.stack([self.shards[cid]["ys"] for cid in active])
+                mask_k = np.stack([self.shards[cid]["mask"]
+                                   for cid in active])
+                vecs, states_k, _losses = round_fn(
+                    self.global_params, self.global_state, xs_k, ys_k,
+                    mask_k, cfg.client_lr)
+                self._buf = vecs  # this round's (K, D) buffer
+                for cid in active:
+                    c = self.clients[cid]
+                    c.params, c.model_state = (self.global_params,
+                                               self.global_state)
+                    c.version = self.t_global
+                    self.tx_bytes += self._upload_nbytes()
+                    buffer.append({"staleness": 0, "cid": cid,
+                                   "n": c.n_samples})
+                    durations.append(self._epoch_time(c) + c.comm_time)
+            else:
+                for cid in active:
+                    c = self.clients[cid]
+                    c.params, c.model_state = (self.global_params,
+                                               self.global_state)
+                    c.version = self.t_global
+                    w_end, s_end, _ = self._run_local(c)
+                    self._enqueue_upload(buffer, c, w_end, s_end, 0)
+                    durations.append(self._epoch_time(c) + c.comm_time)
             round_t = max(durations) + self._agg_overhead()
             self.idle_time += sum(round_t - d for d in durations)
             now += round_t
-            self._aggregate(buffer)
+            self._aggregate(buffer, states_stacked=states_k)
             self._eval_and_record(now, [0] * len(buffer))
             if log_every and self.t_global % log_every == 0:
                 r = self.metrics.records[-1]
-                print(f"  [SFL-{self.cfg.aggregation}] round {r.round} "
+                print(f"  [SFL-{cfg.aggregation}] round {r.round} "
                       f"acc={r.accuracy:.4f} loss={r.loss:.4f}")
 
     # ----- SAFL -----
@@ -259,13 +332,8 @@ class FLEngine:
             now, cid = heapq.heappop(heap)
             c = self.clients[cid]
             w_end, s_end, _ = self._run_local(c)
-            payload, nbytes = self._upload_payload(c, w_end, s_end)
-            if self.cfg.aggregation not in ("fedavg", "fedasync"):
-                payload["bn_state"] = s_end
-            self.tx_bytes += nbytes
             staleness = self.t_global - c.version
-            buffer.append({"payload": payload, "staleness": staleness,
-                           "cid": cid})
+            self._enqueue_upload(buffer, c, w_end, s_end, staleness)
 
             # client-side model refresh (paper §2.2.2): adopt newest global
             # if one arrived since this client's version, else continue local

@@ -31,8 +31,11 @@ NEG_INF = -1e30
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, hd: int,
                   causal: bool):
     qi = pl.program_id(2)
-    q = q_ref[0, :, 0, :].astype(jnp.float32) / np.sqrt(hd)  # (BLOCK_Q, hd)
-    bq = q.shape[0]
+    # refs are (1, block, 1, hd) tiles; load fully and drop the unit dims —
+    # integer ref indices don't survive interpret-mode state discharge
+    q3 = q_ref[...].astype(jnp.float32) / np.sqrt(hd)
+    bq = q3.shape[1]
+    q = q3.reshape(bq, hd)  # (BLOCK_Q, hd)
     S = k_ref.shape[1]
     n_kv = S // block_k
     if causal:
@@ -46,10 +49,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, hd: int,
 
     def body(ki, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, pl.dslice(ki * block_k, block_k), 0,
-                            slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, pl.dslice(ki * block_k, block_k), 0,
-                            slice(None))).astype(jnp.float32)
+        idx = (pl.dslice(0, 1), pl.dslice(ki * block_k, block_k),
+               pl.dslice(0, 1), pl.dslice(0, hd))
+        k = pl.load(k_ref, idx).astype(jnp.float32).reshape(block_k, hd)
+        v = pl.load(v_ref, idx).astype(jnp.float32).reshape(block_k, hd)
         s = q @ k.T  # (BLOCK_Q, BLOCK_K)
         if causal:
             k_pos = ki * block_k + jax.lax.broadcasted_iota(
@@ -66,8 +69,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, hd: int,
     l0 = jnp.zeros((bq,), jnp.float32)
     a0 = jnp.zeros((bq, hd), jnp.float32)
     m, l, acc = jax.lax.fori_loop(0, n_kv_live, body, (m0, l0, a0))
-    o_ref[0, :, 0, :] = (acc / jnp.maximum(l, 1e-20)[:, None]).astype(
-        o_ref.dtype)
+    out = acc / jnp.maximum(l, 1e-20)[:, None]
+    o_ref[...] = out.reshape(1, bq, 1, hd).astype(o_ref.dtype)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,

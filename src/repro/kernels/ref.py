@@ -26,6 +26,33 @@ def weighted_avg_ref(updates: jax.Array, weights: jax.Array) -> jax.Array:
     return jnp.einsum("k,kd->d", w, updates.astype(jnp.float32)) / wsum
 
 
+def fedbuff_flat_ref(updates: jax.Array, staleness: jax.Array,
+                     params: jax.Array, server_lr: float,
+                     alpha: float = 0.5) -> jax.Array:
+    """Staleness-discounted buffered gradient step over a flat buffer:
+    weights (1+tau)^(-alpha), then the Eq. 4-5 server step."""
+    w = jnp.power(1.0 + staleness.astype(jnp.float32), -alpha)
+    return safl_agg_ref(updates, w, params, server_lr)
+
+
+def sdga_flat_ref(updates: jax.Array, staleness: jax.Array,
+                  params: jax.Array, mom: jax.Array, ema: jax.Array, *,
+                  server_lr: float, alpha: float = 0.5,
+                  momentum: float = 0.8, ema_anchor: float = 0.05,
+                  ema_decay: float = 0.95):
+    """Full SDGA round over a flat (K, D) buffer — oracle for
+    kernels.safl_agg.sdga_aggregate."""
+    w = jnp.power(1.0 + staleness.astype(jnp.float32), -alpha)
+    wsum = jnp.maximum(jnp.sum(w), 1e-12)
+    g = jnp.einsum("k,kd->d", w, updates.astype(jnp.float32)) / wsum
+    m_new = momentum * mom.astype(jnp.float32) + g
+    p = params.astype(jnp.float32)
+    e = ema.astype(jnp.float32)
+    p_new = p - server_lr * m_new + ema_anchor * (e - p)
+    e_new = ema_decay * e + (1.0 - ema_decay) * p_new
+    return p_new.astype(params.dtype), m_new, e_new
+
+
 def quantize_ref(x: jax.Array):
     """Blockwise int8 absmax quantization. x (R, B) -> (q s8, scales f32)."""
     scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,

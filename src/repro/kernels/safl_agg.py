@@ -1,21 +1,35 @@
-"""Fused SAFL aggregation kernel (pl.pallas_call + BlockSpec VMEM tiling).
+"""Fused SAFL aggregation kernels (pl.pallas_call + BlockSpec VMEM tiling).
 
 The paper's server round is a K-way weighted reduction over flat update
 vectors (K = buffer size, D = model size).  Done naively this is K+2 HBM
-passes (read each update, read params, write params); the fused kernel does
-one streaming pass: each grid step loads a (K, BLOCK_D) update tile + a
-(BLOCK_D,) param tile into VMEM, reduces over K in registers, applies the
-server step, writes the new param tile.
+passes (read each update, read params, write params) plus a K x D staging
+copy when the updates arrive as pytrees; the fused kernels do one streaming
+pass: each grid step loads a (K, BLOCK_D) update tile + (BLOCK_D,) state
+tiles into VMEM, reduces over K in registers, applies the server step,
+writes the new state tiles.
+
+Kernels:
+  * ``safl_aggregate`` — weighted mean (+ optional fused (1+tau)^-alpha
+    staleness discount) with an optional fused SGD server step.  Covers
+    fedsgd (unit weights), fedavg (data-size weights) and fedbuff
+    (staleness-discounted gradient mean).
+  * ``sdga_aggregate`` — the full SDGA server round in one pass: staleness
+    discount, weighted mean, server momentum, SGD step and EMA anchor, with
+    the new params / momentum / EMA emitted as three fused outputs.
 
 TPU sizing: BLOCK_D = 2048 lanes x K<=64 buffered updates x 4B = 512 KiB of
 VMEM per tile — comfortably inside the ~16 MiB v5e VMEM with double
 buffering.  The weight vector sits in SMEM (scalar-prefetch style, tiny).
 
+Backend selection (:func:`default_backend`): compiled Pallas on TPU,
+interpret-mode Pallas or the jnp oracle (:mod:`repro.kernels.ref`) on CPU —
+override with ``REPRO_AGG_BACKEND=pallas|pallas_interpret|xla``.
 Validated on CPU in interpret mode against repro.kernels.ref oracles.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -23,12 +37,34 @@ from jax.experimental import pallas as pl
 
 BLOCK_D = 2048
 
+# discount: how the (K,) weight-input vector becomes reduction weights
+#   "none" — use as-is (unit / data-size weights)
+#   "poly" — treat as staleness tau, apply (1 + tau)^(-alpha)  (Fig. 4)
+_DISCOUNTS = ("none", "poly")
+
+
+def default_backend() -> str:
+    """Platform auto-detect: compiled Pallas on TPU, jnp oracle elsewhere
+    (interpret-mode Pallas is a functional validator, not a fast path)."""
+    env = os.environ.get("REPRO_AGG_BACKEND")
+    if env:
+        assert env in ("pallas", "pallas_interpret", "xla"), env
+        return env
+    return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+def _weights(w, alpha: float, discount: str):
+    w = w.astype(jnp.float32)
+    if discount == "poly":
+        w = jnp.power(1.0 + w, -alpha)
+    return w
+
 
 def _agg_kernel(w_ref, u_ref, p_ref, o_ref, *, server_lr: float,
-                mode: str):
+                mode: str, alpha: float, discount: str):
     """One (K, BLOCK_D) tile: o = p - lr * (w @ u)/sum(w)  (fedsgd)
     or o = (w @ u)/sum(w)  (avg)."""
-    w = w_ref[...].astype(jnp.float32)  # (K,)
+    w = _weights(w_ref[...], alpha, discount)  # (K,)
     u = u_ref[...].astype(jnp.float32)  # (K, BLOCK_D)
     wsum = jnp.maximum(jnp.sum(w), 1e-12)
     g = jnp.einsum("k,kd->d", w, u) / wsum
@@ -43,11 +79,16 @@ def safl_aggregate(updates: jax.Array, weights: jax.Array,
                    params: jax.Array | None = None,
                    server_lr: float = 1.0, mode: str = "fedsgd",
                    block_d: int = BLOCK_D,
-                   interpret: bool = True) -> jax.Array:
+                   interpret: bool = True,
+                   alpha: float = 0.5,
+                   discount: str = "none") -> jax.Array:
     """updates (K, D), weights (K,), params (D,) [fedsgd] -> (D,).
 
+    ``discount="poly"`` reads ``weights`` as staleness and applies the
+    (1+tau)^(-alpha) discount inside the kernel (fedbuff's weighting).
     D is padded to a multiple of ``block_d`` internally.
     """
+    assert discount in _DISCOUNTS
     K, D = updates.shape
     pad = (-D) % block_d
     if pad:
@@ -73,7 +114,7 @@ def safl_aggregate(updates: jax.Array, weights: jax.Array,
         ]
     kern = functools.partial(
         _agg_kernel if mode == "fedsgd" else _avg_kernel,
-        server_lr=server_lr, mode=mode)
+        server_lr=server_lr, mode=mode, alpha=alpha, discount=discount)
     out = pl.pallas_call(
         kern,
         grid=grid,
@@ -85,9 +126,79 @@ def safl_aggregate(updates: jax.Array, weights: jax.Array,
     return out[:D]
 
 
-def _avg_kernel(w_ref, u_ref, o_ref, *, server_lr: float, mode: str):
+def _avg_kernel(w_ref, u_ref, o_ref, *, server_lr: float, mode: str,
+                alpha: float, discount: str):
     del server_lr, mode
-    w = w_ref[...].astype(jnp.float32)
+    w = _weights(w_ref[...], alpha, discount)
     u = u_ref[...].astype(jnp.float32)
     wsum = jnp.maximum(jnp.sum(w), 1e-12)
     o_ref[...] = (jnp.einsum("k,kd->d", w, u) / wsum).astype(o_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SDGA: staleness discount + momentum + SGD step + EMA anchor, one pass
+# ---------------------------------------------------------------------------
+
+
+def _sdga_kernel(tau_ref, u_ref, p_ref, m_ref, e_ref,
+                 op_ref, om_ref, oe_ref, *, server_lr: float, alpha: float,
+                 momentum: float, ema_anchor: float, ema_decay: float):
+    """One (K, BLOCK_D) tile of the full SDGA server round:
+
+        w   = (1 + tau)^(-alpha)
+        g   = (w @ u) / sum(w)
+        m'  = momentum * m + g
+        p'  = p - lr * m' + ema_anchor * (e - p)
+        e'  = ema_decay * e + (1 - ema_decay) * p'
+    """
+    w = _weights(tau_ref[...], alpha, "poly")
+    u = u_ref[...].astype(jnp.float32)
+    wsum = jnp.maximum(jnp.sum(w), 1e-12)
+    g = jnp.einsum("k,kd->d", w, u) / wsum
+    m_new = momentum * m_ref[...].astype(jnp.float32) + g
+    p = p_ref[...].astype(jnp.float32)
+    e = e_ref[...].astype(jnp.float32)
+    p_new = p - server_lr * m_new + ema_anchor * (e - p)
+    e_new = ema_decay * e + (1.0 - ema_decay) * p_new
+    op_ref[...] = p_new.astype(op_ref.dtype)
+    om_ref[...] = m_new.astype(om_ref.dtype)
+    oe_ref[...] = e_new.astype(oe_ref.dtype)
+
+
+def sdga_aggregate(updates: jax.Array, staleness: jax.Array,
+                   params: jax.Array, mom: jax.Array, ema: jax.Array, *,
+                   server_lr: float, alpha: float = 0.5,
+                   momentum: float = 0.8, ema_anchor: float = 0.05,
+                   ema_decay: float = 0.95, block_d: int = BLOCK_D,
+                   interpret: bool = True):
+    """Fused SDGA round.  updates (K, D), staleness (K,), params/mom/ema
+    (D,) -> (new_params, new_mom, new_ema), all (D,)."""
+    K, D = updates.shape
+    pad = (-D) % block_d
+    if pad:
+        updates = jnp.pad(updates, ((0, 0), (0, pad)))
+        params = jnp.pad(params, (0, pad))
+        mom = jnp.pad(mom, (0, pad))
+        ema = jnp.pad(ema, (0, pad))
+    Dp = D + pad
+    vec_spec = pl.BlockSpec((block_d,), lambda i: (i,))
+    kern = functools.partial(
+        _sdga_kernel, server_lr=server_lr, alpha=alpha, momentum=momentum,
+        ema_anchor=ema_anchor, ema_decay=ema_decay)
+    outs = pl.pallas_call(
+        kern,
+        grid=(Dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K, block_d), lambda i: (0, i)),
+            vec_spec, vec_spec, vec_spec,
+        ],
+        out_specs=[vec_spec, vec_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((Dp,), params.dtype),
+            jax.ShapeDtypeStruct((Dp,), jnp.float32),
+            jax.ShapeDtypeStruct((Dp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(staleness, updates, params, mom, ema)
+    return tuple(o[:D] for o in outs)

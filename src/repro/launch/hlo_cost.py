@@ -162,6 +162,19 @@ _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
 
+def xla_builtin_cost(compiled) -> Dict[str, float]:
+    """XLA's built-in per-module cost properties as one flat dict.
+
+    ``Compiled.cost_analysis()`` returns a dict in newer jax and a
+    one-element list of dicts in older versions; normalize both so callers
+    can compare our trip-count-corrected totals against the builtin.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def analyze(text: str) -> Dict[str, float]:
     comps = parse_hlo(text)
     memo_f: Dict[str, float] = {}

@@ -115,7 +115,7 @@ def test_topk_sparsify_restores_largest(key):
 
 
 def test_hlo_cost_corrects_scan_trip_counts():
-    from repro.launch.hlo_cost import analyze
+    from repro.launch.hlo_cost import analyze, xla_builtin_cost
 
     def f(x, w):
         def body(c, _):
@@ -130,5 +130,5 @@ def test_hlo_cost_corrects_scan_trip_counts():
     want = 8 * 2 * 32 ** 3
     assert abs(r["flops"] - want) / want < 0.01
     # XLA's builtin counts the loop once — our correction must exceed it
-    builtin = compiled.cost_analysis().get("flops", 0.0)
+    builtin = xla_builtin_cost(compiled).get("flops", 0.0)
     assert r["flops"] > builtin * 4
