@@ -173,7 +173,26 @@ class ModelConfig:
 
 @dataclasses.dataclass(frozen=True)
 class FLConfig:
-    """One SAFL/SFL experiment (paper §2, §4)."""
+    """One SAFL/SFL experiment (paper §2, §4).
+
+    Server backend: the flat-buffer server round
+    (:class:`repro.core.aggregation.FlatServer`) auto-detects its backend —
+    compiled Pallas kernels on TPU, the jnp oracle on CPU — and honours the
+    ``REPRO_AGG_BACKEND=pallas|pallas_interpret|xla`` environment override
+    (``pallas_interpret`` routes the kernel bodies through the Pallas
+    interpreter for validation).
+
+    Quantized channel (``compress_updates=True``): uploads travel and are
+    buffered as int8 rows with one f32 absmax scale per ``quant_block``
+    lanes, and the server round fuses the dequantize into the aggregation
+    (``repro.kernels.safl_agg.*_q8``).  Gradient-target uploads keep a
+    client-side error-feedback residual (``error_feedback``) so the
+    quantization noise telescopes across rounds instead of accumulating;
+    model-target uploads (fedavg / fedasync) quantize the weights
+    themselves (no residual — weights do not accumulate).  Transmitted
+    bytes are accounted at the quantized payload size (int8 values + f32
+    block scales + envelope) for every aggregation target.
+    """
 
     n_clients: int = 50
     k: int = 10  # aggregation buffer size / activation count
@@ -192,8 +211,12 @@ class FLConfig:
     speed_sigma: float = 0.6
     comm_mean_s: float = 1.0
     seed: int = 0
-    # beyond-paper: int8 update compression (repro.core.compression)
+    # beyond-paper: int8 quantized flat channel (repro.core.flatbuf /
+    # repro.kernels.safl_agg q8 kernels; repro.core.compression for the
+    # fedasync tree path)
     compress_updates: bool = False
+    quant_block: int = 512  # lanes per f32 absmax scale (wire granule)
+    error_feedback: bool = True  # client-side residual on gradient targets
     # metrics
     target_accuracy: float = 0.5  # Acc_t for T_f / T_s
     oscillation_thresholds: Tuple[float, ...] = (0.02, 0.05, 0.10, 0.15)
@@ -207,3 +230,10 @@ class FLConfig:
         # make the client loop a no-op with no loss/update to report
         assert self.local_epochs >= 1, "local_epochs must be >= 1"
         assert self.local_batch_size >= 1
+        # quantized channel: one scale per quant_block lanes.  Tiny blocks
+        # would make the scale overhead rival the int8 payload, and the
+        # fused Pallas kernels tile scales per BLOCK_D=2048 lanes, so the
+        # granule must be a power of two dividing 2048
+        assert (8 <= self.quant_block <= 2048
+                and self.quant_block & (self.quant_block - 1) == 0), \
+            "quant_block must be a power of two in [8, 2048]"

@@ -187,8 +187,9 @@ class FlatServer:
     buffer (:mod:`repro.core.flatbuf`) and every round runs ONE compiled
     XLA program that fuses the staleness discount, the K-way weighted
     reduction, the server step (SGD / Adam / SDGA momentum+EMA) and the
-    update-norm metric.  ``params`` and the slow server state are donated,
-    so steady-state rounds allocate nothing.
+    update-norm metric.  On the Pallas backends ``params`` and the slow
+    server state are donated, so steady-state rounds allocate nothing (on
+    the CPU oracle backend donation is skipped — see the constructor).
 
     Backend (see :func:`repro.kernels.safl_agg.default_backend`): the
     compiled Pallas kernels on TPU, the jnp oracle (same math, XLA-fused)
@@ -200,6 +201,13 @@ class FlatServer:
     path.  The weight-input vector ``wvec`` is per-mode: unit weights
     (fedsgd), data sizes (fedavg), staleness tau (fedbuff / fedopt / sdga —
     discounted in-program).
+
+    ``quantized=True`` switches the buffer input to the int8 flat channel:
+    ``step`` consumes ``buf = (q int8 (K, Dq), scales f32 (K, Dq/qblock))``
+    (:class:`repro.core.flatbuf.QuantBuffer` views) and the server program
+    fuses blockwise dequantize into the same discount / reduction / server
+    step / update-norm pass — 4x fewer HBM bytes for the K x D read that
+    dominates memory-bound large-D rounds.
     """
 
     MODES = ("fedsgd", "fedavg", "fedbuff", "fedopt", "sdga")
@@ -209,7 +217,9 @@ class FlatServer:
                  ema_anchor: float = 0.05, ema_decay: float = 0.95,
                  b1: float = 0.9, b2: float = 0.99, eps: float = 1e-8,
                  backend: Optional[str] = None,
-                 block_d: Optional[int] = None):
+                 block_d: Optional[int] = None,
+                 quantized: bool = False,
+                 qblock: Optional[int] = None):
         from repro.kernels import ref as _ref
         from repro.kernels import safl_agg as _k
 
@@ -221,22 +231,56 @@ class FlatServer:
         use_pallas = self.backend != "xla"
         interpret = self.backend == "pallas_interpret"
         bd = block_d or _k.BLOCK_D
+        self.quantized = quantized
+        qb = qblock or _k.QBLOCK
+        if quantized and use_pallas:
+            # the q8 Pallas kernels tile scales as (K, block_d/qblock);
+            # the xla streaming path has no tiling constraint
+            assert bd % qb == 0, \
+                f"block_d={bd} must be a multiple of qblock={qb}"
 
         def discounted(wvec):
             if mode in ("fedbuff", "fedopt", "sdga"):
                 return staleness_poly(wvec, alpha)
             return wvec.astype(jnp.float32)
 
+        def q8_mean(buf, w):
+            """Discount-weighted mean over the int8 buffer -> (d,) f32.
+            Streams the int8 rows (weighted_sum_q8_ref) instead of
+            materializing the dequantized (K, D) f32 buffer — the CPU
+            counterpart of the fused Pallas q8 kernels.  The 1/sum(w)
+            normalization folds into the per-row coefficients (a (K,)
+            op), so no extra pass over D."""
+            q, scales = buf
+            wsum = jnp.maximum(jnp.sum(w), 1e-12)
+            return _ref.weighted_sum_q8_ref(q, scales, w / wsum, qb)[:d]
+
         def _step(params, buf, wvec, opt):
             p0 = params.astype(jnp.float32)
             if mode in ("fedsgd", "fedavg", "fedbuff"):
-                if use_pallas:
-                    kmode = "avg" if mode == "fedavg" else "fedsgd"
-                    disc = "poly" if mode == "fedbuff" else "none"
+                kmode = "avg" if mode == "fedavg" else "fedsgd"
+                disc = "poly" if mode == "fedbuff" else "none"
+                if use_pallas and quantized:
+                    q, scales = buf
+                    new = _k.safl_aggregate_q8(
+                        q, scales, wvec,
+                        None if mode == "fedavg" else params,
+                        server_lr=server_lr, mode=kmode, qblock=qb,
+                        block_d=bd, interpret=interpret, alpha=alpha,
+                        discount=disc)
+                    if mode == "fedavg":
+                        new = new[:d]
+                elif use_pallas:
                     new = _k.safl_aggregate(
                         buf, wvec, None if mode == "fedavg" else params,
                         server_lr=server_lr, mode=kmode, block_d=bd,
                         interpret=interpret, alpha=alpha, discount=disc)
+                elif quantized:
+                    g = q8_mean(buf, discounted(wvec))
+                    if mode == "fedavg":
+                        new = g
+                    else:
+                        new = (p0 - server_lr * g).astype(params.dtype)
                 else:
                     w = discounted(wvec)
                     if mode == "fedavg":
@@ -245,24 +289,43 @@ class FlatServer:
                         new = _ref.safl_agg_ref(buf, w, params, server_lr)
                 new_opt = opt
             elif mode == "sdga":
-                if use_pallas:
+                if use_pallas and quantized:
+                    q, scales = buf
+                    new, m, e = _k.sdga_aggregate_q8(
+                        q, scales, wvec, params, opt["momentum"],
+                        opt["ema"], server_lr=server_lr, alpha=alpha,
+                        momentum=momentum, ema_anchor=ema_anchor,
+                        ema_decay=ema_decay, qblock=qb, block_d=bd,
+                        interpret=interpret)
+                elif use_pallas:
                     new, m, e = _k.sdga_aggregate(
                         buf, wvec, params, opt["momentum"], opt["ema"],
                         server_lr=server_lr, alpha=alpha, momentum=momentum,
                         ema_anchor=ema_anchor, ema_decay=ema_decay,
                         block_d=bd, interpret=interpret)
+                elif quantized:
+                    # the shared SDGA step over the streaming q8 mean
+                    g = q8_mean(buf, discounted(wvec))
+                    new, m, e = _ref.sdga_step_from_mean(
+                        g, params, opt["momentum"], opt["ema"],
+                        server_lr=server_lr, momentum=momentum,
+                        ema_anchor=ema_anchor, ema_decay=ema_decay)
                 else:
                     new, m, e = _ref.sdga_flat_ref(
-                        buf, wvec, params, opt["momentum"], opt["ema"],
+                        buf, wvec, params, opt["momentum"],
+                        opt["ema"],
                         server_lr=server_lr, alpha=alpha, momentum=momentum,
                         ema_anchor=ema_anchor, ema_decay=ema_decay)
                 new_opt = {"momentum": m, "ema": e,
                            "step": opt["step"] + 1}
             else:  # fedopt: server Adam over the discounted gradient mean
                 w = discounted(wvec)
-                wsum = jnp.maximum(jnp.sum(w), 1e-12)
-                g = jnp.einsum("k,kd->d", w,
-                               buf.astype(jnp.float32)) / wsum
+                if quantized:
+                    g = q8_mean(buf, w)
+                else:
+                    wsum = jnp.maximum(jnp.sum(w), 1e-12)
+                    g = jnp.einsum("k,kd->d", w,
+                                   buf.astype(jnp.float32)) / wsum
                 step = opt["step"] + 1
                 m = b1 * opt["m"] + (1 - b1) * g
                 v = b2 * opt["v"] + (1 - b2) * jnp.square(g)
@@ -277,8 +340,14 @@ class FlatServer:
                        "weight_sum": jnp.sum(discounted(wvec))}
             return new, new_opt, metrics
 
-        # donate params + slow state: steady-state rounds run in place
-        self._fn = jax.jit(_step, donate_argnums=(0, 3))
+        # donate params + slow state on the compiled-kernel backends, where
+        # in-place rounds keep HBM residency flat.  On the CPU oracle
+        # backend donation is a measured pessimization: aliasing the output
+        # onto the donated params forces XLA to split the fused step (the
+        # update-norm metric still reads the pre-step params), costing
+        # extra full-D round-trips per round.
+        donate = (0, 3) if use_pallas else ()
+        self._fn = jax.jit(_step, donate_argnums=donate)
 
     def init_opt(self, params_flat: jax.Array):
         """Mode-matched slow state (flat f32 vectors, donated each round)."""
@@ -294,8 +363,11 @@ class FlatServer:
         return {}
 
     def step(self, params_flat, buf, wvec, opt):
-        """(D,) params, (K, D) buffer, (K,) weight-input, opt ->
-        (new params, new opt, {update_norm, weight_sum})."""
+        """(D,) params, buffer, (K,) weight-input, opt ->
+        (new params, new opt, {update_norm, weight_sum}).
+
+        ``buf`` is the f32 (K, D) buffer, or — with ``quantized=True`` —
+        the ``(q int8 (K, Dq), scales (K, Dq/qblock))`` pair."""
         return self._fn(params_flat, buf, wvec, opt)
 
     @property

@@ -2,12 +2,19 @@
 — beyond-paper optimization quantified in benchmarks/beyond_sdga.py.
 
 Two schemes over flat update pytrees:
-  * int8 block quantization (per-block absmax scale) — 4x byte reduction,
-    the TPU-side kernel lives in repro/kernels/quantize.py;
+  * int8 block quantization (per-block absmax scale) — 4x byte reduction.
+    The quantizer itself lives in :mod:`repro.kernels.quantize` (ONE
+    implementation: compiled Pallas on TPU, jnp oracle on CPU, with the
+    shared ``BLOCK`` granule); this module only reshapes pytree leaves
+    into (n_blocks, BLOCK) rows and back.
   * top-k magnitude sparsification (indices + values).
 
 Both report the bytes that *would* cross the channel, which the FL engine
-uses for its accounting when compression is enabled.
+uses for its accounting when compression is enabled.  The flat (K, D)
+server path does not come through here — it quantizes inside
+``repro.core.flatbuf.PytreeCodec`` and aggregates int8 directly
+(``repro.kernels.safl_agg.*_q8``); this tree path serves fedasync's
+per-update mixing and ad-hoc pytree compression.
 """
 from __future__ import annotations
 
@@ -17,24 +24,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import quantize as qkernel
+
 Pytree = Any
-BLOCK = 256
+BLOCK = qkernel.BLOCK  # single quantization granule for the whole repo
 
 
 def quantize_int8(x: jax.Array, block: int = BLOCK):
-    """x: any shape -> (q int8 (n_blocks, block), scales f32, orig shape)."""
+    """x: any shape -> (q int8 (n_blocks, block), scales f32, orig shape).
+
+    Delegates to :func:`repro.kernels.quantize.quantize_int8` (platform
+    auto-detected backend) after reshaping to block rows.
+    """
     flat = x.reshape(-1).astype(jnp.float32)
     pad = (-flat.size) % block
     flat = jnp.pad(flat, (0, pad))
-    blocks = flat.reshape(-1, block)
-    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
-    return q, scale[:, 0], x.shape
+    q, scales = qkernel.quantize_int8(flat.reshape(-1, block))
+    return q, scales, x.shape
 
 
 def dequantize_int8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
-    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    flat = qkernel.dequantize_int8(q, scale).reshape(-1)
     n = int(np.prod(shape))
     return flat[:n].reshape(shape)
 

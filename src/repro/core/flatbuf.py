@@ -14,9 +14,22 @@ construction:
     buffer argument *donated*, so XLA updates the row in place — uploads
     never reallocate the K x D backing store.
 
+The *quantized* channel (``compress_updates``) makes int8 the native wire
+and buffer format instead of a lossy detour through f32:
+
+  * ``PytreeCodec.ravel_delta_q8`` emits a client upload as ONE fused XLA
+    program — diff + ravel + error-feedback add + blockwise absmax int8
+    quantize — returning the int8 row, its per-block scales, and the new
+    client-side residual (what quantization dropped this round, re-added to
+    the next upload so the noise telescopes instead of accumulating).
+    ``ravel_q8`` is the model-target variant (FedAvg weights), and
+    ``quantize_rows`` the vmapped form for the batched SFL round.
+  * :class:`QuantBuffer` preallocates the int8 (K, Dq) rows plus the
+    (K, Dq/qblock) f32 scales and writes slots with both arrays donated.
+
 Everything downstream (:class:`repro.core.aggregation.FlatServer`, the
-fused Pallas kernels in :mod:`repro.kernels.safl_agg`) operates on the
-(K, D) buffer directly.
+fused dequant-aggregate Pallas kernels in :mod:`repro.kernels.safl_agg`)
+operates on the (K, D) buffer — f32 or int8+scales — directly.
 """
 from __future__ import annotations
 
@@ -27,6 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.quantize import BLOCK as QBLOCK
+
 Pytree = Any
 
 
@@ -34,11 +49,15 @@ class PytreeCodec:
     """Bidirectional pytree <-> flat (D,) f32 vector codec.
 
     Built once from a template pytree; ``ravel``/``unravel``/``ravel_delta``
-    are jitted closures over the static layout, so every call after the
-    first reuses one XLA program.
+    (and their quantized ``*_q8`` variants) are jitted closures over the
+    static layout, so every call after the first reuses one XLA program.
+
+    ``qblock`` is the int8 quantization granule (one f32 absmax scale per
+    ``qblock`` lanes); ``dq`` is D rounded up to a qblock multiple — the
+    padded length of a quantized row — and ``n_qblocks = dq / qblock``.
     """
 
-    def __init__(self, template: Pytree):
+    def __init__(self, template: Pytree, qblock: int = QBLOCK):
         leaves, treedef = jax.tree_util.tree_flatten(template)
         self.treedef = treedef
         self.shapes: List[Tuple[int, ...]] = [l.shape for l in leaves]
@@ -46,6 +65,10 @@ class PytreeCodec:
         self.sizes = [int(np.prod(s)) if s else 1 for s in self.shapes]
         self.offsets = np.concatenate([[0], np.cumsum(self.sizes)])
         self.d = int(self.offsets[-1])
+        assert qblock >= 1
+        self.qblock = qblock
+        self.n_qblocks = -(-self.d // qblock)
+        self.dq = self.n_qblocks * qblock
 
         def _ravel(tree: Pytree) -> jax.Array:
             ls = jax.tree_util.tree_leaves(tree)
@@ -70,11 +93,59 @@ class PytreeCodec:
                 parts.append(seg.reshape(shape).astype(dtype))
             return jax.tree_util.tree_unflatten(self.treedef, parts)
 
+        def _quantize_nores(flat: jax.Array):
+            """(D,) f32 -> int8 (dq,), scales (n_qblocks,).  Delegates the
+            blockwise absmax math to the one shared quantizer
+            (repro.kernels.ref.quantize_ref)."""
+            from repro.kernels import ref as _ref
+            x = jnp.pad(flat, (0, self.dq - self.d))
+            q, s = _ref.quantize_ref(x.reshape(self.n_qblocks, qblock))
+            return q.reshape(self.dq), s
+
+        def _quantize(flat: jax.Array, residual: jax.Array):
+            """Error-feedback variant: quantizes input + carried residual
+            and also returns the new residual — the exact quantization
+            error, so dequant(q) + new_residual == input + residual (the
+            per-round errors telescope across rounds)."""
+            from repro.kernels import ref as _ref
+            x = jnp.pad(flat, (0, self.dq - self.d)) + residual
+            blocks = x.reshape(self.n_qblocks, qblock)
+            q, s = _ref.quantize_ref(blocks)
+            new_res = blocks - q.astype(jnp.float32) * s[:, None]
+            return q.reshape(self.dq), s, new_res.reshape(self.dq)
+
         self.ravel = jax.jit(_ravel)
         self.ravel_delta = jax.jit(_ravel_delta)
         self.unravel = jax.jit(_unravel)
         # vmapped ravel: (K-leading stacked tree) -> (K, D) buffer in one call
         self.ravel_stacked = jax.jit(jax.vmap(_ravel))
+
+        # ---- quantized channel: ONE fused program per upload ----
+        self.ravel_delta_q8 = jax.jit(
+            lambda start, end, scale, residual:
+            _quantize(_ravel_delta(start, end, scale), residual))
+        self.ravel_q8 = jax.jit(
+            lambda tree, residual: _quantize(_ravel(tree), residual))
+        # batched SFL round: quantize K rows (with their residuals) at once
+        self.quantize_rows = jax.jit(jax.vmap(_quantize))
+        # residual-free variants (model targets / error feedback off):
+        # skip the dead residual add + output entirely
+        self.ravel_delta_q8_nores = jax.jit(
+            lambda start, end, scale:
+            _quantize_nores(_ravel_delta(start, end, scale)))
+        self.ravel_q8_nores = jax.jit(
+            lambda tree: _quantize_nores(_ravel(tree)))
+        self.quantize_rows_nores = jax.jit(jax.vmap(_quantize_nores))
+
+        self._zero_res = None
+
+    def zero_residual(self) -> jax.Array:
+        """Initial (dq,) error-feedback residual for a client.  One cached
+        immutable device array shared by every caller (allocated lazily so
+        unquantized experiments never pay for it)."""
+        if self._zero_res is None:
+            self._zero_res = jnp.zeros((self.dq,), jnp.float32)
+        return self._zero_res
 
 
 def alloc_buffer(k: int, d: int) -> jax.Array:
@@ -88,3 +159,42 @@ def write_slot(buf: jax.Array, vec: jax.Array, slot: jax.Array) -> jax.Array:
     upload reuses one compiled program)."""
     return jax.lax.dynamic_update_slice(
         buf, vec.astype(buf.dtype)[None], (slot, jnp.int32(0)))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _write_q_slot(q: jax.Array, scales: jax.Array, q_vec: jax.Array,
+                  s_vec: jax.Array, slot: jax.Array):
+    """(q[slot], scales[slot]) <- (q_vec, s_vec), both buffers donated."""
+    q = jax.lax.dynamic_update_slice(q, q_vec[None], (slot, jnp.int32(0)))
+    scales = jax.lax.dynamic_update_slice(
+        scales, s_vec.astype(scales.dtype)[None], (slot, jnp.int32(0)))
+    return q, scales
+
+
+class QuantBuffer:
+    """Preallocated quantized (K, Dq) update buffer: int8 rows + per-block
+    f32 scales.  ``write`` donates both backing arrays, so steady-state
+    uploads update the rows in place — the int8 payload is the *native*
+    buffer format, never inflated to f32 outside the aggregation kernel."""
+
+    def __init__(self, k: int, d: int, qblock: int = QBLOCK):
+        self.qblock = qblock
+        self.n_qblocks = -(-d // qblock)
+        self.dq = self.n_qblocks * qblock
+        self.q = jnp.zeros((k, self.dq), jnp.int8)
+        self.scales = jnp.zeros((k, self.n_qblocks), jnp.float32)
+
+    def write(self, q_vec: jax.Array, s_vec: jax.Array, slot) -> None:
+        self.q, self.scales = _write_q_slot(self.q, self.scales, q_vec,
+                                            s_vec, jnp.int32(slot))
+
+    def set_rows(self, q: jax.Array, scales: jax.Array) -> None:
+        """Adopt a whole round's rows at once (batched SFL round)."""
+        assert q.shape == self.q.shape and q.dtype == jnp.int8
+        assert scales.shape == self.scales.shape
+        self.q, self.scales = q, scales
+
+    @property
+    def views(self) -> Tuple[jax.Array, jax.Array]:
+        """(q, scales) as consumed by the quantized FlatServer step."""
+        return self.q, self.scales

@@ -1,15 +1,19 @@
 """SFL / SAFL engines (paper §2.2, Fig. 1) — discrete-event simulation.
 
-The engine decouples *simulated* wall-clock (lognormal per-client compute
-speeds + communication latency) from host compute: client updates are
-evaluated lazily when their upload event fires, with one shared jitted XLA
-program for every client (shards padded to a common batch count).
+Only *simulated* wall-clock (lognormal per-client compute speeds +
+communication latency) is event-driven; host compute is eager: when a
+client's upload event is popped off the heap, ``_run_local`` immediately
+runs its ``local_epochs`` on the host (one shared jitted XLA program for
+every client, shards padded to a common batch count) and the result is
+serialized into the aggregation buffer right away.  Simulated time orders
+the events; it does not defer any computation.
 
 Synchronous (SFL, Fig. 1a): each round the server activates K random
 clients, waits for all of them (round time = slowest active client — the
 straggler effect), aggregates, broadcasts.  The K same-shape clients run as
 ONE vmapped XLA program (client.make_batched_local_train) that emits the
-raveled (K, D) update buffer directly.
+raveled (K, D) update buffer directly — with or without the quantized
+channel.
 
 Semi-asynchronous (SAFL, Fig. 1b): clients train continuously at their own
 pace and upload after each local epoch; the server aggregates as soon as K
@@ -20,11 +24,24 @@ upload is raveled (flatbuf.PytreeCodec) and written into its slot of the
 preallocated (K, D) device buffer with the buffer donated (in-place row
 write).
 
+Quantized channel (``compress_updates=True``): int8 is the native wire and
+buffer format, not a detour through f32.  A gradient-target upload is ONE
+fused program (``PytreeCodec.ravel_delta_q8``: diff + ravel + blockwise
+absmax int8 quantize) that also returns the client-side error-feedback
+residual — what quantization dropped this round is re-added to the next
+upload, so the noise telescopes instead of accumulating.  Model-target
+uploads quantize the weights themselves (``ravel_q8``, no residual).  The
+rows live in a donated :class:`repro.core.flatbuf.QuantBuffer` (int8
+values + per-block f32 scales) and the server round fuses the dequantize
+into the aggregation pass.
+
 The server round itself is ONE jitted, donating program
-(:class:`repro.core.aggregation.FlatServer` — fused staleness discount +
-weighted reduction + server step + update-norm metric, Pallas-backed on
-TPU) for every buffered-reduction aggregator (fedsgd / fedavg / fedbuff /
-fedopt / sdga); only fedasync's per-update mixing stays on the pytree path.
+(:class:`repro.core.aggregation.FlatServer` — fused [dequantize +]
+staleness discount + weighted reduction + server step + update-norm metric,
+Pallas-backed on TPU) for every buffered-reduction aggregator (fedsgd /
+fedavg / fedbuff / fedopt / sdga); only fedasync's per-update mixing stays
+on the pytree path (quantized per-leaf via repro.core.compression when the
+channel is on).
 """
 from __future__ import annotations
 
@@ -39,9 +56,8 @@ import numpy as np
 from repro.core import aggregation as agg
 from repro.core import compression
 from repro.core import flatbuf
-from repro.core.client import (ClientState, cumulative_gradient,
-                               make_batched_local_train, make_eval_fn,
-                               make_local_train, pytree_bytes)
+from repro.core.client import (ClientState, make_batched_local_train,
+                               make_eval_fn, make_local_train, pytree_bytes)
 from repro.core.metrics import MetricsLog
 
 Pytree = Any
@@ -105,21 +121,32 @@ class FLEngine:
         self._last_update_norm = 0.0
 
         # ---- flat-buffer server path ----
-        self.codec = flatbuf.PytreeCodec(init_params)
+        self.codec = flatbuf.PytreeCodec(init_params,
+                                         qblock=fl_cfg.quant_block)
         self._flat_params = self.codec.ravel(init_params)
         self._flat = fl_cfg.aggregation in agg.FlatServer.MODES
+        # int8 native channel: quantized rows + fused dequant-aggregate
+        self._quant = self._flat and fl_cfg.compress_updates
+        self._qbuf = None
+        self._buf = None
+        # per-client error-feedback residuals (dq,), created on first upload
+        self._residuals: Dict[int, jax.Array] = {}
         if self._flat:
             self._server = agg.FlatServer(
                 fl_cfg.aggregation, self.codec.d,
                 server_lr=fl_cfg.server_lr, alpha=fl_cfg.staleness_alpha,
                 momentum=fl_cfg.server_momentum or 0.8,
-                ema_anchor=fl_cfg.ema_anchor or 0.05)
+                ema_anchor=fl_cfg.ema_anchor or 0.05,
+                quantized=self._quant, qblock=fl_cfg.quant_block)
             self._opt = self._server.init_opt(self._flat_params)
-            self._buf = flatbuf.alloc_buffer(fl_cfg.k, self.codec.d)
+            if self._quant:
+                self._qbuf = flatbuf.QuantBuffer(fl_cfg.k, self.codec.d,
+                                                 fl_cfg.quant_block)
+            else:
+                self._buf = flatbuf.alloc_buffer(fl_cfg.k, self.codec.d)
         else:
             self._server = None
             self._opt = None
-            self._buf = None
 
     # ------------------------------------------------------------------
     def _epoch_time(self, c: ClientState) -> float:
@@ -144,45 +171,81 @@ class FLEngine:
 
     # ------------------------------------------------------------------
     def _upload_nbytes(self) -> int:
-        """Channel cost of one (uncompressed) upload, per target."""
-        if self.cfg.aggregation in ("fedavg", "fedasync"):
-            return int((self._params_bytes + self._state_bytes)
+        """Channel cost of one upload, per target.  With the quantized
+        channel the payload is int8 values + one f32 scale per quant_block
+        lanes (model targets still ship the non-trainable state in f32 —
+        it is tiny and structurally heterogeneous)."""
+        model_target = self.cfg.aggregation in ("fedavg", "fedasync")
+        if self.cfg.compress_updates:
+            payload = self.codec.dq + self.codec.n_qblocks * 4
+        else:
+            payload = self._params_bytes
+        if model_target:
+            return int((payload + self._state_bytes)
                        * (1 + _MODEL_ENVELOPE))
-        return int(self._params_bytes * (1 + _GRAD_ENVELOPE))
+        return int(payload * (1 + _GRAD_ENVELOPE))
+
+    def _residual(self, cid: int) -> jax.Array:
+        """Client-side error-feedback residual (zeros before the client's
+        first upload)."""
+        res = self._residuals.get(cid)
+        return res if res is not None else self.codec.zero_residual()
 
     def _enqueue_upload(self, buffer: List[Dict], c: ClientState,
                         w_end, s_end, staleness: int) -> None:
         """Serialize one client upload.  Flat modes ravel the update and
         write it into the buffer row for the next free slot (the buffer is
-        donated — an in-place device write); fedasync stashes the payload
-        pytree.  Must be called before ``c.params`` is refreshed (gradient
-        targets diff against the client's round-start weights)."""
+        donated — an in-place device write); with the quantized channel the
+        row is emitted as int8 + block scales by one fused program and the
+        error-feedback residual stays client-side.  fedasync stashes the
+        payload pytree.  Must be called before ``c.params`` is refreshed
+        (gradient targets diff against the client's round-start weights)."""
         cfg = self.cfg
         entry: Dict = {"staleness": staleness, "cid": c.cid,
                        "n": c.n_samples}
+        nbytes = self._upload_nbytes()
         if cfg.aggregation == "fedasync":
-            entry["payload"] = {"params": w_end, "state": s_end}
-            nbytes = self._upload_nbytes()
-        elif cfg.aggregation == "fedavg":
-            vec = self.codec.ravel(w_end)
-            self._buf = flatbuf.write_slot(self._buf, vec,
-                                           jnp.int32(len(buffer)))
-            entry["state"] = s_end
-            nbytes = self._upload_nbytes()
-        else:  # gradient targets: fedsgd, sdga, fedbuff, fedopt
             if cfg.compress_updates:
-                # beyond-paper: int8 block quantization on the channel
-                # (kernels/quantize.py on TPU); dequantized server-side
-                grad = cumulative_gradient(c.params, w_end, cfg.client_lr)
-                qs, qbytes = compression.quantize_pytree(grad)
-                vec = self.codec.ravel(compression.dequantize_pytree(qs))
-                nbytes = int(qbytes * (1 + _GRAD_ENVELOPE))
+                # per-leaf int8 on the tree path: the server mixes the
+                # dequantized weights (what crossed the channel), and the
+                # bytes charged are the actual per-leaf-padded payload
+                qs, qbytes = compression.quantize_pytree(w_end)
+                entry["payload"] = {
+                    "params": compression.dequantize_pytree(qs),
+                    "state": s_end}
+                nbytes = int((qbytes + self._state_bytes)
+                             * (1 + _MODEL_ENVELOPE))
+            else:
+                entry["payload"] = {"params": w_end, "state": s_end}
+        elif cfg.aggregation == "fedavg":
+            if self._quant:
+                # model target: quantize the weights themselves (weights do
+                # not accumulate across rounds — no error feedback)
+                q, s = self.codec.ravel_q8_nores(w_end)
+                self._qbuf.write(q, s, len(buffer))
+            else:
+                vec = self.codec.ravel(w_end)
+                self._buf = flatbuf.write_slot(self._buf, vec,
+                                               jnp.int32(len(buffer)))
+            entry["state"] = s_end
+        else:  # gradient targets: fedsgd, sdga, fedbuff, fedopt
+            if self._quant:
+                # ONE fused program: diff + ravel + EF add + blockwise
+                # absmax int8 quantize; residual = what this round dropped
+                if cfg.error_feedback:
+                    q, s, new_res = self.codec.ravel_delta_q8(
+                        c.params, w_end, cfg.client_lr,
+                        self._residual(c.cid))
+                    self._residuals[c.cid] = new_res
+                else:
+                    q, s = self.codec.ravel_delta_q8_nores(
+                        c.params, w_end, cfg.client_lr)
+                self._qbuf.write(q, s, len(buffer))
             else:
                 vec = self.codec.ravel_delta(c.params, w_end,
                                              cfg.client_lr)
-                nbytes = self._upload_nbytes()
-            self._buf = flatbuf.write_slot(self._buf, vec,
-                                           jnp.int32(len(buffer)))
+                self._buf = flatbuf.write_slot(self._buf, vec,
+                                               jnp.int32(len(buffer)))
             entry["bn_state"] = s_end
         self.tx_bytes += nbytes
         buffer.append(entry)
@@ -216,7 +279,9 @@ class FLEngine:
             wvec = jnp.asarray([b["staleness"] for b in buffer],
                                jnp.float32)
         self._flat_params, self._opt, m = self._server.step(
-            self._flat_params, self._buf, wvec, self._opt)
+            self._flat_params,
+            self._qbuf.views if self._quant else self._buf,
+            wvec, self._opt)
         self.global_params = self.codec.unravel(self._flat_params)
         self._last_update_norm = float(m["update_norm"])
 
@@ -268,9 +333,10 @@ class FLEngine:
     # ----- SFL -----
     def _run_sync(self, n_rounds: int, log_every: int) -> None:
         cfg = self.cfg
-        # the whole K-client round as one vmapped program (quantized
-        # channels still go client-by-client through the tree path)
-        batched = self._flat and not cfg.compress_updates
+        # the whole K-client round as one vmapped program; with the
+        # quantized channel the K rows are quantized in one vmapped
+        # program too (same per-row math as the sequential path)
+        batched = self._flat
         if batched:
             target = "params" if cfg.aggregation == "fedavg" else "grad"
             round_fn = make_batched_local_train(
@@ -290,7 +356,22 @@ class FLEngine:
                 vecs, states_k, _losses = round_fn(
                     self.global_params, self.global_state, xs_k, ys_k,
                     mask_k, cfg.client_lr)
-                self._buf = vecs  # this round's (K, D) buffer
+                if self._quant:
+                    # quantize all K rows in one vmapped program; gradient
+                    # targets thread their error-feedback residuals through
+                    use_ef = (cfg.error_feedback
+                              and cfg.aggregation != "fedavg")
+                    if use_ef:
+                        res = jnp.stack([self._residual(int(cid))
+                                         for cid in active])
+                        q, s, new_res = self.codec.quantize_rows(vecs, res)
+                        for row, cid in enumerate(active):
+                            self._residuals[int(cid)] = new_res[row]
+                    else:
+                        q, s = self.codec.quantize_rows_nores(vecs)
+                    self._qbuf.set_rows(q, s)
+                else:
+                    self._buf = vecs  # this round's (K, D) buffer
                 for cid in active:
                     c = self.clients[cid]
                     c.params, c.model_state = (self.global_params,

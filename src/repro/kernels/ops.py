@@ -3,6 +3,12 @@
 ``interpret`` defaults to True off-TPU (this container is CPU-only; the
 kernels TARGET TPU — see kernel docstrings for the VMEM sizing).  On a real
 TPU backend set ``REPRO_PALLAS_INTERPRET=0`` or pass interpret=False.
+
+The quantize wrappers auto-detect their backend when no env override is
+set (compiled Pallas on TPU, jnp oracle on CPU — the
+``repro.kernels.safl_agg.default_backend`` convention); an explicit
+``REPRO_PALLAS_INTERPRET`` still forces interpret-mode Pallas for them,
+same as for the other kernels.
 """
 from __future__ import annotations
 
@@ -18,10 +24,8 @@ from repro.kernels import safl_agg as _agg
 
 
 def _default_interpret() -> bool:
-    env = os.environ.get("REPRO_PALLAS_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
+    ov = _interpret_override()
+    return ov if ov is not None else jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("server_lr", "mode", "block_d"))
@@ -31,14 +35,22 @@ def safl_aggregate(updates, weights, params=None, server_lr: float = 1.0,
                                block_d, interpret=_default_interpret())
 
 
+def _interpret_override() -> bool | None:
+    """Explicit REPRO_PALLAS_INTERPRET wins; unset -> None (auto-detect)."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return None
+
+
 @jax.jit
 def quantize_int8(x):
-    return _q.quantize_int8(x, interpret=_default_interpret())
+    return _q.quantize_int8(x, interpret=_interpret_override())
 
 
 @jax.jit
 def dequantize_int8(q, scales):
-    return _q.dequantize_int8(q, scales, interpret=_default_interpret())
+    return _q.dequantize_int8(q, scales, interpret=_interpret_override())
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))

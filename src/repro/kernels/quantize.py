@@ -4,10 +4,19 @@ Grid over row tiles; each program quantizes a (ROWS, BLOCK) tile in VMEM:
 scale_r = max|x_r|/127 per row, q = round(x/scale).  Used by the FL engines
 to cut the paper's channel-transmission payload 4x (beyond-paper, Table 2
 axis); dequantize is the exact inverse mapping up to rounding.
+
+``BLOCK`` (512) is the single quantization granule for the whole repo:
+:mod:`repro.core.compression` delegates here, and the fused
+dequant-aggregate kernels in :mod:`repro.kernels.safl_agg` consume
+(K, D) int8 buffers with one f32 scale per BLOCK lanes.
+
+Backend selection follows the :func:`repro.kernels.safl_agg.default_backend`
+convention: with ``interpret=None`` (the default) the compiled Pallas kernel
+runs on TPU and the jnp oracle (:mod:`repro.kernels.ref`) elsewhere;
+``REPRO_AGG_BACKEND=pallas|pallas_interpret|xla`` overrides, and an explicit
+``interpret`` bool forces the Pallas path as before.
 """
 from __future__ import annotations
-
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -15,6 +24,14 @@ from jax.experimental import pallas as pl
 
 ROWS = 8
 BLOCK = 512
+
+
+def _resolve_backend(interpret: bool | None) -> str:
+    """None -> platform auto-detect (safl_agg convention); bool -> Pallas."""
+    if interpret is None:
+        from repro.kernels.safl_agg import default_backend
+        return default_backend()
+    return "pallas_interpret" if interpret else "pallas"
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
@@ -30,8 +47,12 @@ def _dequant_kernel(q_ref, s_ref, o_ref):
 
 
 def quantize_int8(x: jax.Array, rows: int = ROWS,
-                  interpret: bool = True):
+                  interpret: bool | None = None):
     """x (R, B) -> (q int8 (R,B), scales f32 (R,)).  R padded to rows."""
+    backend = _resolve_backend(interpret)
+    if backend == "xla":
+        from repro.kernels import ref
+        return ref.quantize_ref(x)
     R, B = x.shape
     pad = (-R) % rows
     if pad:
@@ -45,13 +66,17 @@ def quantize_int8(x: jax.Array, rows: int = ROWS,
                    pl.BlockSpec((rows,), lambda i: (i,))),
         out_shape=(jax.ShapeDtypeStruct((Rp, B), jnp.int8),
                    jax.ShapeDtypeStruct((Rp,), jnp.float32)),
-        interpret=interpret,
+        interpret=backend == "pallas_interpret",
     )(x)
     return q[:R], s[:R]
 
 
 def dequantize_int8(q: jax.Array, scales: jax.Array, rows: int = ROWS,
-                    interpret: bool = True) -> jax.Array:
+                    interpret: bool | None = None) -> jax.Array:
+    backend = _resolve_backend(interpret)
+    if backend == "xla":
+        from repro.kernels import ref
+        return ref.dequantize_ref(q, scales)
     R, B = q.shape
     pad = (-R) % rows
     if pad:
@@ -65,6 +90,6 @@ def dequantize_int8(q: jax.Array, scales: jax.Array, rows: int = ROWS,
                   pl.BlockSpec((rows,), lambda i: (i,))],
         out_specs=pl.BlockSpec((rows, B), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((Rp, B), jnp.float32),
-        interpret=interpret,
+        interpret=backend == "pallas_interpret",
     )(q, scales)
     return out[:R]

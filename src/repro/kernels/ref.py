@@ -35,6 +35,21 @@ def fedbuff_flat_ref(updates: jax.Array, staleness: jax.Array,
     return safl_agg_ref(updates, w, params, server_lr)
 
 
+def sdga_step_from_mean(g: jax.Array, params: jax.Array, mom: jax.Array,
+                        ema: jax.Array, *, server_lr: float,
+                        momentum: float, ema_anchor: float,
+                        ema_decay: float):
+    """The SDGA server step given the aggregated gradient mean g (D,) —
+    the single definition of the momentum / EMA-anchor update shared by
+    the flat oracle and the quantized CPU path."""
+    m_new = momentum * mom.astype(jnp.float32) + g
+    p = params.astype(jnp.float32)
+    e = ema.astype(jnp.float32)
+    p_new = p - server_lr * m_new + ema_anchor * (e - p)
+    e_new = ema_decay * e + (1.0 - ema_decay) * p_new
+    return p_new.astype(params.dtype), m_new, e_new
+
+
 def sdga_flat_ref(updates: jax.Array, staleness: jax.Array,
                   params: jax.Array, mom: jax.Array, ema: jax.Array, *,
                   server_lr: float, alpha: float = 0.5,
@@ -45,12 +60,95 @@ def sdga_flat_ref(updates: jax.Array, staleness: jax.Array,
     w = jnp.power(1.0 + staleness.astype(jnp.float32), -alpha)
     wsum = jnp.maximum(jnp.sum(w), 1e-12)
     g = jnp.einsum("k,kd->d", w, updates.astype(jnp.float32)) / wsum
-    m_new = momentum * mom.astype(jnp.float32) + g
-    p = params.astype(jnp.float32)
-    e = ema.astype(jnp.float32)
-    p_new = p - server_lr * m_new + ema_anchor * (e - p)
-    e_new = ema_decay * e + (1.0 - ema_decay) * p_new
-    return p_new.astype(params.dtype), m_new, e_new
+    return sdga_step_from_mean(g, params, mom, ema, server_lr=server_lr,
+                               momentum=momentum, ema_anchor=ema_anchor,
+                               ema_decay=ema_decay)
+
+
+def dequant_flat_ref(q: jax.Array, scales: jax.Array,
+                     qblock: int) -> jax.Array:
+    """Blockwise-dequantize a quantized flat update buffer.
+
+    q (K, Dq) int8 with Dq a multiple of qblock, scales (K, Dq//qblock)
+    f32 -> (K, Dq) f32.  Padding blocks carry scale 0 and dequantize to 0.
+    """
+    K, Dq = q.shape
+    return (q.astype(jnp.float32).reshape(K, Dq // qblock, qblock)
+            * scales[:, :, None]).reshape(K, Dq)
+
+
+def weighted_sum_q8_ref(q: jax.Array, scales: jax.Array,
+                        weights: jax.Array, qblock: int,
+                        chunk: int | None = None) -> jax.Array:
+    """sum_k w_k * dequant(q_k) -> (Dq,) f32, streaming.
+
+    Unlike ``dequant_flat_ref`` + einsum, this never materializes the f32
+    (K, Dq) buffer: each chunk of rows is one fused elementwise XLA loop
+    that reads int8 and folds the per-block scale into the reduction
+    coefficient — the CPU fast path of the quantized channel (the ``*_q8``
+    Pallas kernels are the TPU fast path).  K is a static shape, so the
+    Python loops unroll at trace time.  ``chunk`` bounds how many int8
+    rows one fused loop touches: a very wide fusion (measured at K=64)
+    spills registers and runs slower than the f32 einsum, so past 16 rows
+    the sum splits into 16-row partials with ``optimization_barrier``
+    keeping XLA from re-fusing them back together (the partials cost one
+    extra (D,) f32 round-trip each — the small-K single fusion is the
+    fast case).
+    """
+    K, Dq = q.shape
+    if chunk is None:
+        chunk = K if K <= 16 else 16
+    w = weights.astype(jnp.float32)
+    nb = Dq // qblock
+
+    def span_sum(b0: int, b1: int) -> jax.Array:
+        """Reduce blocks [b0, b1) over K -> ((b1-b0)*qblock,) f32."""
+        out = None
+        for k0 in range(0, K, chunk):
+            acc = jnp.zeros((b1 - b0, qblock), jnp.float32)
+            for k in range(k0, min(k0 + chunk, K)):
+                coef = (w[k] * scales[k, b0:b1])[:, None]
+                acc = acc + (q[k, b0 * qblock:b1 * qblock]
+                             .astype(jnp.float32).reshape(-1, qblock)
+                             * coef)
+            if K > chunk:
+                acc = jax.lax.optimization_barrier(acc)
+            out = acc if out is None else out + acc
+        return out.reshape((b1 - b0) * qblock)
+
+    # two independent half-D root thunks let the XLA CPU runtime overlap
+    # them across the intra-op pool (one monolithic fusion runs on a
+    # single thread); the big-K chunked form gains nothing from it
+    if K <= chunk and nb >= 2:
+        return jnp.concatenate([span_sum(0, nb // 2),
+                                span_sum(nb // 2, nb)])
+    return span_sum(0, nb)
+
+
+def safl_agg_q8_ref(q: jax.Array, scales: jax.Array, weights: jax.Array,
+                    params: jax.Array, server_lr: float,
+                    qblock: int) -> jax.Array:
+    """Fused dequantize + FedSGD server step oracle (int8 flat channel)."""
+    u = dequant_flat_ref(q, scales, qblock)[:, :params.shape[0]]
+    return safl_agg_ref(u, weights, params, server_lr)
+
+
+def weighted_avg_q8_ref(q: jax.Array, scales: jax.Array,
+                        weights: jax.Array, qblock: int) -> jax.Array:
+    """Fused dequantize + FedAvg weighted mean oracle (int8 flat channel)."""
+    return weighted_avg_ref(dequant_flat_ref(q, scales, qblock), weights)
+
+
+def sdga_flat_q8_ref(q: jax.Array, scales: jax.Array, staleness: jax.Array,
+                     params: jax.Array, mom: jax.Array, ema: jax.Array, *,
+                     qblock: int, server_lr: float, alpha: float = 0.5,
+                     momentum: float = 0.8, ema_anchor: float = 0.05,
+                     ema_decay: float = 0.95):
+    """Fused dequantize + full SDGA round oracle (int8 flat channel)."""
+    u = dequant_flat_ref(q, scales, qblock)[:, :params.shape[0]]
+    return sdga_flat_ref(u, staleness, params, mom, ema,
+                         server_lr=server_lr, alpha=alpha, momentum=momentum,
+                         ema_anchor=ema_anchor, ema_decay=ema_decay)
 
 
 def quantize_ref(x: jax.Array):

@@ -16,6 +16,12 @@ Kernels:
   * ``sdga_aggregate`` — the full SDGA server round in one pass: staleness
     discount, weighted mean, server momentum, SGD step and EMA anchor, with
     the new params / momentum / EMA emitted as three fused outputs.
+  * ``safl_aggregate_q8`` / ``sdga_aggregate_q8`` — the same rounds over the
+    *quantized* flat channel: updates arrive as int8 (K, D) rows plus one
+    f32 absmax scale per QBLOCK lanes (:mod:`repro.kernels.quantize` wire
+    format), and each grid step fuses blockwise dequantize into the
+    reduction — the K x D read is 4x fewer HBM bytes than the f32 buffer,
+    which is exactly the memory-bound large-D regime.
 
 TPU sizing: BLOCK_D = 2048 lanes x K<=64 buffered updates x 4B = 512 KiB of
 VMEM per tile — comfortably inside the ~16 MiB v5e VMEM with double
@@ -34,6 +40,8 @@ import os
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.quantize import BLOCK as QBLOCK
 
 BLOCK_D = 2048
 
@@ -201,4 +209,159 @@ def sdga_aggregate(updates: jax.Array, staleness: jax.Array,
         ],
         interpret=interpret,
     )(staleness, updates, params, mom, ema)
+    return tuple(o[:D] for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# int8 flat channel: fused dequantize + aggregate (+ server step)
+# ---------------------------------------------------------------------------
+
+
+def _dequant_tile(q, s, qblock: int):
+    """(K, BD) int8 tile + (K, BD/qblock) scales -> (K, BD) f32 in VMEM."""
+    K, BD = q.shape
+    return (q.astype(jnp.float32).reshape(K, BD // qblock, qblock)
+            * s[:, :, None]).reshape(K, BD)
+
+
+def _agg_q8_kernel(w_ref, q_ref, s_ref, p_ref, o_ref, *, server_lr: float,
+                   mode: str, alpha: float, discount: str, qblock: int):
+    """One (K, BLOCK_D) int8 tile: blockwise dequantize in VMEM, then the
+    same weighted reduction / server step as the f32 kernel."""
+    w = _weights(w_ref[...], alpha, discount)  # (K,)
+    u = _dequant_tile(q_ref[...], s_ref[...], qblock)  # (K, BLOCK_D) f32
+    wsum = jnp.maximum(jnp.sum(w), 1e-12)
+    g = jnp.einsum("k,kd->d", w, u) / wsum
+    p = p_ref[...].astype(jnp.float32)
+    o_ref[...] = (p - server_lr * g).astype(o_ref.dtype)
+
+
+def _avg_q8_kernel(w_ref, q_ref, s_ref, o_ref, *, server_lr: float,
+                   mode: str, alpha: float, discount: str, qblock: int):
+    del server_lr, mode
+    w = _weights(w_ref[...], alpha, discount)
+    u = _dequant_tile(q_ref[...], s_ref[...], qblock)
+    wsum = jnp.maximum(jnp.sum(w), 1e-12)
+    o_ref[...] = (jnp.einsum("k,kd->d", w, u) / wsum).astype(o_ref.dtype)
+
+
+def _pad_q8(q, scales, block_d: int, qblock: int):
+    """Pad the quantized buffer from Dq to a block_d multiple.  Padding
+    blocks get scale 0 so they dequantize to exact zeros."""
+    K, Dq = q.shape
+    assert block_d % qblock == 0, (block_d, qblock)
+    assert Dq % qblock == 0, (Dq, qblock)
+    assert scales.shape == (K, Dq // qblock), (scales.shape, q.shape)
+    pad = (-Dq) % block_d
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad // qblock)))
+    return q, scales, Dq + pad
+
+
+def safl_aggregate_q8(q: jax.Array, scales: jax.Array, weights: jax.Array,
+                      params: jax.Array | None = None,
+                      server_lr: float = 1.0, mode: str = "fedsgd",
+                      qblock: int = QBLOCK, block_d: int = BLOCK_D,
+                      interpret: bool = True, alpha: float = 0.5,
+                      discount: str = "none") -> jax.Array:
+    """Quantized-channel ``safl_aggregate``: q (K, Dq) int8, scales
+    (K, Dq/qblock) f32, weights (K,), params (D,) [fedsgd] -> (D,) (fedsgd)
+    or (Dq,) (avg).  Dequantize, discount, reduction and server step run in
+    one pass over the int8 buffer (f32 updates never touch HBM)."""
+    assert discount in _DISCOUNTS
+    K, Dq = q.shape
+    q, scales, Dp = _pad_q8(q, scales, block_d, qblock)
+    grid = (Dp // block_d,)
+    s_spec = pl.BlockSpec((K, block_d // qblock), lambda i: (0, i))
+    if mode == "fedsgd":
+        assert params is not None
+        D = params.shape[0]
+        assert D <= Dq, (D, Dq)
+        p = jnp.pad(params, (0, Dp - D)) if D < Dp else params
+        args = (weights, q, scales, p)
+        in_specs = [
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K, block_d), lambda i: (0, i)),
+            s_spec,
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+        ]
+        kern, out_dtype, out_len = _agg_q8_kernel, params.dtype, D
+    else:
+        args = (weights, q, scales)
+        in_specs = [
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K, block_d), lambda i: (0, i)),
+            s_spec,
+        ]
+        kern, out_dtype, out_len = _avg_q8_kernel, jnp.float32, Dq
+    out = pl.pallas_call(
+        functools.partial(kern, server_lr=server_lr, mode=mode, alpha=alpha,
+                          discount=discount, qblock=qblock),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Dp,), out_dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:out_len]
+
+
+def _sdga_q8_kernel(tau_ref, q_ref, s_ref, p_ref, m_ref, e_ref,
+                    op_ref, om_ref, oe_ref, *, server_lr: float,
+                    alpha: float, momentum: float, ema_anchor: float,
+                    ema_decay: float, qblock: int):
+    w = _weights(tau_ref[...], alpha, "poly")
+    u = _dequant_tile(q_ref[...], s_ref[...], qblock)
+    wsum = jnp.maximum(jnp.sum(w), 1e-12)
+    g = jnp.einsum("k,kd->d", w, u) / wsum
+    m_new = momentum * m_ref[...].astype(jnp.float32) + g
+    p = p_ref[...].astype(jnp.float32)
+    e = e_ref[...].astype(jnp.float32)
+    p_new = p - server_lr * m_new + ema_anchor * (e - p)
+    e_new = ema_decay * e + (1.0 - ema_decay) * p_new
+    op_ref[...] = p_new.astype(op_ref.dtype)
+    om_ref[...] = m_new.astype(om_ref.dtype)
+    oe_ref[...] = e_new.astype(oe_ref.dtype)
+
+
+def sdga_aggregate_q8(q: jax.Array, scales: jax.Array, staleness: jax.Array,
+                      params: jax.Array, mom: jax.Array, ema: jax.Array, *,
+                      server_lr: float, alpha: float = 0.5,
+                      momentum: float = 0.8, ema_anchor: float = 0.05,
+                      ema_decay: float = 0.95, qblock: int = QBLOCK,
+                      block_d: int = BLOCK_D, interpret: bool = True):
+    """Quantized-channel SDGA round: q (K, Dq) int8, scales (K, Dq/qblock),
+    staleness (K,), params/mom/ema (D,) -> (new_params, new_mom, new_ema),
+    all (D,), with blockwise dequantize fused into the single pass."""
+    K, Dq = q.shape
+    D = params.shape[0]
+    assert D <= Dq, (D, Dq)
+    q, scales, Dp = _pad_q8(q, scales, block_d, qblock)
+    pad = Dp - D
+    if pad:
+        params = jnp.pad(params, (0, pad))
+        mom = jnp.pad(mom, (0, pad))
+        ema = jnp.pad(ema, (0, pad))
+    vec_spec = pl.BlockSpec((block_d,), lambda i: (i,))
+    kern = functools.partial(
+        _sdga_q8_kernel, server_lr=server_lr, alpha=alpha, momentum=momentum,
+        ema_anchor=ema_anchor, ema_decay=ema_decay, qblock=qblock)
+    outs = pl.pallas_call(
+        kern,
+        grid=(Dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K, block_d), lambda i: (0, i)),
+            pl.BlockSpec((K, block_d // qblock), lambda i: (0, i)),
+            vec_spec, vec_spec, vec_spec,
+        ],
+        out_specs=[vec_spec, vec_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((Dp,), params.dtype),
+            jax.ShapeDtypeStruct((Dp,), jnp.float32),
+            jax.ShapeDtypeStruct((Dp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(staleness, q, scales, params, mom, ema)
     return tuple(o[:D] for o in outs)

@@ -38,6 +38,9 @@ def main() -> None:
     ap.add_argument("--rounds", type=int, default=30)
     ap.add_argument("--samples", type=int, default=2000)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--compress", action="store_true",
+                    help="int8 quantized upload channel (error-feedback "
+                         "residuals on gradient targets)")
     ap.add_argument("--json-out", default="")
     args = ap.parse_args()
 
@@ -77,7 +80,8 @@ def main() -> None:
            "fedopt": 0.005}.get(args.aggregation, 1.0)
     cfg = FLConfig(n_clients=args.clients, k=args.k, mode=args.mode,
                    aggregation=args.aggregation, client_lr=0.05,
-                   server_lr=slr, seed=args.seed, speed_sigma=0.8)
+                   server_lr=slr, seed=args.seed, speed_sigma=0.8,
+                   compress_updates=args.compress)
     eng = FLEngine(cfg, fn, ds.kind, p0, s0, shards, te.x[:400], te.y[:400])
     res = eng.run(args.rounds, log_every=max(args.rounds // 10, 1))
     summary = res.metrics.summary()
