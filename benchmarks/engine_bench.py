@@ -1,0 +1,195 @@
+"""End-to-end SAFL engine benchmark: sequential vs horizon-batched rounds/sec.
+
+Times whole semi-async ``FLEngine`` experiments on the same host, over K in
+{8, 16, 64} buffered uploads x two model sizes (the paper's LSTM text
+model, small / medium):
+
+  * ``seq``: the per-upload path (``batch_clients=False``) — one jitted
+    ``epoch_fn`` dispatch chain + flat-buffer row write per client upload.
+  * ``batched``: the horizon-batched path (PR 3 tentpole) — the event heap
+    is popped to each aggregation horizon and the K buffered local
+    trainings run as ONE vmapped XLA program over heterogeneous per-client
+    flat param rows (shard gather fused into the program), with eval
+    scalars landing in a device-resident metrics ring instead of per-round
+    ``float()`` syncs.
+
+Both columns run identical simulated schedules (same seed => same event
+heap; staleness histogram and byte accounting asserted equal) at the
+default ``eval_every=1``, so the ratio isolates the per-upload
+dispatch/sync overhead the batching removes.  Timing is best-of-reps over
+*marginal* rounds of warm engines with the reps interleaved seq/batched,
+so shared-host throughput drift hits both paths equally (the same
+discipline as benchmarks.agg_bench).
+
+The speedup is largest where per-upload program overhead dominates (small
+models / small shards — the small column) and tapers toward the compute
+bound as per-client work grows; on CPU hosts with few cores the vmapped
+wave cannot parallelize across clients, so large-model speedups here are
+a floor for what parallel hardware gives.
+
+Writes machine-readable ``BENCH_engine.json`` (rounds/sec + speedup per
+grid point) so the perf trajectory is tracked across PRs.
+
+    PYTHONPATH=src python -m benchmarks.engine_bench
+    # tiny CI smoke grid:
+    PYTHONPATH=src python -m benchmarks.engine_bench --ks 4 --models small \
+        --reps 3 --rounds-per-rep 2
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing
+import time
+
+import jax
+import numpy as np
+
+from repro.configs.base import FLConfig
+from repro.core import FLEngine
+from repro.data import build_client_shards, make_dataset, train_test_split
+from repro.models.lstm import build_lstm
+
+KS = (8, 16, 64)
+MODELS = {"small": dict(embed=2, hidden=4),
+          "medium": dict(embed=32, hidden=64)}
+WARMUP_ROUNDS = 3
+REPS = 7
+ROUNDS_PER_REP = 5
+OUT_PATH = "BENCH_engine.json"
+SCHEMA_VERSION = 1
+
+_CACHE = {}
+
+
+def _data(n_clients: int, batch_size: int = 8, per_client: int = 8):
+    key = (n_clients, batch_size, per_client)
+    if key in _CACHE:
+        return _CACHE[key]
+    ds = make_dataset("sentiment140", n=per_client * n_clients + 256,
+                      seed=0)
+    tr, te = train_test_split(ds)
+    shards = build_client_shards(tr, "iid", n_clients,
+                                 batch_size=batch_size, seed=0)
+    _CACHE[key] = (shards, te)
+    return shards, te
+
+
+def _model(name: str):
+    # ONE model per size: jitted client/eval programs are memoized on the
+    # apply_fn, so every engine over the same model shares one compile
+    key = ("model", name)
+    if key in _CACHE:
+        return _CACHE[key]
+    m = build_lstm(jax.random.PRNGKey(0), "sentiment", **MODELS[name])
+    _CACHE[key] = m
+    return m
+
+
+def bench_point(K: int, model: str, reps: int, rounds_per_rep: int) -> dict:
+    # 8x clients per buffer slot keeps most horizons single-wave (few
+    # repeat uploads), the schedule regime SAFL targets at scale
+    n_clients = max(8 * K, 32)
+    shards, te = _data(n_clients)
+    p0, s0, apply_fn = _model(model)
+
+    def mk(batched: bool) -> FLEngine:
+        cfg = FLConfig(n_clients=n_clients, k=K, mode="semi_async",
+                       aggregation="fedsgd", client_lr=0.05,
+                       server_lr=0.05, speed_sigma=0.3,
+                       target_accuracy=0.99, batch_clients=batched)
+        return FLEngine(cfg, apply_fn, "sentiment", p0, s0, shards,
+                        te.x[:48], te.y[:48])
+
+    total_rounds = WARMUP_ROUNDS + reps * rounds_per_rep
+    # the simulated schedule is deterministic and training-independent, so
+    # a throwaway batched run over the full timed range pre-compiles every
+    # wave-size program the timed engine will hit (jitted programs are
+    # shared across engines via the layout-keyed caches)
+    mk(True).run(total_rounds)
+    eng_s, eng_b = mk(False), mk(True)
+    # warm the per-engine server program + the sequential path's programs
+    eng_s.run(WARMUP_ROUNDS)
+    eng_b.run(WARMUP_ROUNDS)
+
+    best_s = best_b = float("inf")
+    ratios = []
+    total = WARMUP_ROUNDS
+    for rep in range(reps):
+        total += rounds_per_rep
+
+        def timed(eng):
+            t0 = time.perf_counter()
+            eng.run(total)  # continues from the engine's current round
+            return (time.perf_counter() - t0) / rounds_per_rep
+        # alternate which path runs first so within-pair drift has no
+        # preferred direction
+        if rep % 2 == 0:
+            rep_s, rep_b = timed(eng_s), timed(eng_b)
+        else:
+            rep_b, rep_s = timed(eng_b), timed(eng_s)
+        best_s, best_b = min(best_s, rep_s), min(best_b, rep_b)
+        # per-rep ratio: the two runs are temporally adjacent, so
+        # multi-second host-throughput drift cancels inside each pair;
+        # the median over pairs is the drift-robust speedup estimate
+        ratios.append(rep_s / rep_b)
+    # same simulated experiment in both columns
+    assert (eng_b.staleness_hist == eng_s.staleness_hist
+            and eng_b.tx_bytes == eng_s.tx_bytes
+            and eng_b.rx_bytes == eng_s.rx_bytes), \
+        "batched and sequential schedules diverged"
+    assert eng_b._server.compile_count in (1, -1), \
+        "batched server recompiled during bench"
+
+    return {"K": K, "model": model, "D": eng_b.codec.d,
+            "n_clients": n_clients, "rounds_timed": reps * rounds_per_rep,
+            "seq_ms_per_round": round(best_s * 1e3, 2),
+            "batched_ms_per_round": round(best_b * 1e3, 2),
+            "seq_rounds_per_sec": round(1.0 / best_s, 2),
+            "batched_rounds_per_sec": round(1.0 / best_b, 2),
+            "speedup": round(float(np.median(ratios)), 2)}
+
+
+def main(ks=KS, models=tuple(MODELS), reps: int = REPS,
+         rounds_per_rep: int = ROUNDS_PER_REP,
+         out_path: str = OUT_PATH) -> dict:
+    entries = []
+    print("# SAFL engine: sequential per-upload vs horizon-batched rounds "
+          "(same schedule, same host)")
+    print("K,model,D,seq_rps,batched_rps,speedup")
+    for model in models:
+        for K in ks:
+            e = bench_point(K, model, reps, rounds_per_rep)
+            entries.append(e)
+            print(f"{e['K']},{e['model']},{e['D']},"
+                  f"{e['seq_rounds_per_sec']},"
+                  f"{e['batched_rounds_per_sec']},{e['speedup']}x",
+                  flush=True)
+    report = {
+        "benchmark": "safl_engine",
+        "schema_version": SCHEMA_VERSION,
+        "backend": jax.default_backend(),
+        "cpu_count": multiprocessing.cpu_count(),
+        "aggregation": "fedsgd",
+        "eval_every": 1,
+        "entries": entries,
+    }
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"# wrote {out_path}")
+    return report
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ks", type=int, nargs="+", default=list(KS),
+                    help="aggregation buffer sizes K to sweep")
+    ap.add_argument("--models", nargs="+", default=list(MODELS),
+                    choices=list(MODELS), help="model sizes to sweep")
+    ap.add_argument("--reps", type=int, default=REPS,
+                    help="interleaved timing reps per path")
+    ap.add_argument("--rounds-per-rep", type=int, default=ROUNDS_PER_REP,
+                    help="aggregation rounds per timed rep")
+    ap.add_argument("--out", default=OUT_PATH, help="output JSON path")
+    a = ap.parse_args()
+    main(tuple(a.ks), tuple(a.models), a.reps, a.rounds_per_rep, a.out)

@@ -14,12 +14,14 @@ import time
 
 
 def main() -> None:
-    from benchmarks import (agg_bench, beyond_sdga, fig3_oscillation,
-                            kernel_bench, roofline, table1_accuracy,
-                            table2_resources, table3_convergence)
+    from benchmarks import (agg_bench, beyond_sdga, engine_bench,
+                            fig3_oscillation, kernel_bench, roofline,
+                            table1_accuracy, table2_resources,
+                            table3_convergence)
     sections = {
         "kernels": kernel_bench.main,
         "agg": agg_bench.main,  # writes BENCH_agg.json
+        "engine": engine_bench.main,  # writes BENCH_engine.json
         "table1": table1_accuracy.main,
         "table2": table2_resources.main,
         "table3": table3_convergence.main,

@@ -217,6 +217,17 @@ class FLConfig:
     compress_updates: bool = False
     quant_block: int = 512  # lanes per f32 absmax scale (wire granule)
     error_feedback: bool = True  # client-side residual on gradient targets
+    # engine execution policy (tentpole PR 3): the semi-async engine runs
+    # each aggregation horizon's K buffered local trainings as ONE vmapped
+    # XLA program over heterogeneous per-client flat param rows instead of
+    # K sequential dispatches, and defers metric scalars to a
+    # device-resident ring flushed at run end.  batch_clients=False forces
+    # the sequential per-upload path (the parity oracle).
+    batch_clients: bool = True
+    # evaluate (and record a metrics row for) every eval_every-th
+    # aggregation round; the final round is always evaluated.  1 = every
+    # round (the paper's per-round curves).
+    eval_every: int = 1
     # metrics
     target_accuracy: float = 0.5  # Acc_t for T_f / T_s
     oscillation_thresholds: Tuple[float, ...] = (0.02, 0.05, 0.10, 0.15)
@@ -237,3 +248,6 @@ class FLConfig:
         assert (8 <= self.quant_block <= 2048
                 and self.quant_block & (self.quant_block - 1) == 0), \
             "quant_block must be a power of two in [8, 2048]"
+        # every eval_every-th round is evaluated; 0 would record nothing
+        assert self.eval_every >= 1, "eval_every must be >= 1"
+        assert isinstance(self.batch_clients, bool)

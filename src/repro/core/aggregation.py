@@ -19,10 +19,11 @@ Variants (related work the paper cites + our beyond-paper SDGA):
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Pytree = Any
 
@@ -106,6 +107,30 @@ def fedasync_mix(global_params: Pytree, client_params: Pytree,
         lambda g, c: ((1.0 - alpha_tau) * g.astype(jnp.float32)
                       + alpha_tau * c.astype(jnp.float32)).astype(g.dtype),
         global_params, client_params)
+
+
+def fedasync_coefficients(staleness: Sequence[int], fedasync_alpha: float,
+                          alpha: float) -> jax.Array:
+    """Fold K sequential fedasync mixes into ONE buffered reduction.
+
+    Applying p <- (1 - a_i) p + a_i w_i for i = 1..K in arrival order
+    expands to p' = prod_i (1 - a_i) p + sum_i c_i w_i with
+
+        a_i = fedasync_alpha * (1 + tau_i)^(-alpha)
+        c_i = a_i * prod_{j > i} (1 - a_j)
+
+    and the coefficients sum to 1 - prod_i (1 - a_i), so the whole
+    buffered fedasync round is the single fused program
+    (1 - sum(c)) p + c @ u (``mode="mix"`` in the flat kernels).  Pure
+    host numpy over the host-resident staleness ints — no device sync.
+    """
+    a = fedasync_alpha * np.power(
+        1.0 + np.asarray(staleness, np.float32), -np.float32(alpha))
+    one_minus = (1.0 - a).astype(np.float32)
+    # tail_i = prod_{j>i} (1 - a_j): exclusive reversed cumprod
+    tail = np.concatenate(
+        [np.cumprod(one_minus[::-1])[::-1][1:], [np.float32(1.0)]])
+    return jnp.asarray(a * tail, jnp.float32)
 
 
 def fedbuff(global_params: Pytree, grads_stacked: Pytree,
@@ -196,11 +221,13 @@ class FlatServer:
     on CPU; ``pallas_interpret`` forces the kernel bodies through the
     interpreter for validation.
 
-    Modes: fedsgd / fedavg / fedbuff / fedopt / sdga.  The per-update
-    ``fedasync`` mixing is not a buffered reduction and stays on the tree
-    path.  The weight-input vector ``wvec`` is per-mode: unit weights
-    (fedsgd), data sizes (fedavg), staleness tau (fedbuff / fedopt / sdga —
-    discounted in-program).
+    Modes: fedsgd / fedavg / fedbuff / fedopt / sdga / fedasync.  The
+    weight-input vector ``wvec`` is per-mode: unit weights (fedsgd), data
+    sizes (fedavg), staleness tau (fedbuff / fedopt / sdga — discounted
+    in-program), or precomputed fold coefficients for fedasync
+    (:func:`fedasync_coefficients` — K sequential per-update mixes as one
+    unnormalized linear combination, so even the per-update aggregator
+    rides the fused flat channel).
 
     ``quantized=True`` switches the buffer input to the int8 flat channel:
     ``step`` consumes ``buf = (q int8 (K, Dq), scales f32 (K, Dq/qblock))``
@@ -210,7 +237,7 @@ class FlatServer:
     dominates memory-bound large-D rounds.
     """
 
-    MODES = ("fedsgd", "fedavg", "fedbuff", "fedopt", "sdga")
+    MODES = ("fedsgd", "fedavg", "fedbuff", "fedopt", "sdga", "fedasync")
 
     def __init__(self, mode: str, d: int, *, server_lr: float,
                  alpha: float = 0.5, momentum: float = 0.8,
@@ -219,7 +246,8 @@ class FlatServer:
                  backend: Optional[str] = None,
                  block_d: Optional[int] = None,
                  quantized: bool = False,
-                 qblock: Optional[int] = None):
+                 qblock: Optional[int] = None,
+                 donate: Optional[bool] = None):
         from repro.kernels import ref as _ref
         from repro.kernels import safl_agg as _k
 
@@ -257,8 +285,9 @@ class FlatServer:
 
         def _step(params, buf, wvec, opt):
             p0 = params.astype(jnp.float32)
-            if mode in ("fedsgd", "fedavg", "fedbuff"):
-                kmode = "avg" if mode == "fedavg" else "fedsgd"
+            if mode in ("fedsgd", "fedavg", "fedbuff", "fedasync"):
+                kmode = {"fedavg": "avg", "fedasync": "mix"}.get(mode,
+                                                                 "fedsgd")
                 disc = "poly" if mode == "fedbuff" else "none"
                 if use_pallas and quantized:
                     q, scales = buf
@@ -276,14 +305,25 @@ class FlatServer:
                         server_lr=server_lr, mode=kmode, block_d=bd,
                         interpret=interpret, alpha=alpha, discount=disc)
                 elif quantized:
-                    g = q8_mean(buf, discounted(wvec))
-                    if mode == "fedavg":
-                        new = g
+                    if mode == "fedasync":
+                        # unnormalized fold: the coefficients already sum
+                        # to the total mixed-in mass
+                        q, scales = buf
+                        g = _ref.weighted_sum_q8_ref(
+                            q, scales, wvec.astype(jnp.float32), qb)[:d]
+                        new = ((1.0 - jnp.sum(wvec.astype(jnp.float32)))
+                               * p0 + g).astype(params.dtype)
                     else:
-                        new = (p0 - server_lr * g).astype(params.dtype)
+                        g = q8_mean(buf, discounted(wvec))
+                        if mode == "fedavg":
+                            new = g
+                        else:
+                            new = (p0 - server_lr * g).astype(params.dtype)
                 else:
                     w = discounted(wvec)
-                    if mode == "fedavg":
+                    if mode == "fedasync":
+                        new = _ref.fedasync_flat_ref(buf, w, params)
+                    elif mode == "fedavg":
                         new = _ref.weighted_avg_ref(buf, w)
                     else:
                         new = _ref.safl_agg_ref(buf, w, params, server_lr)
@@ -345,9 +385,13 @@ class FlatServer:
         # backend donation is a measured pessimization: aliasing the output
         # onto the donated params forces XLA to split the fused step (the
         # update-norm metric still reads the pre-step params), costing
-        # extra full-D round-trips per round.
-        donate = (0, 3) if use_pallas else ()
-        self._fn = jax.jit(_step, donate_argnums=donate)
+        # extra full-D round-trips per round.  Callers that keep references
+        # to past params (the horizon-batched SAFL engine hands the current
+        # flat global model to refreshing clients) must pass donate=False —
+        # donation invalidates the buffer even while it is still referenced.
+        if donate is None:
+            donate = use_pallas
+        self._fn = jax.jit(_step, donate_argnums=(0, 3) if donate else ())
 
     def init_opt(self, params_flat: jax.Array):
         """Mode-matched slow state (flat f32 vectors, donated each round)."""

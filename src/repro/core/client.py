@@ -157,18 +157,88 @@ def make_batched_local_train(apply_fn: Callable, kind: str,
     return round_fn
 
 
+def _codec_key(codec) -> tuple:
+    """Hashable static layout of a PytreeCodec — programs built over one
+    layout are shared by every codec instance with the same layout."""
+    return (codec.treedef, tuple(codec.shapes),
+            tuple(str(d) for d in codec.dtypes), codec.qblock)
+
+
+def make_batched_hetero_train(apply_fn: Callable, kind: str, target: str,
+                              local_epochs: int, codec):
+    """One vmapped XLA program for a whole SAFL horizon wave of K clients
+    with *heterogeneous* parameters.
+
+    Unlike :func:`make_batched_local_train` (SFL: all K clients start from
+    the one broadcast global model, so only shard data is batched), the
+    semi-async schedule leaves every client on its own weights — so params
+    are batched too, carried as flat (K, D) f32 rows
+    (:class:`repro.core.flatbuf.PytreeCodec` layout).  Each vmapped lane
+    unravels its row to the model pytree, runs ``local_epochs`` of the
+    shared epoch body (identical numerics to the sequential path by
+    construction), and re-ravels, emitting:
+
+      * ``vecs`` (K, D): the upload rows — cumulative gradient
+        (row_start - row_end)/lr for ``target="grad"`` (Eq. 3), the final
+        local weights for ``target="params"``;
+      * ``new_flat`` (K, D): the final local weights as flat rows (the
+        clients' carried state for the next upload period);
+      * the K-stacked final model states and per-client mean losses
+        (device scalars — never fetched in the hot loop).
+
+    The wave's shard data is *gathered inside the program*: callers pass
+    the engine's device-resident (n_clients, ...) shard bank plus the
+    (K,) client-index vector, so a wave is one dispatch with no separate
+    gather ops.  Memoized on (apply_fn, kind, target, local_epochs, codec
+    layout); K is a static shape, so each distinct wave size compiles
+    once and is cached (wave sizes are bounded by the buffer size K).
+    """
+    key = ("hetero", apply_fn, kind, target, local_epochs,
+           _codec_key(codec))
+    if key in _FN_CACHE:
+        return _FN_CACHE[key]
+    epoch = _make_epoch_body(apply_fn, kind)
+    unravel, ravel = codec.unravel_fn, codec.ravel_fn
+
+    @jax.jit
+    def round_fn(flat_k, states_k, xs_all, ys_all, mask_all, idx, lr):
+        def per_client(flat, state, xs, ys, mask):
+            p, s = unravel(flat), state
+            loss = jnp.float32(0.0)
+            for _ in range(local_epochs):
+                p, s, loss = epoch(p, s, xs, ys, mask, lr)
+            new_flat = ravel(p)
+            if target == "grad":
+                vec = (flat - new_flat) / lr
+            else:
+                vec = new_flat
+            return vec, new_flat, s, loss
+
+        return jax.vmap(per_client)(flat_k, states_k, xs_all[idx],
+                                    ys_all[idx], mask_all[idx])
+
+    _FN_CACHE[key] = round_fn
+    return round_fn
+
+
+@functools.lru_cache(maxsize=None)
+def _row_stacker(n: int):
+    """One-dispatch stack of n (D,) rows (``jnp.stack`` outside jit is an
+    expand_dims per operand + concat — ~n dispatches per wave)."""
+    return jax.jit(lambda *rows: jnp.stack(rows))
+
+
+def stack_rows(rows) -> jax.Array:
+    return _row_stacker(len(rows))(*rows)
+
+
 def cumulative_gradient(w_start: Pytree, w_end: Pytree, lr: float) -> Pytree:
     """FedSGD upload payload: sum of applied mini-batch gradients (Eq. 3)."""
     return jax.tree_util.tree_map(
         lambda a, b: (a - b) / lr, w_start, w_end)
 
 
-def make_eval_fn(apply_fn: Callable, kind: str):
-    key = ("eval", apply_fn, kind)
-    if key in _FN_CACHE:
-        return _FN_CACHE[key]
-
-    @jax.jit
+def _make_eval_body(apply_fn: Callable, kind: str):
     def evaluate(params, model_state, x, y):
         logits, _ = apply_fn(params, model_state, x, False)
         if kind == "char":
@@ -182,6 +252,29 @@ def make_eval_fn(apply_fn: Callable, kind: str):
             loss = sequence_loss(logits, y)
         return acc, loss
 
+    return evaluate
+
+
+def make_eval_fn(apply_fn: Callable, kind: str):
+    key = ("eval", apply_fn, kind)
+    if key in _FN_CACHE:
+        return _FN_CACHE[key]
+    evaluate = jax.jit(_make_eval_body(apply_fn, kind))
+    _FN_CACHE[key] = evaluate
+    return evaluate
+
+
+def make_flat_eval_fn(apply_fn: Callable, kind: str, codec):
+    """``evaluate(flat_params, state, x, y)`` with the unravel fused into
+    the jitted program — the batched engine keeps the global model as a
+    flat (D,) row end-to-end and never materializes the pytree per eval."""
+    key = ("eval_flat", apply_fn, kind, _codec_key(codec))
+    if key in _FN_CACHE:
+        return _FN_CACHE[key]
+    body = _make_eval_body(apply_fn, kind)
+    unravel = codec.unravel_fn
+    evaluate = jax.jit(
+        lambda flat, state, x, y: body(unravel(flat), state, x, y))
     _FN_CACHE[key] = evaluate
     return evaluate
 

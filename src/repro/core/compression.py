@@ -9,12 +9,12 @@ Two schemes over flat update pytrees:
     into (n_blocks, BLOCK) rows and back.
   * top-k magnitude sparsification (indices + values).
 
-Both report the bytes that *would* cross the channel, which the FL engine
-uses for its accounting when compression is enabled.  The flat (K, D)
-server path does not come through here — it quantizes inside
+Both report the bytes that *would* cross the channel.  The FL engine does
+not come through here anymore — every aggregation mode (fedasync
+included, via the folded ``mix`` kernel) quantizes inside
 ``repro.core.flatbuf.PytreeCodec`` and aggregates int8 directly
-(``repro.kernels.safl_agg.*_q8``); this tree path serves fedasync's
-per-update mixing and ad-hoc pytree compression.
+(``repro.kernels.safl_agg.*_q8``); this tree path serves ad-hoc pytree
+compression and the transmission-load studies.
 """
 from __future__ import annotations
 

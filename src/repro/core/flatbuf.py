@@ -117,6 +117,12 @@ class PytreeCodec:
         self.ravel = jax.jit(_ravel)
         self.ravel_delta = jax.jit(_ravel_delta)
         self.unravel = jax.jit(_unravel)
+        # unjitted bodies, composable into *other* jitted programs (the
+        # horizon-batched client round unravels each flat param row inside
+        # its vmapped training program; the flat eval fuses the unravel
+        # into the jitted eval call)
+        self.ravel_fn = _ravel
+        self.unravel_fn = _unravel
         # vmapped ravel: (K-leading stacked tree) -> (K, D) buffer in one call
         self.ravel_stacked = jax.jit(jax.vmap(_ravel))
 
@@ -161,6 +167,25 @@ def write_slot(buf: jax.Array, vec: jax.Array, slot: jax.Array) -> jax.Array:
         buf, vec.astype(buf.dtype)[None], (slot, jnp.int32(0)))
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def write_rows(buf: jax.Array, rows: jax.Array,
+               slots: jax.Array) -> jax.Array:
+    """buf[slots] <- rows, in place (buf donated).  The batched SAFL
+    horizon emits one wave of client updates as a (Kw, D) block and
+    scatters it into the wave's buffer slots with ONE program (slots are
+    traced; row count Kw is a static shape, so each distinct wave size
+    compiles once and is cached)."""
+    return buf.at[slots].set(rows.astype(buf.dtype))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def _write_q_rows(q: jax.Array, scales: jax.Array, q_rows: jax.Array,
+                  s_rows: jax.Array, slots: jax.Array):
+    """(q[slots], scales[slots]) <- (q_rows, s_rows), both donated."""
+    return (q.at[slots].set(q_rows),
+            scales.at[slots].set(s_rows.astype(scales.dtype)))
+
+
 @functools.partial(jax.jit, donate_argnums=(0, 1))
 def _write_q_slot(q: jax.Array, scales: jax.Array, q_vec: jax.Array,
                   s_vec: jax.Array, slot: jax.Array):
@@ -187,6 +212,14 @@ class QuantBuffer:
     def write(self, q_vec: jax.Array, s_vec: jax.Array, slot) -> None:
         self.q, self.scales = _write_q_slot(self.q, self.scales, q_vec,
                                             s_vec, jnp.int32(slot))
+
+    def write_rows(self, q_rows: jax.Array, s_rows: jax.Array,
+                   slots: jax.Array) -> None:
+        """Scatter one wave of quantized rows into their slots (both
+        backing arrays donated — in-place device writes)."""
+        self.q, self.scales = _write_q_rows(self.q, self.scales, q_rows,
+                                            s_rows, jnp.asarray(slots,
+                                                                jnp.int32))
 
     def set_rows(self, q: jax.Array, scales: jax.Array) -> None:
         """Adopt a whole round's rows at once (batched SFL round)."""

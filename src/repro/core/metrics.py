@@ -7,13 +7,75 @@ Tracks per-round accuracy/loss/time/bytes and derives:
     by more than a threshold (§4.4.4, Fig. 3);
   * resource utilization: cumulative transmission bytes per direction,
     simulated training duration, peak resident parameter memory (§4.4.2).
+
+:class:`DeviceMetricsRing` is the device-resident half of the batched
+engine's metric path: per-round eval/update-norm scalars are appended as
+jitted in-place writes (no ``float()`` host sync in the hot loop) and the
+whole ring crosses to the host ONCE when the run flushes.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
+
+
+class DeviceMetricsRing:
+    """Preallocated (capacity, channels) f32 device buffer of per-round
+    scalar metrics.
+
+    ``append`` takes *device* scalars (jit outputs: eval accuracy/loss,
+    the server round's update norm) and writes them into the next row
+    with the buffer donated — one tiny async dispatch, no host transfer,
+    so the engine's hot loop never blocks on a metric.  ``flush`` does
+    the single device->host copy at run end.
+    """
+
+    def __init__(self, capacity: int, channels: int = 3):
+        # lazy import keeps this module importable without jax for
+        # host-only consumers of MetricsLog
+        import jax.numpy as jnp
+        self.capacity = int(capacity)
+        self.channels = int(channels)
+        # bucket the allocation to a power of two (>= 64): the donated
+        # writer program is shape-specialized, so arbitrary capacities
+        # would compile one writer per distinct run length
+        cap = 1 << (max(64, self.capacity) - 1).bit_length()
+        self._buf = jnp.zeros((cap, self.channels), jnp.float32)
+        self._n = 0
+
+    def append(self, *scalars) -> None:
+        assert len(scalars) == self.channels, (len(scalars), self.channels)
+        assert self._n < self.capacity, "metrics ring full"
+        import jax.numpy as jnp
+        self._buf = _ring_write(self._buf, jnp.int32(self._n), *scalars)
+        self._n += 1
+
+    def __len__(self) -> int:
+        return self._n
+
+    def flush(self) -> np.ndarray:
+        """One host transfer: the (n, channels) rows appended so far."""
+        return np.asarray(self._buf[:self._n])
+
+
+@functools.lru_cache(maxsize=None)
+def _ring_writer(channels: int):
+    import jax
+    import jax.numpy as jnp
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def write(buf, i, *scalars):
+        row = jnp.stack([jnp.asarray(s, jnp.float32) for s in scalars])
+        return jax.lax.dynamic_update_slice(buf, row[None], (i, 0))
+
+    return write
+
+
+def _ring_write(buf, i, *scalars):
+    return _ring_writer(len(scalars))(buf, i, *scalars)
 
 
 @dataclasses.dataclass

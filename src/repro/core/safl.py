@@ -1,12 +1,9 @@
 """SFL / SAFL engines (paper §2.2, Fig. 1) — discrete-event simulation.
 
 Only *simulated* wall-clock (lognormal per-client compute speeds +
-communication latency) is event-driven; host compute is eager: when a
-client's upload event is popped off the heap, ``_run_local`` immediately
-runs its ``local_epochs`` on the host (one shared jitted XLA program for
-every client, shards padded to a common batch count) and the result is
-serialized into the aggregation buffer right away.  Simulated time orders
-the events; it does not defer any computation.
+communication latency) is event-driven; host compute batches to the
+schedule's dependency structure.  Simulated time orders the events; it
+does not defer any computation.
 
 Synchronous (SFL, Fig. 1a): each round the server activates K random
 clients, waits for all of them (round time = slowest active client — the
@@ -19,10 +16,28 @@ Semi-asynchronous (SAFL, Fig. 1b): clients train continuously at their own
 pace and upload after each local epoch; the server aggregates as soon as K
 updates are buffered and broadcasts; a client adopts the newest global model
 at its next upload boundary, otherwise continues training its local one —
-so buffered updates carry staleness τ = t_now − t_client_version.  Each
-upload is raveled (flatbuf.PytreeCodec) and written into its slot of the
-preallocated (K, D) device buffer with the buffer donated (in-place row
-write).
+so buffered updates carry staleness τ = t_now − t_client_version.
+
+*Horizon-batched execution* (``batch_clients=True``, the default): between
+two aggregation boundaries the K buffered uploads depend only on state
+fixed at the previous boundary — each client's first upload of the horizon
+trains from its own carried weights, and every later upload of the same
+client trains from the freshly adopted global model or its own local chain.
+The engine therefore pops the event heap to the next aggregation horizon
+up front, groups the K events into *waves* (event #j of a client within
+the horizon is wave j; in steady state almost everything is wave 0), and
+runs each wave as ONE vmapped XLA program over heterogeneous per-client
+parameters (client.make_batched_hetero_train).  Clients carry their
+weights as flat (D,) rows (flatbuf.PytreeCodec layout), so stacking a wave
+is one device concat, the wave program emits the (K, D) update rows
+directly into the aggregation buffer (one scatter per wave), and the
+global model stays flat end-to-end — it is unraveled to a pytree exactly
+once, when the run finishes.  No ``float()`` host sync survives in the
+hot loop: per-upload losses are never fetched, eval is an
+``eval_every``-gated jitted call, and eval/update-norm scalars land in a
+device-resident metrics ring (metrics.DeviceMetricsRing) flushed once at
+run end.  ``batch_clients=False`` forces the sequential per-upload path —
+the parity oracle for the batched schedule.
 
 Quantized channel (``compress_updates=True``): int8 is the native wire and
 buffer format, not a detour through f32.  A gradient-target upload is ONE
@@ -32,33 +47,36 @@ residual — what quantization dropped this round is re-added to the next
 upload, so the noise telescopes instead of accumulating.  Model-target
 uploads quantize the weights themselves (``ravel_q8``, no residual).  The
 rows live in a donated :class:`repro.core.flatbuf.QuantBuffer` (int8
-values + per-block f32 scales) and the server round fuses the dequantize
-into the aggregation pass.
+values + per-block f32 scales), batched waves quantize all their rows in
+one vmapped program (``quantize_rows``), and the server round fuses the
+dequantize into the aggregation pass.
 
-The server round itself is ONE jitted, donating program
+The server round itself is ONE jitted program
 (:class:`repro.core.aggregation.FlatServer` — fused [dequantize +]
 staleness discount + weighted reduction + server step + update-norm metric,
-Pallas-backed on TPU) for every buffered-reduction aggregator (fedsgd /
-fedavg / fedbuff / fedopt / sdga); only fedasync's per-update mixing stays
-on the pytree path (quantized per-leaf via repro.core.compression when the
-channel is on).
+Pallas-backed on TPU) for EVERY aggregation mode: fedsgd / fedavg /
+fedbuff / fedopt / sdga as buffered reductions, and fedasync's K
+sequential per-update mixes folded into one linear combination
+(aggregation.fedasync_coefficients + the kernels' ``mix`` mode) — the
+per-leaf pytree aggregation path is fully retired.
 """
 from __future__ import annotations
 
 import dataclasses
 import heapq
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aggregation as agg
-from repro.core import compression
 from repro.core import flatbuf
-from repro.core.client import (ClientState, make_batched_local_train,
-                               make_eval_fn, make_local_train, pytree_bytes)
-from repro.core.metrics import MetricsLog
+from repro.core.client import (ClientState, make_batched_hetero_train,
+                               make_batched_local_train, make_eval_fn,
+                               make_flat_eval_fn, make_local_train,
+                               pytree_bytes, stack_rows)
+from repro.core.metrics import DeviceMetricsRing, MetricsLog
 
 Pytree = Any
 
@@ -68,6 +86,9 @@ _BASE_RATE = 500.0
 # structure; gradient upload (FedSGD) is a bare tensor list (paper §5.1.2)
 _MODEL_ENVELOPE = 0.010
 _GRAD_ENVELOPE = 0.002
+
+# aggregation targets that upload model weights (vs cumulative gradients)
+_MODEL_TARGETS = ("fedavg", "fedasync")
 
 
 @dataclasses.dataclass
@@ -120,46 +141,69 @@ class FLEngine:
         self._state_bytes = pytree_bytes(init_state)
         self._last_update_norm = 0.0
 
-        # ---- flat-buffer server path ----
+        # ---- flat-buffer server path (every mode, fedasync included) ----
         self.codec = flatbuf.PytreeCodec(init_params,
                                          qblock=fl_cfg.quant_block)
         self._flat_params = self.codec.ravel(init_params)
-        self._flat = fl_cfg.aggregation in agg.FlatServer.MODES
+        assert fl_cfg.aggregation in agg.FlatServer.MODES
+        # batched semi-async clients keep references to past flat global
+        # models (adopted at their upload boundary), so the server must
+        # not donate-invalidate its params buffer in that mode
+        self._batched_async = (fl_cfg.mode == "semi_async"
+                               and fl_cfg.batch_clients)
         # int8 native channel: quantized rows + fused dequant-aggregate
-        self._quant = self._flat and fl_cfg.compress_updates
+        self._quant = fl_cfg.compress_updates
         self._qbuf = None
         self._buf = None
         # per-client error-feedback residuals (dq,), created on first upload
         self._residuals: Dict[int, jax.Array] = {}
-        if self._flat:
-            self._server = agg.FlatServer(
-                fl_cfg.aggregation, self.codec.d,
-                server_lr=fl_cfg.server_lr, alpha=fl_cfg.staleness_alpha,
-                momentum=fl_cfg.server_momentum or 0.8,
-                ema_anchor=fl_cfg.ema_anchor or 0.05,
-                quantized=self._quant, qblock=fl_cfg.quant_block)
-            self._opt = self._server.init_opt(self._flat_params)
-            if self._quant:
-                self._qbuf = flatbuf.QuantBuffer(fl_cfg.k, self.codec.d,
-                                                 fl_cfg.quant_block)
-            else:
-                self._buf = flatbuf.alloc_buffer(fl_cfg.k, self.codec.d)
+        self._server = agg.FlatServer(
+            fl_cfg.aggregation, self.codec.d,
+            server_lr=fl_cfg.server_lr, alpha=fl_cfg.staleness_alpha,
+            momentum=fl_cfg.server_momentum or 0.8,
+            ema_anchor=fl_cfg.ema_anchor or 0.05,
+            quantized=self._quant, qblock=fl_cfg.quant_block,
+            donate=False if self._batched_async else None)
+        self._opt = self._server.init_opt(self._flat_params)
+        if self._quant:
+            self._qbuf = flatbuf.QuantBuffer(fl_cfg.k, self.codec.d,
+                                             fl_cfg.quant_block)
         else:
-            self._server = None
-            self._opt = None
+            self._buf = flatbuf.alloc_buffer(fl_cfg.k, self.codec.d)
+        # batched mode defers the per-round unravel; run() materializes
+        # the global pytree once at the end
+        self._global_stale = False
+        # device-resident (n_clients, ...) shard bank for the batched
+        # path, built once on first use (waves gather rows in-program)
+        self._shard_bank = None
+        # the semi-async event heap persists across run() calls, so
+        # incremental runs (run(5) then run(10)) continue ONE simulated
+        # schedule instead of re-jittering and restarting simulated time
+        self._heap: Optional[List[Tuple[float, int]]] = None
+        # batched-mode client weights (flat (D,) rows) persist alongside
+        # the heap — the counterpart of ClientState.params on the
+        # sequential path
+        self._client_flats: Optional[List[jax.Array]] = None
 
     # ------------------------------------------------------------------
     def _epoch_time(self, c: ClientState) -> float:
+        """Simulated seconds for one upload period (local_epochs) of c."""
         per_epoch = c.n_samples / (_BASE_RATE * c.speed)
-        # FedAvg's aggregation bookkeeping (data-volume query + weighting
-        # coefficients) adds server-side latency per paper §5.1.2 Table 2
         return per_epoch * self.cfg.local_epochs
 
     def _agg_overhead(self) -> float:
+        # FedAvg-style aggregation bookkeeping (the data-volume query and
+        # per-client weighting coefficients, paper §5.1.2 Table 2) adds
+        # server-side latency that scales with the number of buffered
+        # updates — modeled as 0.05 simulated seconds per buffered upload.
+        # FedSGD's unweighted gradient mean needs no per-client
+        # bookkeeping and pays a flat 0.01 s.
         return 0.05 * self.cfg.k if self.cfg.aggregation != "fedsgd" else 0.01
 
     def _run_local(self, c: ClientState):
-        """Run one local 'upload period' (local_epochs) for client c."""
+        """Run one local 'upload period' (local_epochs) for client c.
+        The returned loss is a device scalar — never fetched in the
+        engine loop."""
         shard = self.shards[c.cid]
         params, state = c.params, c.model_state
         loss = jnp.float32(0.0)
@@ -167,7 +211,7 @@ class FLEngine:
             params, state, loss = self.epoch_fn(
                 params, state, shard["xs"], shard["ys"], shard["mask"],
                 self.cfg.client_lr)
-        return params, state, float(loss)
+        return params, state, loss
 
     # ------------------------------------------------------------------
     def _upload_nbytes(self) -> int:
@@ -175,7 +219,7 @@ class FLEngine:
         channel the payload is int8 values + one f32 scale per quant_block
         lanes (model targets still ship the non-trainable state in f32 —
         it is tiny and structurally heterogeneous)."""
-        model_target = self.cfg.aggregation in ("fedavg", "fedasync")
+        model_target = self.cfg.aggregation in _MODEL_TARGETS
         if self.cfg.compress_updates:
             payload = self.codec.dq + self.codec.n_qblocks * 4
         else:
@@ -193,31 +237,17 @@ class FLEngine:
 
     def _enqueue_upload(self, buffer: List[Dict], c: ClientState,
                         w_end, s_end, staleness: int) -> None:
-        """Serialize one client upload.  Flat modes ravel the update and
-        write it into the buffer row for the next free slot (the buffer is
-        donated — an in-place device write); with the quantized channel the
-        row is emitted as int8 + block scales by one fused program and the
-        error-feedback residual stays client-side.  fedasync stashes the
-        payload pytree.  Must be called before ``c.params`` is refreshed
-        (gradient targets diff against the client's round-start weights)."""
+        """Serialize one client upload: ravel the update and write it into
+        the buffer row for the next free slot (the buffer is donated — an
+        in-place device write); with the quantized channel the row is
+        emitted as int8 + block scales by one fused program and the
+        error-feedback residual stays client-side.  Must be called before
+        ``c.params`` is refreshed (gradient targets diff against the
+        client's round-start weights)."""
         cfg = self.cfg
         entry: Dict = {"staleness": staleness, "cid": c.cid,
                        "n": c.n_samples}
-        nbytes = self._upload_nbytes()
-        if cfg.aggregation == "fedasync":
-            if cfg.compress_updates:
-                # per-leaf int8 on the tree path: the server mixes the
-                # dequantized weights (what crossed the channel), and the
-                # bytes charged are the actual per-leaf-padded payload
-                qs, qbytes = compression.quantize_pytree(w_end)
-                entry["payload"] = {
-                    "params": compression.dequantize_pytree(qs),
-                    "state": s_end}
-                nbytes = int((qbytes + self._state_bytes)
-                             * (1 + _MODEL_ENVELOPE))
-            else:
-                entry["payload"] = {"params": w_end, "state": s_end}
-        elif cfg.aggregation == "fedavg":
+        if cfg.aggregation in _MODEL_TARGETS:
             if self._quant:
                 # model target: quantize the weights themselves (weights do
                 # not accumulate across rounds — no error feedback)
@@ -246,44 +276,55 @@ class FLEngine:
                                              cfg.client_lr)
                 self._buf = flatbuf.write_slot(self._buf, vec,
                                                jnp.int32(len(buffer)))
-            entry["bn_state"] = s_end
-        self.tx_bytes += nbytes
+            entry["state"] = s_end
+        self.tx_bytes += self._upload_nbytes()
         buffer.append(entry)
 
     # ------------------------------------------------------------------
-    def _aggregate(self, buffer: List[Dict],
-                   states_stacked: Optional[Pytree] = None) -> None:
+    def _weight_vector(self, staleness: Sequence[int],
+                       sizes: Sequence[int]) -> jax.Array:
+        """Per-mode weight-input vector for the flat server program."""
         cfg = self.cfg
-        for b in buffer:
-            s = int(b["staleness"])
-            self.staleness_hist[s] = self.staleness_hist.get(s, 0) + 1
-
-        if cfg.aggregation == "fedasync":
-            for b in buffer:
-                a_tau = cfg.fedasync_alpha * float(
-                    agg.staleness_poly(jnp.float32(b["staleness"]),
-                                       cfg.staleness_alpha))
-                self.global_params = agg.fedasync_mix(
-                    self.global_params, b["payload"]["params"],
-                    jnp.float32(a_tau))
-                self.global_state = b["payload"]["state"]
-            self.t_global += 1
-            return
-
-        # flat-buffer path: ONE jitted donating program per round
         if cfg.aggregation == "fedavg":
-            wvec = jnp.asarray([b["n"] for b in buffer], jnp.float32)
-        elif cfg.aggregation == "fedsgd":
-            wvec = jnp.ones((len(buffer),), jnp.float32)
-        else:  # staleness-discounted modes discount in-program
-            wvec = jnp.asarray([b["staleness"] for b in buffer],
-                               jnp.float32)
+            return jnp.asarray(sizes, jnp.float32)
+        if cfg.aggregation == "fedsgd":
+            return jnp.ones((len(staleness),), jnp.float32)
+        if cfg.aggregation == "fedasync":
+            # K sequential mixes folded into one reduction (host math
+            # over host ints — no device sync)
+            return agg.fedasync_coefficients(
+                staleness, cfg.fedasync_alpha, cfg.staleness_alpha)
+        # staleness-discounted modes discount in-program
+        return jnp.asarray(staleness, jnp.float32)
+
+    def _server_round(self, staleness: Sequence[int],
+                      sizes: Sequence[int]) -> Dict[str, jax.Array]:
+        """ONE jitted flat server program + host bookkeeping shared by the
+        sequential and horizon-batched paths.  Returns the round's device
+        metric scalars (update_norm) without fetching them."""
+        for s in staleness:
+            s = int(s)
+            self.staleness_hist[s] = self.staleness_hist.get(s, 0) + 1
+        wvec = self._weight_vector(staleness, sizes)
         self._flat_params, self._opt, m = self._server.step(
             self._flat_params,
             self._qbuf.views if self._quant else self._buf,
             wvec, self._opt)
+        self.t_global += 1
+        # broadcast of the new global model to all clients
+        self.rx_bytes += int((self._params_bytes + self._state_bytes)
+                             * len(self.clients))
+        return m
+
+    def _aggregate(self, buffer: List[Dict],
+                   states_stacked: Optional[Pytree] = None):
+        """Sequential-path aggregation: flat server round + non-trainable
+        state handling + per-round unravel of the global pytree."""
+        cfg = self.cfg
+        m = self._server_round([b["staleness"] for b in buffer],
+                               [b["n"] for b in buffer])
         self.global_params = self.codec.unravel(self._flat_params)
-        self._last_update_norm = float(m["update_norm"])
+        self._last_update_norm = m["update_norm"]
 
         # non-trainable state (BN running stats) rides the tree path — it
         # is tiny next to D and structurally heterogeneous
@@ -297,36 +338,44 @@ class FLEngine:
                 sizes = jnp.asarray([b["n"] for b in buffer], jnp.float32)
                 self.global_state = agg.weighted_mean(states_stacked, sizes)
         else:
-            # gradient targets adopt the newest buffered BN state
+            # gradient targets and fedasync adopt the newest buffered state
             if states_stacked is not None:
                 self.global_state = jax.tree_util.tree_map(
                     lambda s: s[-1], states_stacked)
             else:
-                self.global_state = buffer[-1].get("bn_state",
+                self.global_state = buffer[-1].get("state",
                                                    self.global_state)
-        self.t_global += 1
+        return m
+
+    def _eval_due(self, rnd: int, n_rounds: int) -> bool:
+        """Evaluate every eval_every-th aggregation + always the last."""
+        return rnd % self.cfg.eval_every == 0 or rnd == n_rounds
 
     def _eval_and_record(self, now: float, stale_vals: Sequence[int]) -> None:
         acc, loss = self.eval_fn(self.global_params, self.global_state,
                                  self.test_x, self.test_y)
         acc, loss = float(acc), float(loss)
         nan_event = not np.isfinite(loss)
-        # broadcast of the new global model to all clients
-        self.rx_bytes += int((self._params_bytes + self._state_bytes)
-                             * len(self.clients))
         self.metrics.record(
             round=self.t_global, sim_time=now, accuracy=acc, loss=loss,
             tx_bytes=self.tx_bytes, rx_bytes=self.rx_bytes,
             mean_staleness=float(np.mean(stale_vals)) if stale_vals else 0.0,
             max_staleness=int(max(stale_vals)) if stale_vals else 0,
-            nan_event=nan_event, update_norm=self._last_update_norm)
+            nan_event=nan_event,
+            update_norm=float(self._last_update_norm))
 
     # ------------------------------------------------------------------
     def run(self, n_rounds: int, log_every: int = 0) -> FLResult:
         if self.cfg.mode == "sync":
             self._run_sync(n_rounds, log_every)
+        elif self.cfg.batch_clients:
+            self._run_semi_async_batched(n_rounds, log_every)
         else:
             self._run_semi_async(n_rounds, log_every)
+        if self._global_stale:
+            # flat end-to-end: the ONE unravel of the whole run
+            self.global_params = self.codec.unravel(self._flat_params)
+            self._global_stale = False
         return FLResult(self.metrics, self.global_params,
                         self.staleness_hist, self.idle_time)
 
@@ -336,9 +385,10 @@ class FLEngine:
         # the whole K-client round as one vmapped program; with the
         # quantized channel the K rows are quantized in one vmapped
         # program too (same per-row math as the sequential path)
-        batched = self._flat
+        batched = cfg.batch_clients
         if batched:
-            target = "params" if cfg.aggregation == "fedavg" else "grad"
+            target = ("params" if cfg.aggregation in _MODEL_TARGETS
+                      else "grad")
             round_fn = make_batched_local_train(
                 self.apply_fn, self.kind, target, cfg.local_epochs)
         now = 0.0
@@ -360,7 +410,7 @@ class FLEngine:
                     # quantize all K rows in one vmapped program; gradient
                     # targets thread their error-feedback residuals through
                     use_ef = (cfg.error_feedback
-                              and cfg.aggregation != "fedavg")
+                              and cfg.aggregation not in _MODEL_TARGETS)
                     if use_ef:
                         res = jnp.stack([self._residual(int(cid))
                                          for cid in active])
@@ -394,19 +444,16 @@ class FLEngine:
             self.idle_time += sum(round_t - d for d in durations)
             now += round_t
             self._aggregate(buffer, states_stacked=states_k)
-            self._eval_and_record(now, [0] * len(buffer))
-            if log_every and self.t_global % log_every == 0:
-                r = self.metrics.records[-1]
-                print(f"  [SFL-{cfg.aggregation}] round {r.round} "
-                      f"acc={r.accuracy:.4f} loss={r.loss:.4f}")
+            if self._eval_due(self.t_global, n_rounds):
+                self._eval_and_record(now, [0] * len(buffer))
+                if log_every and self.t_global % log_every == 0:
+                    r = self.metrics.records[-1]
+                    print(f"  [SFL-{cfg.aggregation}] round {r.round} "
+                          f"acc={r.accuracy:.4f} loss={r.loss:.4f}")
 
-    # ----- SAFL -----
+    # ----- SAFL: sequential per-upload path (the parity oracle) -----
     def _run_semi_async(self, n_rounds: int, log_every: int) -> None:
-        heap: List = []
-        for c in self.clients:
-            jitter = float(c.rng.uniform(0, 0.1))
-            heapq.heappush(heap, (self._epoch_time(c) + c.comm_time + jitter,
-                                  c.cid))
+        heap = self._heap_resume()
         buffer: List[Dict] = []
         now = 0.0
         while self.t_global < n_rounds and heap:
@@ -430,10 +477,214 @@ class FLEngine:
             if len(buffer) >= self.cfg.k:
                 stale_vals = [b["staleness"] for b in buffer]
                 self._aggregate(buffer)
-                self._eval_and_record(now + self._agg_overhead(), stale_vals)
+                if self._eval_due(self.t_global, n_rounds):
+                    self._eval_and_record(now + self._agg_overhead(),
+                                          stale_vals)
+                    if log_every and self.t_global % log_every == 0:
+                        r = self.metrics.records[-1]
+                        print(f"  [SAFL-{self.cfg.aggregation}] "
+                              f"round {r.round} acc={r.accuracy:.4f} "
+                              f"loss={r.loss:.4f} "
+                              f"stale={r.mean_staleness:.2f}")
                 buffer = []
-                if log_every and self.t_global % log_every == 0:
-                    r = self.metrics.records[-1]
-                    print(f"  [SAFL-{self.cfg.aggregation}] round {r.round} "
-                          f"acc={r.accuracy:.4f} loss={r.loss:.4f} "
-                          f"stale={r.mean_staleness:.2f}")
+
+    def _heap_resume(self) -> List[Tuple[float, int]]:
+        if self._heap is None:
+            heap: List[Tuple[float, int]] = []
+            for c in self.clients:
+                jitter = float(c.rng.uniform(0, 0.1))
+                heapq.heappush(heap, (self._epoch_time(c) + c.comm_time
+                                      + jitter, c.cid))
+            self._heap = heap
+        return self._heap
+
+    # ----- SAFL: horizon-batched path (the hot path) -----
+    def _run_semi_async_batched(self, n_rounds: int, log_every: int) -> None:
+        """Pop the heap to each aggregation horizon (K events), run the
+        horizon's local trainings as one vmapped program per *wave*
+        (event #j of a client within the horizon is wave j — wave 0 is
+        nearly everything in steady state), scatter each wave's rows into
+        the buffer, and run the fused server round — with eval gated by
+        ``eval_every`` and every metric scalar staying on device until the
+        run-end ring flush."""
+        cfg = self.cfg
+        target = "params" if cfg.aggregation in _MODEL_TARGETS else "grad"
+        wave_fn = make_batched_hetero_train(
+            self.apply_fn, self.kind, target, cfg.local_epochs, self.codec)
+        eval_fn = make_flat_eval_fn(self.apply_fn, self.kind, self.codec)
+        use_ef = (self._quant and cfg.error_feedback and target == "grad")
+        # device-resident shard bank: one (n_clients, ...) stack built
+        # once per engine, gathered per wave — no per-horizon restacking
+        if self._shard_bank is None:
+            self._shard_bank = tuple(
+                jnp.asarray(np.stack([s[f] for s in self.shards]))
+                for f in ("xs", "ys", "mask"))
+        xs_all, ys_all, mask_all = self._shard_bank
+        # clients carry their weights as flat (D,) rows (shared immutable
+        # arrays — adopting the global model is a reference, not a copy;
+        # the server is constructed donate=False in this mode, see
+        # __init__, so adopted rows stay valid across rounds).  The list
+        # persists across run() calls, like ClientState.params does on
+        # the sequential path.
+        if self._client_flats is None:
+            self._client_flats = [self._flat_params] * len(self.clients)
+        flats = self._client_flats
+        ring = DeviceMetricsRing(n_rounds + 1, channels=3)
+        pending: List[Dict] = []  # host-side fields per recorded round
+
+        tree_stack = jax.tree_util.tree_map
+        heap = self._heap_resume()
+        while self.t_global < n_rounds and heap:
+            r = self.t_global
+            # ---- pop the heap to the aggregation horizon (K events);
+            # re-push times are schedule-only, so the heap evolves exactly
+            # as in the sequential path ----
+            events: List[Tuple[float, int]] = []
+            for _ in range(cfg.k):
+                now, cid = heapq.heappop(heap)
+                c = self.clients[cid]
+                heapq.heappush(
+                    heap, (now + self._epoch_time(c) + c.comm_time, cid))
+                events.append((now, cid))
+            now = events[-1][0]
+
+            # ---- wave decomposition ----
+            waves: List[List[Tuple[int, int]]] = []  # per wave: (slot, cid)
+            n_events: Dict[int, int] = {}
+            for slot, (_, cid) in enumerate(events):
+                w = n_events.get(cid, 0)
+                n_events[cid] = w + 1
+                if w == len(waves):
+                    waves.append([])
+                waves[w].append((slot, cid))
+
+            g_flat, g_state = self._flat_params, self.global_state
+            stal = [0] * cfg.k
+            sizes = [0] * cfg.k
+            nbytes = self._upload_nbytes()
+            prev_new_flat = prev_states = None
+            # refresh result per client with further events this horizon:
+            # None = adopted the round-r global model, int = row index into
+            # the previous wave's outputs (continue the local chain)
+            carry: Dict[int, Optional[int]] = {}
+            last_slot_state = None  # state of the event in slot K-1
+            state_parts: List[Pytree] = []  # fedavg state mean (order-free)
+            size_parts: List[int] = []
+            for w, members in enumerate(waves):
+                cids = [cid for _, cid in members]
+                kw = len(cids)
+                if w == 0:
+                    starts = stack_rows([flats[cid] for cid in cids])
+                    states = tree_stack(
+                        lambda *xs: jnp.stack(xs),
+                        *[self.clients[cid].model_state for cid in cids])
+                else:
+                    rows = [carry[cid] for cid in cids]
+                    if all(rv is None for rv in rows):
+                        # common case: every wave-0 member adopted the
+                        # round-r global model
+                        starts = jnp.broadcast_to(g_flat,
+                                                  (kw, self.codec.d))
+                        states = tree_stack(
+                            lambda l: jnp.broadcast_to(l, (kw,) + l.shape),
+                            g_state)
+                    elif all(rv is not None for rv in rows):
+                        ridx = jnp.asarray(rows)
+                        starts = prev_new_flat[ridx]
+                        states = tree_stack(lambda l: l[ridx], prev_states)
+                    else:  # mixed (cannot occur under the refresh rule,
+                        # but stay correct if the schedule ever changes)
+                        starts = stack_rows(
+                            [g_flat if rv is None else prev_new_flat[rv]
+                             for rv in rows])
+                        states = tree_stack(
+                            lambda *ls: jnp.stack(ls),
+                            *[g_state if rv is None else tree_stack(
+                                lambda l, rv=rv: l[rv], prev_states)
+                              for rv in rows])
+                vecs, new_flat, new_states, _losses = wave_fn(
+                    starts, states, xs_all, ys_all, mask_all,
+                    jnp.asarray(cids), cfg.client_lr)
+
+                # ---- serialize the wave into its buffer slots ----
+                slots = np.asarray([slot for slot, _ in members], np.int32)
+                if self._quant:
+                    if use_ef:
+                        res = jnp.stack([self._residual(cid)
+                                         for cid in cids])
+                        q, s, new_res = self.codec.quantize_rows(vecs, res)
+                        for row, cid in enumerate(cids):
+                            self._residuals[cid] = new_res[row]
+                    else:
+                        q, s = self.codec.quantize_rows_nores(vecs)
+                    self._qbuf.write_rows(q, s, slots)
+                else:
+                    self._buf = flatbuf.write_rows(self._buf, vecs,
+                                                   jnp.asarray(slots))
+
+                # ---- host bookkeeping + client refresh ----
+                state_parts.append(new_states)
+                for row, (slot, cid) in enumerate(members):
+                    c = self.clients[cid]
+                    self.tx_bytes += nbytes
+                    # a member's wave>=1 events always see version == r
+                    stal[slot] = r - c.version
+                    sizes[slot] = c.n_samples
+                    size_parts.append(c.n_samples)
+                    if slot == cfg.k - 1 and cfg.aggregation != "fedavg":
+                        # fedavg takes the weighted state mean instead
+                        last_slot_state = jax.tree_util.tree_map(
+                            lambda l, row=row: l[row], new_states)
+                    # refresh rule (paper §2.2.2): adopt the round-r
+                    # global model iff one arrived since this client's
+                    # version; else continue the local chain from w_end
+                    adopt = c.version < r
+                    c.version = r
+                    if n_events[cid] > w + 1:  # more events this horizon
+                        carry[cid] = None if adopt else row
+                    elif adopt:
+                        flats[cid] = g_flat
+                        c.model_state = g_state
+                    else:
+                        flats[cid] = new_flat[row]
+                        c.model_state = jax.tree_util.tree_map(
+                            lambda l, row=row: l[row], new_states)
+                prev_new_flat, prev_states = new_flat, new_states
+
+            # ---- fused server round (no host sync) ----
+            m = self._server_round(stal, sizes)
+            self._global_stale = True
+            if cfg.aggregation == "fedavg":
+                stacked = (state_parts[0] if len(state_parts) == 1
+                           else tree_stack(
+                               lambda *xs: jnp.concatenate(xs),
+                               *state_parts))
+                if jax.tree_util.tree_leaves(stacked):
+                    self.global_state = agg.weighted_mean(
+                        stacked, jnp.asarray(size_parts, jnp.float32))
+            else:
+                self.global_state = last_slot_state
+
+            # ---- eval_every-gated eval into the device metrics ring ----
+            rnd = self.t_global
+            if self._eval_due(rnd, n_rounds):
+                acc, loss = eval_fn(self._flat_params, self.global_state,
+                                    self.test_x, self.test_y)
+                ring.append(acc, loss, m["update_norm"])
+                pending.append(dict(
+                    round=rnd, sim_time=now + self._agg_overhead(),
+                    tx_bytes=self.tx_bytes, rx_bytes=self.rx_bytes,
+                    mean_staleness=float(np.mean(stal)),
+                    max_staleness=int(max(stal))))
+                if log_every and rnd % log_every == 0:
+                    # opt-in logging is the one place a fetch is allowed
+                    print(f"  [SAFL-{cfg.aggregation}] round {rnd} "
+                          f"acc={float(acc):.4f} loss={float(loss):.4f} "
+                          f"stale={np.mean(stal):.2f}")
+
+        # ---- the ONE device->host metrics transfer of the run ----
+        for fields, (acc, loss, unorm) in zip(pending, ring.flush()):
+            self.metrics.record(
+                accuracy=float(acc), loss=float(loss),
+                nan_event=not np.isfinite(loss),
+                update_norm=float(unorm), **fields)

@@ -35,6 +35,30 @@ def fedbuff_flat_ref(updates: jax.Array, staleness: jax.Array,
     return safl_agg_ref(updates, w, params, server_lr)
 
 
+def fedasync_flat_ref(updates: jax.Array, coeffs: jax.Array,
+                      params: jax.Array) -> jax.Array:
+    """Folded fedasync mix over a flat (K, D) buffer.
+
+    K sequential per-update mixes p <- (1 - a_i) p + a_i u_i are one
+    linear combination (1 - sum(c)) p + c @ u when c_i = a_i *
+    prod_{j>i} (1 - a_j) (repro.core.aggregation.fedasync_coefficients);
+    the coefficients already carry the staleness discount, so no
+    normalization and no in-kernel discount.
+    """
+    c = coeffs.astype(jnp.float32)
+    mixed = ((1.0 - jnp.sum(c)) * params.astype(jnp.float32)
+             + jnp.einsum("k,kd->d", c, updates.astype(jnp.float32)))
+    return mixed.astype(params.dtype)
+
+
+def fedasync_flat_q8_ref(q: jax.Array, scales: jax.Array,
+                         coeffs: jax.Array, params: jax.Array,
+                         qblock: int) -> jax.Array:
+    """Fused dequantize + folded fedasync mix oracle (int8 flat channel)."""
+    u = dequant_flat_ref(q, scales, qblock)[:, :params.shape[0]]
+    return fedasync_flat_ref(u, coeffs, params)
+
+
 def sdga_step_from_mean(g: jax.Array, params: jax.Array, mom: jax.Array,
                         ema: jax.Array, *, server_lr: float,
                         momentum: float, ema_anchor: float,

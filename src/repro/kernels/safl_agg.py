@@ -11,8 +11,12 @@ writes the new state tiles.
 Kernels:
   * ``safl_aggregate`` — weighted mean (+ optional fused (1+tau)^-alpha
     staleness discount) with an optional fused SGD server step.  Covers
-    fedsgd (unit weights), fedavg (data-size weights) and fedbuff
-    (staleness-discounted gradient mean).
+    fedsgd (unit weights), fedavg (data-size weights), fedbuff
+    (staleness-discounted gradient mean) and — via ``mode="mix"`` —
+    fedasync: K sequential per-update mixes p <- (1-a_i) p + a_i w_i
+    fold into one unnormalized linear combination
+    (1 - sum(c)) p + c @ u with c_i = a_i prod_{j>i}(1-a_j), so the
+    per-update pytree path becomes one fused buffered pass.
   * ``sdga_aggregate`` — the full SDGA server round in one pass: staleness
     discount, weighted mean, server momentum, SGD step and EMA anchor, with
     the new params / momentum / EMA emitted as three fused outputs.
@@ -70,10 +74,18 @@ def _weights(w, alpha: float, discount: str):
 
 def _agg_kernel(w_ref, u_ref, p_ref, o_ref, *, server_lr: float,
                 mode: str, alpha: float, discount: str):
-    """One (K, BLOCK_D) tile: o = p - lr * (w @ u)/sum(w)  (fedsgd)
-    or o = (w @ u)/sum(w)  (avg)."""
+    """One (K, BLOCK_D) tile: o = p - lr * (w @ u)/sum(w)  (fedsgd),
+    o = (w @ u)/sum(w)  (avg), or the *unnormalized* fedasync fold
+    o = (1 - sum(w)) * p + w @ u  (mix) — K sequential per-update mixes
+    p <- (1-a_i) p + a_i u_i collapse into this one linear combination
+    when w_i = a_i * prod_{j>i} (1 - a_j)."""
     w = _weights(w_ref[...], alpha, discount)  # (K,)
     u = u_ref[...].astype(jnp.float32)  # (K, BLOCK_D)
+    if mode == "mix":
+        p = p_ref[...].astype(jnp.float32)
+        g = jnp.einsum("k,kd->d", w, u)
+        o_ref[...] = ((1.0 - jnp.sum(w)) * p + g).astype(o_ref.dtype)
+        return
     wsum = jnp.maximum(jnp.sum(w), 1e-12)
     g = jnp.einsum("k,kd->d", w, u) / wsum
     if mode == "fedsgd":
@@ -90,10 +102,13 @@ def safl_aggregate(updates: jax.Array, weights: jax.Array,
                    interpret: bool = True,
                    alpha: float = 0.5,
                    discount: str = "none") -> jax.Array:
-    """updates (K, D), weights (K,), params (D,) [fedsgd] -> (D,).
+    """updates (K, D), weights (K,), params (D,) [fedsgd / mix] -> (D,).
 
     ``discount="poly"`` reads ``weights`` as staleness and applies the
     (1+tau)^(-alpha) discount inside the kernel (fedbuff's weighting).
+    ``mode="mix"`` is the fedasync fold: weights are precomputed mix
+    coefficients (:func:`repro.core.aggregation.fedasync_coefficients`)
+    and o = (1 - sum(w)) * params + w @ updates, unnormalized.
     D is padded to a multiple of ``block_d`` internally.
     """
     assert discount in _DISCOUNTS
@@ -106,7 +121,7 @@ def safl_aggregate(updates: jax.Array, weights: jax.Array,
     Dp = D + pad
     grid = (Dp // block_d,)
     out_dtype = params.dtype if params is not None else jnp.float32
-    if mode == "fedsgd":
+    if mode in ("fedsgd", "mix"):
         assert params is not None
         args = (weights, updates, params)
         in_specs = [
@@ -121,7 +136,7 @@ def safl_aggregate(updates: jax.Array, weights: jax.Array,
             pl.BlockSpec((K, block_d), lambda i: (0, i)),
         ]
     kern = functools.partial(
-        _agg_kernel if mode == "fedsgd" else _avg_kernel,
+        _agg_kernel if mode in ("fedsgd", "mix") else _avg_kernel,
         server_lr=server_lr, mode=mode, alpha=alpha, discount=discount)
     out = pl.pallas_call(
         kern,
@@ -227,12 +242,17 @@ def _dequant_tile(q, s, qblock: int):
 def _agg_q8_kernel(w_ref, q_ref, s_ref, p_ref, o_ref, *, server_lr: float,
                    mode: str, alpha: float, discount: str, qblock: int):
     """One (K, BLOCK_D) int8 tile: blockwise dequantize in VMEM, then the
-    same weighted reduction / server step as the f32 kernel."""
+    same weighted reduction / server step (or fedasync mix) as the f32
+    kernel."""
     w = _weights(w_ref[...], alpha, discount)  # (K,)
     u = _dequant_tile(q_ref[...], s_ref[...], qblock)  # (K, BLOCK_D) f32
+    p = p_ref[...].astype(jnp.float32)
+    if mode == "mix":
+        g = jnp.einsum("k,kd->d", w, u)
+        o_ref[...] = ((1.0 - jnp.sum(w)) * p + g).astype(o_ref.dtype)
+        return
     wsum = jnp.maximum(jnp.sum(w), 1e-12)
     g = jnp.einsum("k,kd->d", w, u) / wsum
-    p = p_ref[...].astype(jnp.float32)
     o_ref[...] = (p - server_lr * g).astype(o_ref.dtype)
 
 
@@ -266,15 +286,16 @@ def safl_aggregate_q8(q: jax.Array, scales: jax.Array, weights: jax.Array,
                       interpret: bool = True, alpha: float = 0.5,
                       discount: str = "none") -> jax.Array:
     """Quantized-channel ``safl_aggregate``: q (K, Dq) int8, scales
-    (K, Dq/qblock) f32, weights (K,), params (D,) [fedsgd] -> (D,) (fedsgd)
-    or (Dq,) (avg).  Dequantize, discount, reduction and server step run in
-    one pass over the int8 buffer (f32 updates never touch HBM)."""
+    (K, Dq/qblock) f32, weights (K,), params (D,) [fedsgd / mix] -> (D,)
+    (fedsgd / mix) or (Dq,) (avg).  Dequantize, discount, reduction and
+    server step run in one pass over the int8 buffer (f32 updates never
+    touch HBM)."""
     assert discount in _DISCOUNTS
     K, Dq = q.shape
     q, scales, Dp = _pad_q8(q, scales, block_d, qblock)
     grid = (Dp // block_d,)
     s_spec = pl.BlockSpec((K, block_d // qblock), lambda i: (0, i))
-    if mode == "fedsgd":
+    if mode in ("fedsgd", "mix"):
         assert params is not None
         D = params.shape[0]
         assert D <= Dq, (D, Dq)

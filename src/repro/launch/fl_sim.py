@@ -41,6 +41,14 @@ def main() -> None:
     ap.add_argument("--compress", action="store_true",
                     help="int8 quantized upload channel (error-feedback "
                          "residuals on gradient targets)")
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="evaluate every Nth aggregation round (the final "
+                         "round is always evaluated); >1 thins the metric "
+                         "curve but skips the per-round eval compute")
+    ap.add_argument("--sequential", action="store_true",
+                    help="force the sequential per-upload engine path "
+                         "(batch_clients=False) — the parity oracle for "
+                         "the default horizon-batched execution")
     ap.add_argument("--json-out", default="")
     args = ap.parse_args()
 
@@ -81,7 +89,9 @@ def main() -> None:
     cfg = FLConfig(n_clients=args.clients, k=args.k, mode=args.mode,
                    aggregation=args.aggregation, client_lr=0.05,
                    server_lr=slr, seed=args.seed, speed_sigma=0.8,
-                   compress_updates=args.compress)
+                   compress_updates=args.compress,
+                   eval_every=args.eval_every,
+                   batch_clients=not args.sequential)
     eng = FLEngine(cfg, fn, ds.kind, p0, s0, shards, te.x[:400], te.y[:400])
     res = eng.run(args.rounds, log_every=max(args.rounds // 10, 1))
     summary = res.metrics.summary()

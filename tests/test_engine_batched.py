@@ -1,0 +1,177 @@
+"""Horizon-batched SAFL engine (PR 3 tentpole): batched-vs-sequential
+parity for every aggregation mode x {f32, q8} channel (same seed => same
+staleness histogram, byte accounting and simulated times; accuracy
+trajectories within tolerance), the eval_every-gated device metrics ring,
+and the DeviceMetricsRing itself."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import FLEngine
+from repro.core.metrics import DeviceMetricsRing
+from repro.data import build_client_shards, make_dataset, train_test_split
+from repro.models.vision_cnn import build_paper_model
+
+MODES = ("fedsgd", "fedavg", "fedasync", "fedbuff", "fedopt", "sdga")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("cifar10", n=400, seed=0, hw=16)
+    tr, te = train_test_split(ds)
+    shards = build_client_shards(tr, "iid", n_clients=6, batch_size=16)
+    p0, s0, apply_fn = build_paper_model("cnn", jax.random.PRNGKey(0),
+                                         width=4, image_size=16)
+    return shards, te, p0, s0, apply_fn
+
+
+def _run(setup, aggregation, batched, rounds=5, n_test=100, **kw):
+    shards, te, p0, s0, apply_fn = setup
+    slr = {"fedsgd": 0.05, "sdga": 0.05, "fedbuff": 0.05,
+           "fedopt": 0.005}.get(aggregation, 1.0)
+    cfg = FLConfig(n_clients=6, k=3, mode="semi_async",
+                   aggregation=aggregation, client_lr=0.05, server_lr=slr,
+                   target_accuracy=0.3, batch_clients=batched, **kw)
+    eng = FLEngine(cfg, apply_fn, "image", p0, s0, shards,
+                   te.x[:n_test], te.y[:n_test])
+    return eng.run(rounds), eng
+
+
+# ----------------------- batched vs sequential -----------------------
+
+
+@pytest.mark.parametrize("compress", [False, True], ids=["f32", "q8"])
+@pytest.mark.parametrize("aggregation", MODES)
+def test_batched_matches_sequential(setup, aggregation, compress):
+    """The horizon-batched schedule is the sequential schedule: identical
+    staleness histogram, byte accounting and simulated times, and the
+    same training numerics up to vmap-lowering fp jitter."""
+    rb, eb = _run(setup, aggregation, True, compress_updates=compress)
+    rs, es = _run(setup, aggregation, False, compress_updates=compress)
+    assert rb.staleness_hist == rs.staleness_hist
+    assert rb.metrics.total_tx_bytes() == rs.metrics.total_tx_bytes()
+    assert rb.metrics.total_rx_bytes() == rs.metrics.total_rx_bytes()
+    assert len(rb.metrics.records) == len(rs.metrics.records)
+    for a, b in zip(rb.metrics.records, rs.metrics.records):
+        assert a.round == b.round
+        assert a.sim_time == pytest.approx(b.sim_time, abs=1e-9)
+        assert a.mean_staleness == b.mean_staleness
+        assert a.max_staleness == b.max_staleness
+        assert a.accuracy == pytest.approx(b.accuracy, abs=2e-3)
+        assert a.update_norm == pytest.approx(b.update_norm, rel=1e-3,
+                                              abs=1e-5)
+    np.testing.assert_allclose(np.asarray(eb._flat_params),
+                               np.asarray(es._flat_params),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_accuracy_trajectory_parity_at_round_20(setup):
+    """Acceptance: batched SAFL matches the sequential accuracy
+    trajectory within 1e-3 at round 20."""
+    rb, _ = _run(setup, "fedsgd", True, rounds=20)
+    rs, _ = _run(setup, "fedsgd", False, rounds=20)
+    accs_b = {r.round: r.accuracy for r in rb.metrics.records}
+    accs_s = {r.round: r.accuracy for r in rs.metrics.records}
+    assert abs(accs_b[20] - accs_s[20]) <= 1e-3
+    assert max(abs(accs_b[r] - accs_s[r]) for r in accs_b) <= 5e-3
+
+
+def test_incremental_runs_continue_one_schedule(setup):
+    """run(3) then run(6) must equal run(6) in one call: the event heap
+    AND the batched path's carried client weights persist across run()
+    calls (regression: flats used to reset to the global model)."""
+    shards, te, p0, s0, apply_fn = setup
+
+    def mk(batched):
+        cfg = FLConfig(n_clients=6, k=3, mode="semi_async",
+                       aggregation="fedsgd", client_lr=0.05,
+                       server_lr=0.05, target_accuracy=0.3,
+                       batch_clients=batched)
+        return FLEngine(cfg, apply_fn, "image", p0, s0, shards,
+                        te.x[:100], te.y[:100])
+
+    one = mk(True)
+    one.run(6)
+    split = mk(True)
+    split.run(3)
+    res = split.run(6)
+    assert [r.round for r in res.metrics.records] == [1, 2, 3, 4, 5, 6]
+    np.testing.assert_allclose(np.asarray(split._flat_params),
+                               np.asarray(one._flat_params),
+                               atol=1e-6, rtol=1e-6)
+    # and the resumed batched run still matches the resumed sequential one
+    seq = mk(False)
+    seq.run(3)
+    seq.run(6)
+    assert split.staleness_hist == seq.staleness_hist
+    np.testing.assert_allclose(np.asarray(split._flat_params),
+                               np.asarray(seq._flat_params),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_batched_final_params_pytree_materialized(setup):
+    """The batched run keeps the global model flat end-to-end; the result
+    pytree must still come back materialized and finite."""
+    res, eng = _run(setup, "fedsgd", True, rounds=3)
+    leaves = jax.tree_util.tree_leaves(res.final_params)
+    assert leaves and all(np.all(np.isfinite(np.asarray(l)))
+                          for l in leaves)
+    flat = eng.codec.ravel(res.final_params)
+    np.testing.assert_allclose(np.asarray(flat),
+                               np.asarray(eng._flat_params), rtol=1e-6)
+
+
+# --------------------------- eval_every ---------------------------
+
+
+def test_eval_every_thins_records_and_matches(setup):
+    """eval_every=2 must record rounds {2, 4, 5(final)} with exactly the
+    accuracies the per-round run sees (eval never feeds back into
+    training), for both engine paths."""
+    r1, _ = _run(setup, "fedsgd", True, rounds=5, eval_every=1)
+    r2, _ = _run(setup, "fedsgd", True, rounds=5, eval_every=2)
+    rseq, _ = _run(setup, "fedsgd", False, rounds=5, eval_every=2)
+    by_round = {r.round: r for r in r1.metrics.records}
+    assert [r.round for r in r1.metrics.records] == [1, 2, 3, 4, 5]
+    assert [r.round for r in r2.metrics.records] == [2, 4, 5]
+    assert [r.round for r in rseq.metrics.records] == [2, 4, 5]
+    for rec in r2.metrics.records:
+        ref = by_round[rec.round]
+        assert rec.accuracy == pytest.approx(ref.accuracy, abs=1e-7)
+        assert rec.loss == pytest.approx(ref.loss, rel=1e-6)
+        assert rec.tx_bytes == ref.tx_bytes
+        assert rec.rx_bytes == ref.rx_bytes
+        assert rec.sim_time == pytest.approx(ref.sim_time, abs=1e-9)
+        assert rec.update_norm == pytest.approx(ref.update_norm, rel=1e-6)
+
+
+def test_eval_every_final_round_always_recorded(setup):
+    res, _ = _run(setup, "fedsgd", True, rounds=3, eval_every=10)
+    assert [r.round for r in res.metrics.records] == [3]
+    assert res.metrics.summary()["rounds"] == 1
+
+
+def test_eval_every_validated():
+    with pytest.raises(AssertionError):
+        FLConfig(eval_every=0).validate()
+
+
+# ----------------------- device metrics ring -----------------------
+
+
+def test_device_metrics_ring_roundtrip():
+    ring = DeviceMetricsRing(4, channels=3)
+    rows = [(0.1, 2.0, 3.0), (0.5, 1.0, 0.25), (0.9, 0.5, 0.125)]
+    for acc, loss, un in rows:
+        ring.append(jnp.float32(acc), jnp.float32(loss), jnp.float32(un))
+    assert len(ring) == 3
+    np.testing.assert_allclose(ring.flush(), np.asarray(rows), rtol=1e-6)
+
+
+def test_device_metrics_ring_capacity_guard():
+    ring = DeviceMetricsRing(1, channels=3)
+    ring.append(jnp.float32(1), jnp.float32(2), jnp.float32(3))
+    with pytest.raises(AssertionError):
+        ring.append(jnp.float32(1), jnp.float32(2), jnp.float32(3))

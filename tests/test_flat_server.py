@@ -92,6 +92,37 @@ def test_flat_server_pallas_matches_oracle(mode, key):
         np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
 
 
+def test_fedasync_fold_matches_sequential_mix(key):
+    """The flat fedasync server (mix-mode kernel + precomputed fold
+    coefficients) must reproduce K sequential per-update mixes
+    p <- (1-a_tau) p + a_tau w_i in arrival order, on both backends."""
+    K, D = 5, 3000
+    ks = jax.random.split(key, 2)
+    u = jax.random.normal(ks[0], (K, D), jnp.float32)
+    p = jax.random.normal(ks[1], (D,), jnp.float32)
+    stal = [0, 2, 1, 5, 0]
+    fa_alpha, alpha = 0.6, 0.5
+    coef = agg.fedasync_coefficients(stal, fa_alpha, alpha)
+    # the coefficients + the untouched-mass term partition unity
+    keep = float(np.prod([1 - fa_alpha * (1 + s) ** -alpha for s in stal]))
+    assert float(jnp.sum(coef)) == pytest.approx(1.0 - keep, rel=1e-5)
+
+    seq = p
+    for i in range(K):
+        a = fa_alpha * float(agg.staleness_poly(jnp.float32(stal[i]),
+                                                alpha))
+        seq = (1.0 - a) * seq + a * u[i]
+
+    for backend in ("pallas_interpret", "xla"):
+        srv = agg.FlatServer("fedasync", D, server_lr=1.0,
+                             backend=backend, block_d=1024)
+        pn, _, m = srv.step(jnp.array(p, copy=True), u, coef,
+                            srv.init_opt(p))
+        np.testing.assert_allclose(np.array(pn), np.array(seq),
+                                   atol=1e-5, rtol=1e-5)
+        assert float(m["update_norm"]) > 0
+
+
 def test_sdga_kernel_matches_flat_ref(key):
     from repro.kernels import ref, safl_agg
     K, D = 4, 3000
@@ -138,7 +169,7 @@ def setup():
 
 
 @pytest.mark.parametrize("aggregation", ["fedsgd", "fedbuff", "sdga",
-                                         "fedavg", "fedopt"])
+                                         "fedavg", "fedopt", "fedasync"])
 def test_one_server_compilation_across_rounds(setup, aggregation):
     """The recompile guard: >= 3 rounds must reuse ONE compiled server
     program (shape-stable flat buffer, traced weight vector)."""

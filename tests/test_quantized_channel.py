@@ -86,7 +86,7 @@ def test_quant_buffer_write_fills_rows(key):
 
 
 @pytest.mark.parametrize("mode", ["fedsgd", "fedavg", "fedbuff", "fedopt",
-                                  "sdga"])
+                                  "sdga", "fedasync"])
 def test_quantized_server_matches_f32_oracle(mode, key):
     """ravel-q8 -> fused dequant-aggregate reproduces the f32
     FlatServer.step within quantization tolerance (<= 2e-2 relative
@@ -99,6 +99,9 @@ def test_quantized_server_matches_f32_oracle(mode, key):
         wvec = jax.random.uniform(ks[2], (K,), jnp.float32) * 100 + 1
     elif mode == "fedsgd":
         wvec = jnp.ones((K,), jnp.float32)
+    elif mode == "fedasync":
+        # folded per-update mix coefficients over a staleness vector
+        wvec = agg.fedasync_coefficients([0, 1, 3, 0, 7, 2], 0.6, 0.5)
     else:
         wvec = jnp.asarray([0, 1, 3, 0, 7, 2], jnp.float32)  # staleness
 
@@ -122,6 +125,13 @@ def test_quantized_server_matches_f32_oracle(mode, key):
     for a, b in zip(jax.tree_util.tree_leaves(outs["pallas_interpret"][2]),
                     jax.tree_util.tree_leaves(outs["xla"][2])):
         np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+    if mode == "fedasync":
+        # the folded-mix q8 oracle reproduces the fused server exactly
+        want = ref.fedasync_flat_q8_ref(q, s, wvec, params, QB)
+        for backend in outs:
+            np.testing.assert_allclose(outs[backend][0], np.array(want),
+                                       atol=1e-5, rtol=1e-5)
 
     # f32 oracle on the unquantized buffer
     srv32 = agg.FlatServer(mode, D, server_lr=0.3, alpha=0.5,
