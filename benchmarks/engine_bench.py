@@ -1,34 +1,46 @@
-"""End-to-end SAFL engine benchmark: sequential vs horizon-batched rounds/sec.
+"""End-to-end SAFL engine benchmark: rounds/sec across execution policies.
 
-Times whole semi-async ``FLEngine`` experiments on the same host, over K in
-{8, 16, 64} buffered uploads x two model sizes (the paper's LSTM text
-model, small / medium):
+Times whole semi-async ``FLEngine`` experiments on the same host over K in
+{8, 16, 64} buffered uploads x three models (the paper's LSTM text model
+small / medium, and the 16x16-CIFAR CNN that exposes the vmap
+grouped-convolution lowering penalty):
 
   * ``seq``: the per-upload path (``batch_clients=False``) — one jitted
     ``epoch_fn`` dispatch chain + flat-buffer row write per client upload.
   * ``batched``: the horizon-batched path (PR 3 tentpole) — the event heap
     is popped to each aggregation horizon and the K buffered local
-    trainings run as ONE vmapped XLA program over heterogeneous per-client
-    flat param rows (shard gather fused into the program), with eval
-    scalars landing in a device-resident metrics ring instead of per-round
-    ``float()`` syncs.
+    trainings run as ONE XLA program per wave over heterogeneous
+    per-client flat param rows (shard gather fused into the program), with
+    eval scalars landing in a device-resident metrics ring.  The wave lane
+    execution is ``FLConfig.wave_impl`` — "auto" picks ``lax.map`` serial
+    lanes for conv models on CPU (same numerics, no grouped-conv penalty)
+    and vmap elsewhere; the resolved impl is recorded per entry.
+  * ``--devices N ...``: the multi-device column (PR 4 tentpole) — the
+    flat (K, D) channel and the batched waves shard over a mesh "pod"
+    axis, the server round becomes per-shard partials + one psum, and the
+    entry records rounds/sec vs device count (``speedup_vs_1dev``, plus
+    ``speedup_vs_seq`` against the sequential oracle).  On CPU hosts grow
+    the device pool first:
 
-Both columns run identical simulated schedules (same seed => same event
-heap; staleness histogram and byte accounting asserted equal) at the
-default ``eval_every=1``, so the ratio isolates the per-upload
-dispatch/sync overhead the batching removes.  Timing is best-of-reps over
-*marginal* rounds of warm engines with the reps interleaved seq/batched,
-so shared-host throughput drift hits both paths equally (the same
-discipline as benchmarks.agg_bench).
+        XLA_FLAGS=--xla_force_host_platform_device_count=4 \\
+            PYTHONPATH=src python -m benchmarks.engine_bench --devices 1 4
 
-The speedup is largest where per-upload program overhead dominates (small
-models / small shards — the small column) and tapers toward the compute
-bound as per-client work grows; on CPU hosts with few cores the vmapped
-wave cannot parallelize across clients, so large-model speedups here are
-a floor for what parallel hardware gives.
+    Caveat: the jax CPU runtime executes virtual devices' programs
+    serially in one process, so on CPU hosts the devices column measures
+    sharding *overhead* (parity still asserted); parallel wall-clock
+    scaling needs real multi-device hardware (TPU pod slices).
 
-Writes machine-readable ``BENCH_engine.json`` (rounds/sec + speedup per
-grid point) so the perf trajectory is tracked across PRs.
+Every pairing runs identical simulated schedules (same seed => same event
+heap; staleness histogram and byte accounting asserted equal — the
+batched-vs-sequential parity oracle) at the default ``eval_every=1``.
+Timing is best-of-reps over *marginal* rounds of warm engines with the
+reps interleaved between the two columns of each pair, so shared-host
+throughput drift hits both paths equally (the same discipline as
+benchmarks.agg_bench).
+
+Writes machine-readable ``BENCH_engine.json`` (schema 2: one entry per
+(K, model, devices) with rounds/sec, the resolved wave impl, and
+speedups) so the perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.engine_bench
     # tiny CI smoke grid:
@@ -49,25 +61,34 @@ from repro.configs.base import FLConfig
 from repro.core import FLEngine
 from repro.data import build_client_shards, make_dataset, train_test_split
 from repro.models.lstm import build_lstm
+from repro.models.vision_cnn import build_paper_model
 
 KS = (8, 16, 64)
-MODELS = {"small": dict(embed=2, hidden=4),
-          "medium": dict(embed=32, hidden=64)}
+MODELS = {
+    "small": dict(builder="lstm", embed=2, hidden=4),
+    "medium": dict(builder="lstm", embed=32, hidden=64),
+    "cnn16": dict(builder="cnn", width=4, image_size=16),
+}
 WARMUP_ROUNDS = 3
 REPS = 7
 ROUNDS_PER_REP = 5
 OUT_PATH = "BENCH_engine.json"
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 _CACHE = {}
 
 
-def _data(n_clients: int, batch_size: int = 8, per_client: int = 8):
-    key = (n_clients, batch_size, per_client)
+def _data(model: str, n_clients: int, batch_size: int = 8,
+          per_client: int = 8):
+    kind = "image" if MODELS[model]["builder"] != "lstm" else "sentiment"
+    key = (kind, n_clients, batch_size, per_client)
     if key in _CACHE:
         return _CACHE[key]
-    ds = make_dataset("sentiment140", n=per_client * n_clients + 256,
-                      seed=0)
+    n = per_client * n_clients + 256
+    if kind == "image":
+        ds = make_dataset("cifar10", n=n, seed=0, hw=16)
+    else:
+        ds = make_dataset("sentiment140", n=n, seed=0)
     tr, te = train_test_split(ds)
     shards = build_client_shards(tr, "iid", n_clients,
                                  batch_size=batch_size, seed=0)
@@ -81,24 +102,67 @@ def _model(name: str):
     key = ("model", name)
     if key in _CACHE:
         return _CACHE[key]
-    m = build_lstm(jax.random.PRNGKey(0), "sentiment", **MODELS[name])
-    _CACHE[key] = m
-    return m
+    spec = dict(MODELS[name])
+    builder = spec.pop("builder")
+    if builder == "lstm":
+        p0, s0, fn = build_lstm(jax.random.PRNGKey(0), "sentiment", **spec)
+        kind = "sentiment"
+    else:
+        p0, s0, fn = build_paper_model(builder, jax.random.PRNGKey(0),
+                                       **spec)
+        kind = "image"
+    _CACHE[key] = (p0, s0, fn, kind)
+    return _CACHE[key]
 
 
-def bench_point(K: int, model: str, reps: int, rounds_per_rep: int) -> dict:
+def _timed_pair(eng_a, eng_b, reps: int, rounds_per_rep: int,
+                start_round: int):
+    """Interleaved marginal-round timing of two warm engines.  Per-rep
+    ratios are drift-robust (the runs are temporally adjacent, so
+    multi-second host-throughput drift cancels inside each pair); the
+    median over pairs is the speedup estimate a/b."""
+    best_a = best_b = float("inf")
+    ratios = []
+    total = start_round
+    for rep in range(reps):
+        total += rounds_per_rep
+
+        def timed(eng):
+            t0 = time.perf_counter()
+            eng.run(total)  # continues from the engine's current round
+            return (time.perf_counter() - t0) / rounds_per_rep
+        # alternate which engine runs first so within-pair drift has no
+        # preferred direction
+        if rep % 2 == 0:
+            rep_a, rep_b = timed(eng_a), timed(eng_b)
+        else:
+            rep_b, rep_a = timed(eng_b), timed(eng_a)
+        best_a, best_b = min(best_a, rep_a), min(best_b, rep_b)
+        ratios.append(rep_a / rep_b)
+    return best_a, best_b, float(np.median(ratios))
+
+
+def _assert_same_schedule(a: FLEngine, b: FLEngine, what: str) -> None:
+    assert (a.staleness_hist == b.staleness_hist
+            and a.tx_bytes == b.tx_bytes
+            and a.rx_bytes == b.rx_bytes), f"{what} schedules diverged"
+
+
+def bench_point(K: int, model: str, reps: int, rounds_per_rep: int,
+                devices=(1,)) -> list:
     # 8x clients per buffer slot keeps most horizons single-wave (few
     # repeat uploads), the schedule regime SAFL targets at scale
     n_clients = max(8 * K, 32)
-    shards, te = _data(n_clients)
-    p0, s0, apply_fn = _model(model)
+    shards, te = _data(model, n_clients)
+    p0, s0, apply_fn, kind = _model(model)
 
-    def mk(batched: bool) -> FLEngine:
+    def mk(batched: bool, dev: int = 1) -> FLEngine:
         cfg = FLConfig(n_clients=n_clients, k=K, mode="semi_async",
                        aggregation="fedsgd", client_lr=0.05,
                        server_lr=0.05, speed_sigma=0.3,
-                       target_accuracy=0.99, batch_clients=batched)
-        return FLEngine(cfg, apply_fn, "sentiment", p0, s0, shards,
+                       target_accuracy=0.99, batch_clients=batched,
+                       devices=dev)
+        return FLEngine(cfg, apply_fn, kind, p0, s0, shards,
                         te.x[:48], te.y[:48])
 
     total_rounds = WARMUP_ROUNDS + reps * rounds_per_rep
@@ -111,67 +175,81 @@ def bench_point(K: int, model: str, reps: int, rounds_per_rep: int) -> dict:
     # warm the per-engine server program + the sequential path's programs
     eng_s.run(WARMUP_ROUNDS)
     eng_b.run(WARMUP_ROUNDS)
-
-    best_s = best_b = float("inf")
-    ratios = []
-    total = WARMUP_ROUNDS
-    for rep in range(reps):
-        total += rounds_per_rep
-
-        def timed(eng):
-            t0 = time.perf_counter()
-            eng.run(total)  # continues from the engine's current round
-            return (time.perf_counter() - t0) / rounds_per_rep
-        # alternate which path runs first so within-pair drift has no
-        # preferred direction
-        if rep % 2 == 0:
-            rep_s, rep_b = timed(eng_s), timed(eng_b)
-        else:
-            rep_b, rep_s = timed(eng_b), timed(eng_s)
-        best_s, best_b = min(best_s, rep_s), min(best_b, rep_b)
-        # per-rep ratio: the two runs are temporally adjacent, so
-        # multi-second host-throughput drift cancels inside each pair;
-        # the median over pairs is the drift-robust speedup estimate
-        ratios.append(rep_s / rep_b)
+    best_s, best_b, speedup = _timed_pair(eng_s, eng_b, reps,
+                                          rounds_per_rep, WARMUP_ROUNDS)
     # same simulated experiment in both columns
-    assert (eng_b.staleness_hist == eng_s.staleness_hist
-            and eng_b.tx_bytes == eng_s.tx_bytes
-            and eng_b.rx_bytes == eng_s.rx_bytes), \
-        "batched and sequential schedules diverged"
+    _assert_same_schedule(eng_b, eng_s, "batched vs sequential")
     assert eng_b._server.compile_count in (1, -1), \
         "batched server recompiled during bench"
 
-    return {"K": K, "model": model, "D": eng_b.codec.d,
+    base = {"K": K, "model": model, "D": eng_b.codec.d,
             "n_clients": n_clients, "rounds_timed": reps * rounds_per_rep,
-            "seq_ms_per_round": round(best_s * 1e3, 2),
-            "batched_ms_per_round": round(best_b * 1e3, 2),
-            "seq_rounds_per_sec": round(1.0 / best_s, 2),
-            "batched_rounds_per_sec": round(1.0 / best_b, 2),
-            "speedup": round(float(np.median(ratios)), 2)}
+            "wave_impl": eng_b.wave_impl_resolved}
+    entries = [dict(base, devices=1,
+                    seq_ms_per_round=round(best_s * 1e3, 2),
+                    batched_ms_per_round=round(best_b * 1e3, 2),
+                    seq_rounds_per_sec=round(1.0 / best_s, 2),
+                    batched_rounds_per_sec=round(1.0 / best_b, 2),
+                    speedup=round(speedup, 2))]
+
+    for dev in devices:
+        if dev == 1:
+            continue
+        if dev > jax.device_count():
+            print(f"# skip devices={dev}: only {jax.device_count()} jax "
+                  "devices (set XLA_FLAGS="
+                  "--xla_force_host_platform_device_count)")
+            continue
+        mk(True, dev).run(total_rounds)  # pre-compile the sharded programs
+        e1, ed = mk(True, 1), mk(True, dev)
+        e1.run(WARMUP_ROUNDS)
+        ed.run(WARMUP_ROUNDS)
+        b1, bd, ratio = _timed_pair(e1, ed, reps, rounds_per_rep,
+                                    WARMUP_ROUNDS)
+        _assert_same_schedule(ed, e1, f"{dev}-device vs single-device")
+        # vs-sequential composes two temporally-adjacent pair medians
+        # (seq/batched@1 and batched@1/batched@dev), staying drift-robust
+        entries.append(dict(base, devices=dev,
+                            batched_ms_per_round=round(bd * 1e3, 2),
+                            batched_rounds_per_sec=round(1.0 / bd, 2),
+                            speedup_vs_1dev=round(ratio, 2),
+                            speedup_vs_seq=round(speedup * ratio, 2)))
+    return entries
 
 
 def main(ks=KS, models=tuple(MODELS), reps: int = REPS,
          rounds_per_rep: int = ROUNDS_PER_REP,
-         out_path: str = OUT_PATH) -> dict:
+         out_path: str = OUT_PATH, devices=(1,)) -> dict:
     entries = []
-    print("# SAFL engine: sequential per-upload vs horizon-batched rounds "
-          "(same schedule, same host)")
-    print("K,model,D,seq_rps,batched_rps,speedup")
+    print("# SAFL engine: sequential vs horizon-batched vs multi-device "
+          "rounds/sec (same schedule, same host)")
+    print("K,model,D,devices,impl,seq_rps,batched_rps,speedup")
     for model in models:
         for K in ks:
-            e = bench_point(K, model, reps, rounds_per_rep)
-            entries.append(e)
-            print(f"{e['K']},{e['model']},{e['D']},"
-                  f"{e['seq_rounds_per_sec']},"
-                  f"{e['batched_rounds_per_sec']},{e['speedup']}x",
-                  flush=True)
+            for e in bench_point(K, model, reps, rounds_per_rep, devices):
+                entries.append(e)
+                sp = e.get("speedup", e.get("speedup_vs_1dev"))
+                print(f"{e['K']},{e['model']},{e['D']},{e['devices']},"
+                      f"{e['wave_impl']},"
+                      f"{e.get('seq_rounds_per_sec', '-')},"
+                      f"{e['batched_rounds_per_sec']},{sp}x",
+                      flush=True)
     report = {
         "benchmark": "safl_engine",
         "schema_version": SCHEMA_VERSION,
         "backend": jax.default_backend(),
         "cpu_count": multiprocessing.cpu_count(),
+        "device_count": jax.device_count(),
         "aggregation": "fedsgd",
         "eval_every": 1,
+        "notes": (
+            "devices>1 entries shard the flat channel + waves over the "
+            "mesh pod axis (parity-asserted vs single-device). On CPU "
+            "hosts the jax runtime executes virtual devices' programs "
+            "serially in-process, so speedup_vs_1dev tracks sharding "
+            "overhead there (parallel wall-clock gains need real "
+            "multi-device hardware); speedup_vs_seq is the sharded "
+            "engine vs the sequential per-upload oracle."),
         "entries": entries,
     }
     with open(out_path, "w") as f:
@@ -191,5 +269,10 @@ if __name__ == "__main__":
     ap.add_argument("--rounds-per-rep", type=int, default=ROUNDS_PER_REP,
                     help="aggregation rounds per timed rep")
     ap.add_argument("--out", default=OUT_PATH, help="output JSON path")
+    ap.add_argument("--devices", type=int, nargs="+", default=[1],
+                    help="mesh device counts to sweep for the batched "
+                         "path (1 = single device; >1 shards the flat "
+                         "channel + waves over the pod axis)")
     a = ap.parse_args()
-    main(tuple(a.ks), tuple(a.models), a.reps, a.rounds_per_rep, a.out)
+    main(tuple(a.ks), tuple(a.models), a.reps, a.rounds_per_rep, a.out,
+         tuple(a.devices))

@@ -191,7 +191,15 @@ class FLConfig:
     model-target uploads (fedavg / fedasync) quantize the weights
     themselves (no residual — weights do not accumulate).  Transmitted
     bytes are accounted at the quantized payload size (int8 values + f32
-    block scales + envelope) for every aggregation target.
+    block scales + envelope) for every aggregation target, including the
+    fedavg/fedasync non-trainable BN-state payload (shipped through the
+    same ravel_q8 wire format as the weights).
+
+    Multi-device / compilation policy: ``devices`` shards the flat channel
+    and the batched waves over a mesh "pod" axis, ``wave_impl`` picks the
+    wave lane execution (vmap / lax.map / auto), and ``wave_buckets``
+    power-of-two-buckets wave sizes with masked rows so high-churn
+    schedules compile O(log k) wave programs.
     """
 
     n_clients: int = 50
@@ -224,6 +232,27 @@ class FLConfig:
     # device-resident ring flushed at run end.  batch_clients=False forces
     # the sequential per-upload path (the parity oracle).
     batch_clients: bool = True
+    # multi-device SAFL (tentpole PR 4): devices > 1 lays the flat (K, D)
+    # upload channel and the batched waves out over a 1-D mesh "pod" axis
+    # (repro.sharding.flat) — wave training runs data-parallel across
+    # devices and the server round becomes per-shard partial reductions +
+    # one psum.  Requires devices <= jax.device_count() (on CPU hosts grow
+    # the pool with XLA_FLAGS=--xla_force_host_platform_device_count=N
+    # before the first jax import) and k % devices == 0 (shard_map splits
+    # the K rows evenly).
+    devices: int = 1
+    # wave lane execution: "vmap" (one vectorized program — the parallel
+    # hardware fast path), "map" (lax.map: one dispatch, lanes serial —
+    # identical numerics, sidesteps the grouped-convolution lowering that
+    # costs conv models 0.4-0.6x on CPU), or "auto" (map for conv models
+    # on CPU, vmap everywhere else).
+    wave_impl: str = "auto"
+    # pad each wave to the next power-of-two size with masked rows (their
+    # buffer slot is out of range, so the scatter drops them) — bounds
+    # compilation to O(log k) distinct wave programs under high-churn
+    # schedules instead of one per distinct wave size.  Numerics are
+    # unchanged: lanes are independent, padding lanes are discarded.
+    wave_buckets: bool = True
     # evaluate (and record a metrics row for) every eval_every-th
     # aggregation round; the final round is always evaluated.  1 = every
     # round (the paper's per-round curves).
@@ -251,3 +280,11 @@ class FLConfig:
         # every eval_every-th round is evaluated; 0 would record nothing
         assert self.eval_every >= 1, "eval_every must be >= 1"
         assert isinstance(self.batch_clients, bool)
+        assert self.wave_impl in ("vmap", "map", "auto"), self.wave_impl
+        assert isinstance(self.wave_buckets, bool)
+        # the podwise server reduction shard_maps the K buffer rows over
+        # the pod axis, which requires an even split
+        assert self.devices >= 1, "devices must be >= 1"
+        if self.devices > 1:
+            assert self.k % self.devices == 0, \
+                f"k={self.k} must be a multiple of devices={self.devices}"

@@ -235,6 +235,15 @@ class FlatServer:
     fuses blockwise dequantize into the same discount / reduction / server
     step / update-norm pass — 4x fewer HBM bytes for the K x D read that
     dominates memory-bound large-D rounds.
+
+    ``mesh`` (a 1-D "pod" mesh, :func:`repro.sharding.flat.make_pod_mesh`)
+    makes the round multi-device: the buffer rows live sharded
+    ``P("pod", None)`` and the reduction becomes a per-shard partial
+    weighted sum (the kernels' ``mode="sum"`` grid on the Pallas backends,
+    the jnp / streaming-q8 references on CPU) folded by ONE ``psum`` over
+    pod links (:func:`repro.sharding.flat.podwise_sums`), followed by the
+    same fused server step on the replicated (D,) state.  Still one jitted
+    program per experiment; K must divide the mesh size.
     """
 
     MODES = ("fedsgd", "fedavg", "fedbuff", "fedopt", "sdga", "fedasync")
@@ -247,9 +256,11 @@ class FlatServer:
                  block_d: Optional[int] = None,
                  quantized: bool = False,
                  qblock: Optional[int] = None,
-                 donate: Optional[bool] = None):
+                 donate: Optional[bool] = None,
+                 mesh=None):
         from repro.kernels import ref as _ref
         from repro.kernels import safl_agg as _k
+        from repro.sharding import flat as _shflat
 
         assert mode in self.MODES, mode
         self.mode = mode
@@ -266,11 +277,90 @@ class FlatServer:
             # the xla streaming path has no tiling constraint
             assert bd % qb == 0, \
                 f"block_d={bd} must be a multiple of qblock={qb}"
+        self.mesh = mesh if _shflat.mesh_size(mesh) > 1 else None
 
         def discounted(wvec):
             if mode in ("fedbuff", "fedopt", "sdga"):
                 return staleness_poly(wvec, alpha)
             return wvec.astype(jnp.float32)
+
+        n_pod = _shflat.mesh_size(self.mesh)
+
+        def _partial_sums(buf_l, wvec_l):
+            """Per-shard unnormalized weighted row sum + weight mass
+            (the local body of the podwise reduction; the staleness
+            discount is elementwise over K, so it applies per shard).
+            Algorithm choices key on the GLOBAL row count K = K_local *
+            n_pod, so the sharded round walks the same numerical path as
+            the single-device one at every K."""
+            w = discounted(wvec_l)
+            if quantized:
+                q, scales = buf_l
+                if use_pallas:
+                    g = _k.safl_aggregate_q8(
+                        q, scales, w, mode="sum", qblock=qb, block_d=bd,
+                        interpret=interpret)
+                elif q.shape[0] * n_pod >= _ref.INT8_DOT_MIN_K:
+                    # large-K int8-dot: quantize this shard's reduction
+                    # coefficients against the pod-wide absmax scale —
+                    # the same grid the single-device round uses
+                    cs = jax.lax.pmax(
+                        _ref.int8dot_coeff_scale(scales, w),
+                        _shflat.POD_AXIS)
+                    g = _ref.weighted_sum_q8_int8dot_ref(
+                        q, scales, w, qb, coeff_scale=cs)
+                else:
+                    g = _ref.weighted_sum_q8_ref(q, scales, w, qb,
+                                                 int8_dot=False)
+            elif use_pallas:
+                g = _k.safl_aggregate(buf_l, w, mode="sum", block_d=bd,
+                                      interpret=interpret)
+            else:
+                g = _ref.weighted_sum_ref(buf_l, w)
+            return g, jnp.sum(w)
+
+        pod_reduce = (_shflat.podwise_sums(self.mesh, _partial_sums,
+                                           quantized)
+                      if self.mesh is not None else None)
+
+        def _adam_step(p0, g, opt, params_dtype):
+            step = opt["step"] + 1
+            m = b1 * opt["m"] + (1 - b1) * g
+            v = b2 * opt["v"] + (1 - b2) * jnp.square(g)
+            sf = step.astype(jnp.float32)
+            mh = m / (1 - jnp.power(b1, sf))
+            vh = v / (1 - jnp.power(b2, sf))
+            new = (p0 - server_lr * mh / (jnp.sqrt(vh) + eps)
+                   ).astype(params_dtype)
+            return new, {"m": m, "v": v, "step": step}
+
+        def _mesh_step(params, buf, wvec, opt):
+            """Server step from the podwise-reduced (gsum, wsum) — the
+            same per-mode math as the fused single-device kernels, over
+            the replicated (D,) state."""
+            p0 = params.astype(jnp.float32)
+            gsum, wsum = pod_reduce(buf, wvec)
+            gsum = gsum[:d]  # q8 partials come back (Dq,)
+            wsafe = jnp.maximum(wsum, 1e-12)
+            new_opt = opt
+            if mode == "fedasync":
+                # unnormalized fold: coefficients carry the mixed-in mass
+                new = ((1.0 - wsum) * p0 + gsum).astype(params.dtype)
+            elif mode == "fedavg":
+                new = (gsum / wsafe).astype(params.dtype)
+            elif mode in ("fedsgd", "fedbuff"):
+                new = (p0 - server_lr * gsum / wsafe).astype(params.dtype)
+            elif mode == "sdga":
+                new, m, e = _ref.sdga_step_from_mean(
+                    gsum / wsafe, params, opt["momentum"], opt["ema"],
+                    server_lr=server_lr, momentum=momentum,
+                    ema_anchor=ema_anchor, ema_decay=ema_decay)
+                new_opt = {"momentum": m, "ema": e,
+                           "step": opt["step"] + 1}
+            else:  # fedopt
+                new, new_opt = _adam_step(p0, gsum / wsafe, opt,
+                                          params.dtype)
+            return new, new_opt
 
         def q8_mean(buf, w):
             """Discount-weighted mean over the int8 buffer -> (d,) f32.
@@ -285,7 +375,9 @@ class FlatServer:
 
         def _step(params, buf, wvec, opt):
             p0 = params.astype(jnp.float32)
-            if mode in ("fedsgd", "fedavg", "fedbuff", "fedasync"):
+            if pod_reduce is not None:
+                new, new_opt = _mesh_step(params, buf, wvec, opt)
+            elif mode in ("fedsgd", "fedavg", "fedbuff", "fedasync"):
                 kmode = {"fedavg": "avg", "fedasync": "mix"}.get(mode,
                                                                  "fedsgd")
                 disc = "poly" if mode == "fedbuff" else "none"
@@ -366,15 +458,7 @@ class FlatServer:
                     wsum = jnp.maximum(jnp.sum(w), 1e-12)
                     g = jnp.einsum("k,kd->d", w,
                                    buf.astype(jnp.float32)) / wsum
-                step = opt["step"] + 1
-                m = b1 * opt["m"] + (1 - b1) * g
-                v = b2 * opt["v"] + (1 - b2) * jnp.square(g)
-                sf = step.astype(jnp.float32)
-                mh = m / (1 - jnp.power(b1, sf))
-                vh = v / (1 - jnp.power(b2, sf))
-                new = (p0 - server_lr * mh / (jnp.sqrt(vh) + eps)
-                       ).astype(params.dtype)
-                new_opt = {"m": m, "v": v, "step": step}
+                new, new_opt = _adam_step(p0, g, opt, params.dtype)
             upd = new.astype(jnp.float32) - p0
             metrics = {"update_norm": jnp.sqrt(jnp.sum(jnp.square(upd))),
                        "weight_sum": jnp.sum(discounted(wvec))}
@@ -436,6 +520,11 @@ def podwise_aggregate(stacked: Pytree, weights: jax.Array,
     inside a jit program.  With the leading dim sharded over the mesh "pod"
     axis, XLA lowers the mean to an all-reduce over pod links — the paper's
     server round, expressed as a collective.
+
+    This pytree form is the didactic sketch; the engine hot path runs the
+    same idea over the flat (K, D) channel for every mode x {f32, q8} —
+    ``FlatServer(mesh=...)`` + :func:`repro.sharding.flat.podwise_sums`
+    (per-shard ``mode="sum"`` kernel partials + one psum).
 
     target == "grads":  FedSGD (requires global_params)
     target == "params": FedAvg

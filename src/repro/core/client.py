@@ -114,7 +114,8 @@ def make_local_train(apply_fn: Callable, kind: str):
 
 
 def make_batched_local_train(apply_fn: Callable, kind: str,
-                             target: str, local_epochs: int):
+                             target: str, local_epochs: int,
+                             mesh=None):
     """One vmapped XLA program for a whole SFL round of K same-shape
     clients: all K start from the broadcast global model, so only the shard
     data is batched.  Emits the raveled (K, D) flat update buffer directly
@@ -123,16 +124,24 @@ def make_batched_local_train(apply_fn: Callable, kind: str,
     model states and per-client losses — no per-client Python dispatch, no
     per-leaf restacking.
 
-    Memoized on (apply_fn, kind, target, local_epochs) so engines over the
-    same model share one XLA program.
+    ``mesh`` (a "pod" mesh) pins the K client lanes to the pod axis with
+    in-program sharding constraints, so the round runs data-parallel
+    across devices and the emitted (K, D) rows land already row-sharded
+    for the podwise server reduction.
+
+    Memoized on (apply_fn, kind, target, local_epochs, mesh) so engines
+    over the same model share one XLA program.
     """
-    key = ("batched", apply_fn, kind, target, local_epochs)
+    key = ("batched", apply_fn, kind, target, local_epochs, mesh)
     if key in _FN_CACHE:
         return _FN_CACHE[key]
     epoch = _make_epoch_body(apply_fn, kind)
+    from repro.sharding.flat import constrain_rows
 
     @jax.jit
     def round_fn(params, model_state, xs_k, ys_k, mask_k, lr):
+        xs_k, ys_k, mask_k = constrain_rows((xs_k, ys_k, mask_k), mesh)
+
         def per_client(xs, ys, mask):
             p, s = params, model_state
             loss = jnp.float32(0.0)
@@ -151,7 +160,8 @@ def make_batched_local_train(apply_fn: Callable, kind: str,
                      for l in jax.tree_util.tree_leaves(p)])
             return vec, s, loss
 
-        return jax.vmap(per_client)(xs_k, ys_k, mask_k)
+        vecs, states, losses = jax.vmap(per_client)(xs_k, ys_k, mask_k)
+        return constrain_rows(vecs, mesh), states, losses
 
     _FN_CACHE[key] = round_fn
     return round_fn
@@ -164,9 +174,48 @@ def _codec_key(codec) -> tuple:
             tuple(str(d) for d in codec.dtypes), codec.qblock)
 
 
+def model_has_conv(apply_fn: Callable, params: Pytree, model_state: Pytree,
+                   sample_x) -> bool:
+    """True iff ``apply_fn``'s forward pass traces a convolution.
+
+    The heterogeneous-params vmap lowers convolutions to *grouped*
+    convolutions (one group per lane), which XLA CPU executes worse than
+    per-client dispatch (ROADMAP: 0.4-0.6x for the 16x16 CNN) — the
+    signal ``wave_impl="auto"`` uses to pick the ``lax.map`` serial-wave
+    fallback on CPU hosts.  Cached per apply_fn (one abstract trace)."""
+    key = ("hasconv", apply_fn)
+    if key in _FN_CACHE:
+        return _FN_CACHE[key]
+    try:
+        jaxpr = jax.make_jaxpr(
+            lambda p, s, x: apply_fn(p, s, x, True))(params, model_state,
+                                                     sample_x)
+        has = "conv_general_dilated" in str(jaxpr)
+    except Exception:  # unusual apply signature: assume the common case
+        has = False
+    _FN_CACHE[key] = has
+    return has
+
+
+def resolve_wave_impl(impl: str, apply_fn: Callable, params: Pytree,
+                      model_state: Pytree, sample_x) -> str:
+    """Resolve ``FLConfig.wave_impl``: "vmap" / "map" pass through;
+    "auto" keeps the vmapped wave except for conv models on CPU, where
+    the grouped-convolution lowering loses to one serial-wave dispatch
+    (identical numerics either way — lanes are independent)."""
+    assert impl in ("vmap", "map", "auto"), impl
+    if impl != "auto":
+        return impl
+    if jax.default_backend() != "cpu":
+        return "vmap"  # grouped convs are native on TPU/GPU
+    return ("map" if model_has_conv(apply_fn, params, model_state,
+                                    sample_x) else "vmap")
+
+
 def make_batched_hetero_train(apply_fn: Callable, kind: str, target: str,
-                              local_epochs: int, codec):
-    """One vmapped XLA program for a whole SAFL horizon wave of K clients
+                              local_epochs: int, codec,
+                              impl: str = "vmap", mesh=None):
+    """One XLA program for a whole SAFL horizon wave of K clients
     with *heterogeneous* parameters.
 
     Unlike :func:`make_batched_local_train` (SFL: all K clients start from
@@ -190,32 +239,58 @@ def make_batched_hetero_train(apply_fn: Callable, kind: str, target: str,
     the engine's device-resident (n_clients, ...) shard bank plus the
     (K,) client-index vector, so a wave is one dispatch with no separate
     gather ops.  Memoized on (apply_fn, kind, target, local_epochs, codec
-    layout); K is a static shape, so each distinct wave size compiles
-    once and is cached (wave sizes are bounded by the buffer size K).
+    layout, impl, mesh); K is a static shape, so each distinct wave size
+    compiles once and is cached (wave sizes are bounded by the buffer
+    size K, and power-of-two bucketed to O(log K) distinct programs by
+    the engine under ``FLConfig.wave_buckets``).
+
+    ``impl`` selects the lane execution: ``"vmap"`` (one vectorized
+    program — the parallel-hardware fast path) or ``"map"`` (``lax.map``:
+    still ONE dispatch for the whole wave, but lanes run serially inside
+    it — identical numerics, and it sidesteps the grouped-convolution
+    lowering the vmapped form pays for conv models on CPU).  ``mesh``
+    (a "pod" mesh) pins the vmapped lanes and the emitted (K, D) rows to
+    the pod axis in-program, so the wave trains data-parallel across
+    devices (ignored for ``impl="map"`` — a serial wave has no lane
+    parallelism to shard).
     """
+    assert impl in ("vmap", "map"), impl
+    if impl == "map":
+        mesh = None
     key = ("hetero", apply_fn, kind, target, local_epochs,
-           _codec_key(codec))
+           _codec_key(codec), impl, mesh)
     if key in _FN_CACHE:
         return _FN_CACHE[key]
     epoch = _make_epoch_body(apply_fn, kind)
     unravel, ravel = codec.unravel_fn, codec.ravel_fn
+    from repro.sharding.flat import constrain_rows
+
+    def per_client(flat, state, xs, ys, mask, lr):
+        p, s = unravel(flat), state
+        loss = jnp.float32(0.0)
+        for _ in range(local_epochs):
+            p, s, loss = epoch(p, s, xs, ys, mask, lr)
+        new_flat = ravel(p)
+        if target == "grad":
+            vec = (flat - new_flat) / lr
+        else:
+            vec = new_flat
+        return vec, new_flat, s, loss
 
     @jax.jit
     def round_fn(flat_k, states_k, xs_all, ys_all, mask_all, idx, lr):
-        def per_client(flat, state, xs, ys, mask):
-            p, s = unravel(flat), state
-            loss = jnp.float32(0.0)
-            for _ in range(local_epochs):
-                p, s, loss = epoch(p, s, xs, ys, mask, lr)
-            new_flat = ravel(p)
-            if target == "grad":
-                vec = (flat - new_flat) / lr
-            else:
-                vec = new_flat
-            return vec, new_flat, s, loss
-
-        return jax.vmap(per_client)(flat_k, states_k, xs_all[idx],
-                                    ys_all[idx], mask_all[idx])
+        lanes = (flat_k, states_k, xs_all[idx], ys_all[idx], mask_all[idx])
+        if impl == "map":
+            return jax.lax.map(lambda a: per_client(*a, lr), lanes)
+        lanes = constrain_rows(lanes, mesh)
+        vecs, new_flat, states, losses = jax.vmap(
+            lambda f, st, x, y, m: per_client(f, st, x, y, m, lr))(*lanes)
+        # only the upload rows stay pod-sharded (they feed the sharded
+        # buffer scatter + podwise reduction); new_flat is host-side
+        # client state, indexed row-wise at refresh — pinning it would
+        # turn every refresh into a cross-device gather
+        vecs = constrain_rows(vecs, mesh)
+        return vecs, new_flat, states, losses
 
     _FN_CACHE[key] = round_fn
     return round_fn

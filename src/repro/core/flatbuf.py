@@ -143,6 +143,21 @@ class PytreeCodec:
             lambda tree: _quantize_nores(_ravel(tree)))
         self.quantize_rows_nores = jax.jit(jax.vmap(_quantize_nores))
 
+        def _roundtrip_q8(tree: Pytree) -> Pytree:
+            """quantize -> dequantize -> unravel in ONE fused program: the
+            server-side view of a q8-shipped pytree payload.  Used for the
+            fedavg/fedasync non-trainable state (BN running stats), which
+            rides the int8 channel like the weights do but is consumed as
+            a pytree by the state aggregation."""
+            q, s = _quantize_nores(_ravel(tree))
+            flat = (q.astype(jnp.float32).reshape(self.n_qblocks, qblock)
+                    * s[:, None]).reshape(self.dq)[:self.d]
+            return _unravel(flat)
+
+        self.roundtrip_q8 = jax.jit(_roundtrip_q8)
+        # K-stacked variant for the batched waves / SFL rounds
+        self.roundtrip_q8_rows = jax.jit(jax.vmap(_roundtrip_q8))
+
         self._zero_res = None
 
     def zero_residual(self) -> jax.Array:
@@ -154,9 +169,14 @@ class PytreeCodec:
         return self._zero_res
 
 
-def alloc_buffer(k: int, d: int) -> jax.Array:
-    """Preallocate the (K, D) f32 device update buffer."""
-    return jnp.zeros((k, d), jnp.float32)
+def alloc_buffer(k: int, d: int, sharding=None) -> jax.Array:
+    """Preallocate the (K, D) f32 device update buffer.  ``sharding``
+    (a NamedSharding, e.g. rows over the mesh "pod" axis —
+    :func:`repro.sharding.flat.row_sharding`) commits the rows across
+    devices so wave scatters and the podwise server reduction run on the
+    shard layout end-to-end."""
+    buf = jnp.zeros((k, d), jnp.float32)
+    return buf if sharding is None else jax.device_put(buf, sharding)
 
 
 @functools.partial(jax.jit, donate_argnums=(0,))
@@ -173,17 +193,22 @@ def write_rows(buf: jax.Array, rows: jax.Array,
     """buf[slots] <- rows, in place (buf donated).  The batched SAFL
     horizon emits one wave of client updates as a (Kw, D) block and
     scatters it into the wave's buffer slots with ONE program (slots are
-    traced; row count Kw is a static shape, so each distinct wave size
-    compiles once and is cached)."""
-    return buf.at[slots].set(rows.astype(buf.dtype))
+    traced; row count Kw is a static shape, so each distinct wave size —
+    a power-of-two *bucket* under ``FLConfig.wave_buckets`` — compiles
+    once and is cached).  ``mode="drop"`` masks the bucketed waves'
+    padding lanes: their slot index is K (out of range), so the scatter
+    discards those rows instead of writing them."""
+    return buf.at[slots].set(rows.astype(buf.dtype), mode="drop")
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1))
 def _write_q_rows(q: jax.Array, scales: jax.Array, q_rows: jax.Array,
                   s_rows: jax.Array, slots: jax.Array):
-    """(q[slots], scales[slots]) <- (q_rows, s_rows), both donated."""
-    return (q.at[slots].set(q_rows),
-            scales.at[slots].set(s_rows.astype(scales.dtype)))
+    """(q[slots], scales[slots]) <- (q_rows, s_rows), both donated;
+    out-of-range slots (bucketed-wave padding lanes) are dropped."""
+    return (q.at[slots].set(q_rows, mode="drop"),
+            scales.at[slots].set(s_rows.astype(scales.dtype),
+                                 mode="drop"))
 
 
 @functools.partial(jax.jit, donate_argnums=(0, 1))
@@ -202,12 +227,16 @@ class QuantBuffer:
     uploads update the rows in place — the int8 payload is the *native*
     buffer format, never inflated to f32 outside the aggregation kernel."""
 
-    def __init__(self, k: int, d: int, qblock: int = QBLOCK):
+    def __init__(self, k: int, d: int, qblock: int = QBLOCK,
+                 sharding=None):
         self.qblock = qblock
         self.n_qblocks = -(-d // qblock)
         self.dq = self.n_qblocks * qblock
         self.q = jnp.zeros((k, self.dq), jnp.int8)
         self.scales = jnp.zeros((k, self.n_qblocks), jnp.float32)
+        if sharding is not None:  # rows over the mesh "pod" axis
+            self.q = jax.device_put(self.q, sharding)
+            self.scales = jax.device_put(self.scales, sharding)
 
     def write(self, q_vec: jax.Array, s_vec: jax.Array, slot) -> None:
         self.q, self.scales = _write_q_slot(self.q, self.scales, q_vec,

@@ -59,6 +59,26 @@ fedbuff / fedopt / sdga as buffered reductions, and fedasync's K
 sequential per-update mixes folded into one linear combination
 (aggregation.fedasync_coefficients + the kernels' ``mix`` mode) — the
 per-leaf pytree aggregation path is fully retired.
+
+*Multi-device execution* (``devices > 1``): the flat (K, D) channel —
+f32 buffer or int8 :class:`repro.core.flatbuf.QuantBuffer` — lives
+row-sharded over a 1-D mesh "pod" axis (:mod:`repro.sharding.flat`), the
+batched wave programs pin their client lanes to the same axis with
+in-program sharding constraints (wave training runs data-parallel across
+devices and scatters already-sharded rows), and the server round lowers to
+per-shard partial weighted sums (the kernels' ``mode="sum"`` grid /
+streaming-q8 reference) folded by ONE psum over pod links
+(sharding.flat.podwise_sums) before the replicated server step.
+
+*Wave compilation policy*: each distinct wave size is a distinct XLA
+program (K is a static shape), so ``wave_buckets`` pads waves to the next
+power of two with masked lanes — padding lanes duplicate a real lane's
+inputs and scatter to slot K, which the drop-mode write discards — so
+high-churn schedules compile O(log K) programs instead of one per distinct
+size.  ``wave_impl`` selects vmap (vectorized lanes) or ``lax.map``
+(serial lanes, one dispatch — same numerics, no grouped-convolution
+lowering penalty for conv models on CPU); ``"auto"`` picks per model and
+backend (client.resolve_wave_impl).
 """
 from __future__ import annotations
 
@@ -75,8 +95,9 @@ from repro.core import flatbuf
 from repro.core.client import (ClientState, make_batched_hetero_train,
                                make_batched_local_train, make_eval_fn,
                                make_flat_eval_fn, make_local_train,
-                               pytree_bytes, stack_rows)
+                               pytree_bytes, resolve_wave_impl, stack_rows)
 from repro.core.metrics import DeviceMetricsRing, MetricsLog
+from repro.sharding import flat as shflat
 
 Pytree = Any
 
@@ -157,19 +178,48 @@ class FLEngine:
         self._buf = None
         # per-client error-feedback residuals (dq,), created on first upload
         self._residuals: Dict[int, jax.Array] = {}
+        # ---- multi-device: flat channel rows over the mesh "pod" axis ----
+        self._mesh = None
+        row_sh = None
+        if fl_cfg.devices > 1:
+            assert fl_cfg.devices <= len(jax.devices()), (
+                f"devices={fl_cfg.devices} but only {len(jax.devices())} "
+                "jax devices visible (on CPU hosts set XLA_FLAGS="
+                "--xla_force_host_platform_device_count before importing "
+                "jax)")
+            self._mesh = shflat.make_pod_mesh(fl_cfg.devices)
+            row_sh = shflat.row_sharding(self._mesh)
         self._server = agg.FlatServer(
             fl_cfg.aggregation, self.codec.d,
             server_lr=fl_cfg.server_lr, alpha=fl_cfg.staleness_alpha,
             momentum=fl_cfg.server_momentum or 0.8,
             ema_anchor=fl_cfg.ema_anchor or 0.05,
             quantized=self._quant, qblock=fl_cfg.quant_block,
-            donate=False if self._batched_async else None)
+            donate=False if self._batched_async else None,
+            mesh=self._mesh)
         self._opt = self._server.init_opt(self._flat_params)
         if self._quant:
             self._qbuf = flatbuf.QuantBuffer(fl_cfg.k, self.codec.d,
-                                             fl_cfg.quant_block)
+                                             fl_cfg.quant_block,
+                                             sharding=row_sh)
         else:
-            self._buf = flatbuf.alloc_buffer(fl_cfg.k, self.codec.d)
+            self._buf = flatbuf.alloc_buffer(fl_cfg.k, self.codec.d,
+                                             sharding=row_sh)
+        # quantized channel, model targets: the non-trainable BN state
+        # ships through the same ravel_q8 wire format as the weights
+        # (server-side consumers see the quantize->dequantize roundtrip;
+        # clients keep their exact local state)
+        self._state_codec = None
+        if (self._quant and fl_cfg.aggregation in _MODEL_TARGETS
+                and jax.tree_util.tree_leaves(init_state)):
+            self._state_codec = flatbuf.PytreeCodec(
+                init_state, qblock=fl_cfg.quant_block)
+        # resolved lazily by the batched semi-async path ("auto" needs one
+        # abstract model trace); recorded for benchmarks / diagnostics
+        self.wave_impl_resolved: Optional[str] = None
+        # histogram of *real* (pre-bucketing) wave sizes, for the
+        # compile-count diagnostics
+        self.wave_size_hist: Dict[int, int] = {}
         # batched mode defers the per-round unravel; run() materializes
         # the global pytree once at the end
         self._global_stale = False
@@ -217,17 +267,36 @@ class FLEngine:
     def _upload_nbytes(self) -> int:
         """Channel cost of one upload, per target.  With the quantized
         channel the payload is int8 values + one f32 scale per quant_block
-        lanes (model targets still ship the non-trainable state in f32 —
-        it is tiny and structurally heterogeneous)."""
+        lanes — for model targets that includes the non-trainable state
+        (BN running stats), which rides the same ravel_q8 wire format."""
         model_target = self.cfg.aggregation in _MODEL_TARGETS
         if self.cfg.compress_updates:
             payload = self.codec.dq + self.codec.n_qblocks * 4
         else:
             payload = self._params_bytes
         if model_target:
-            return int((payload + self._state_bytes)
+            if self._state_codec is not None:
+                state_payload = (self._state_codec.dq
+                                 + self._state_codec.n_qblocks * 4)
+            else:
+                state_payload = self._state_bytes
+            return int((payload + state_payload)
                        * (1 + _MODEL_ENVELOPE))
         return int(payload * (1 + _GRAD_ENVELOPE))
+
+    def _state_q8(self, state: Pytree) -> Pytree:
+        """Server-side view of an uploaded model-target state: the
+        quantize->dequantize roundtrip of the int8 state payload (identity
+        when the channel is f32 or the state is empty)."""
+        if self._state_codec is None:
+            return state
+        return self._state_codec.roundtrip_q8(state)
+
+    def _state_q8_rows(self, states: Pytree) -> Pytree:
+        """K-stacked variant for the batched wave / SFL round states."""
+        if self._state_codec is None:
+            return states
+        return self._state_codec.roundtrip_q8_rows(states)
 
     def _residual(self, cid: int) -> jax.Array:
         """Client-side error-feedback residual (zeros before the client's
@@ -250,9 +319,11 @@ class FLEngine:
         if cfg.aggregation in _MODEL_TARGETS:
             if self._quant:
                 # model target: quantize the weights themselves (weights do
-                # not accumulate across rounds — no error feedback)
+                # not accumulate across rounds — no error feedback); the
+                # BN state ships int8 too — the server sees its roundtrip
                 q, s = self.codec.ravel_q8_nores(w_end)
                 self._qbuf.write(q, s, len(buffer))
+                s_end = self._state_q8(s_end)
             else:
                 vec = self.codec.ravel(w_end)
                 self._buf = flatbuf.write_slot(self._buf, vec,
@@ -347,6 +418,15 @@ class FLEngine:
                                                    self.global_state)
         return m
 
+    def _wave_bucket(self, kw: int) -> int:
+        """Wave-size bucket: the next power of two >= kw (capped at K), so
+        high-churn schedules compile O(log K) distinct wave programs
+        instead of one per distinct wave size; identity with
+        ``wave_buckets=False`` (the unbucketed parity oracle)."""
+        if not self.cfg.wave_buckets:
+            return kw
+        return min(1 << (kw - 1).bit_length(), self.cfg.k)
+
     def _eval_due(self, rnd: int, n_rounds: int) -> bool:
         """Evaluate every eval_every-th aggregation + always the last."""
         return rnd % self.cfg.eval_every == 0 or rnd == n_rounds
@@ -390,7 +470,8 @@ class FLEngine:
             target = ("params" if cfg.aggregation in _MODEL_TARGETS
                       else "grad")
             round_fn = make_batched_local_train(
-                self.apply_fn, self.kind, target, cfg.local_epochs)
+                self.apply_fn, self.kind, target, cfg.local_epochs,
+                mesh=self._mesh)
         now = 0.0
         for _ in range(n_rounds):
             active = self.rng.choice(len(self.clients), cfg.k,
@@ -406,6 +487,10 @@ class FLEngine:
                 vecs, states_k, _losses = round_fn(
                     self.global_params, self.global_state, xs_k, ys_k,
                     mask_k, cfg.client_lr)
+                if target == "params":
+                    # the server sees the int8-shipped state roundtrip
+                    # (identity on the f32 channel)
+                    states_k = self._state_q8_rows(states_k)
                 if self._quant:
                     # quantize all K rows in one vmapped program; gradient
                     # targets thread their error-feedback residuals through
@@ -506,11 +591,19 @@ class FLEngine:
         nearly everything in steady state), scatter each wave's rows into
         the buffer, and run the fused server round — with eval gated by
         ``eval_every`` and every metric scalar staying on device until the
-        run-end ring flush."""
+        run-end ring flush.  Waves are power-of-two bucketed
+        (``wave_buckets``): padding lanes duplicate a real lane's inputs
+        and scatter to the dropped slot K, so compilation is bounded at
+        O(log K) wave programs with unchanged numerics."""
         cfg = self.cfg
         target = "params" if cfg.aggregation in _MODEL_TARGETS else "grad"
+        if self.wave_impl_resolved is None:
+            self.wave_impl_resolved = resolve_wave_impl(
+                cfg.wave_impl, self.apply_fn, self.global_params,
+                self.global_state, self.test_x[:1])
         wave_fn = make_batched_hetero_train(
-            self.apply_fn, self.kind, target, cfg.local_epochs, self.codec)
+            self.apply_fn, self.kind, target, cfg.local_epochs, self.codec,
+            impl=self.wave_impl_resolved, mesh=self._mesh)
         eval_fn = make_flat_eval_fn(self.apply_fn, self.kind, self.codec)
         use_ef = (self._quant and cfg.error_feedback and target == "grad")
         # device-resident shard bank: one (n_clients, ...) stack built
@@ -571,8 +664,17 @@ class FLEngine:
             state_parts: List[Pytree] = []  # fedavg state mean (order-free)
             size_parts: List[int] = []
             for w, members in enumerate(waves):
-                cids = [cid for _, cid in members]
-                kw = len(cids)
+                kw = len(members)
+                self.wave_size_hist[kw] = \
+                    self.wave_size_hist.get(kw, 0) + 1
+                kb = self._wave_bucket(kw)
+                npad = kb - kw
+                # bucketing: padding lanes duplicate the first member's
+                # inputs (lanes are independent, so real lanes are
+                # untouched); their rows scatter to the dropped slot K
+                # and host bookkeeping iterates real members only
+                cids = [cid for _, cid in members] \
+                    + [members[0][1]] * npad
                 if w == 0:
                     starts = stack_rows([flats[cid] for cid in cids])
                     states = tree_stack(
@@ -584,9 +686,9 @@ class FLEngine:
                         # common case: every wave-0 member adopted the
                         # round-r global model
                         starts = jnp.broadcast_to(g_flat,
-                                                  (kw, self.codec.d))
+                                                  (kb, self.codec.d))
                         states = tree_stack(
-                            lambda l: jnp.broadcast_to(l, (kw,) + l.shape),
+                            lambda l: jnp.broadcast_to(l, (kb,) + l.shape),
                             g_state)
                     elif all(rv is not None for rv in rows):
                         ridx = jnp.asarray(rows)
@@ -607,13 +709,16 @@ class FLEngine:
                     jnp.asarray(cids), cfg.client_lr)
 
                 # ---- serialize the wave into its buffer slots ----
-                slots = np.asarray([slot for slot, _ in members], np.int32)
+                # padding lanes get slot K: out of range, dropped by the
+                # scatter (flatbuf.write_rows mode="drop")
+                slots = np.asarray([slot for slot, _ in members]
+                                   + [cfg.k] * npad, np.int32)
                 if self._quant:
                     if use_ef:
                         res = jnp.stack([self._residual(cid)
                                          for cid in cids])
                         q, s, new_res = self.codec.quantize_rows(vecs, res)
-                        for row, cid in enumerate(cids):
+                        for row, cid in enumerate(cids[:kw]):
                             self._residuals[cid] = new_res[row]
                     else:
                         q, s = self.codec.quantize_rows_nores(vecs)
@@ -623,7 +728,13 @@ class FLEngine:
                                                    jnp.asarray(slots))
 
                 # ---- host bookkeeping + client refresh ----
-                state_parts.append(new_states)
+                # model targets on the quantized channel: the server-side
+                # state view is the int8 roundtrip (identity otherwise)
+                up_states = (self._state_q8_rows(new_states)
+                             if target == "params" else new_states)
+                state_parts.append(
+                    up_states if not npad
+                    else tree_stack(lambda l: l[:kw], up_states))
                 for row, (slot, cid) in enumerate(members):
                     c = self.clients[cid]
                     self.tx_bytes += nbytes
@@ -634,7 +745,7 @@ class FLEngine:
                     if slot == cfg.k - 1 and cfg.aggregation != "fedavg":
                         # fedavg takes the weighted state mean instead
                         last_slot_state = jax.tree_util.tree_map(
-                            lambda l, row=row: l[row], new_states)
+                            lambda l, row=row: l[row], up_states)
                     # refresh rule (paper §2.2.2): adopt the round-r
                     # global model iff one arrived since this client's
                     # version; else continue the local chain from w_end

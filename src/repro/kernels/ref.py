@@ -26,6 +26,15 @@ def weighted_avg_ref(updates: jax.Array, weights: jax.Array) -> jax.Array:
     return jnp.einsum("k,kd->d", w, updates.astype(jnp.float32)) / wsum
 
 
+def weighted_sum_ref(updates: jax.Array, weights: jax.Array) -> jax.Array:
+    """Unnormalized weighted row sum w @ u -> (D,) f32 — the per-shard
+    partial of the mesh-sharded server reduction (oracle for the kernels'
+    ``mode="sum"``; the psum over shards happens in
+    repro.sharding.flat.podwise_sums)."""
+    return jnp.einsum("k,kd->d", weights.astype(jnp.float32),
+                      updates.astype(jnp.float32))
+
+
 def fedbuff_flat_ref(updates: jax.Array, staleness: jax.Array,
                      params: jax.Array, server_lr: float,
                      alpha: float = 0.5) -> jax.Array:
@@ -101,9 +110,63 @@ def dequant_flat_ref(q: jax.Array, scales: jax.Array,
             * scales[:, :, None]).reshape(K, Dq)
 
 
+INT8_DOT_MIN_K = 32  # rows at which the int8-dot path beats the fusion
+
+
+def int8dot_coeff_scale(scales: jax.Array, weights: jax.Array) -> jax.Array:
+    """(nb,) per-block absmax scale of the reduction coefficients
+    c_kb = w_k * s_kb — the quantization granule of the int8-dot path.
+    Split out so the mesh-sharded reduction can pmax it across shards
+    (each shard must quantize against the GLOBAL coefficient absmax, or
+    the sharded round diverges from the single-device one)."""
+    c = weights.astype(jnp.float32)[:, None] * scales  # (K, nb)
+    return jnp.max(jnp.abs(c), axis=0) / 127.0
+
+
+def weighted_sum_q8_int8dot_ref(q: jax.Array, scales: jax.Array,
+                                weights: jax.Array, qblock: int,
+                                coeff_scale: jax.Array | None = None
+                                ) -> jax.Array:
+    """sum_k w_k * dequant(q_k) -> (Dq,) f32 via an int8 x int8 -> int32
+    integer dot — the large-K CPU path of the quantized channel.
+
+    The fused elementwise streaming form (:func:`weighted_sum_q8_ref`)
+    is single-fusion-bound on XLA CPU: at K=64 it only reaches ~parity
+    with the threaded f32 einsum.  This path keeps the reduction an
+    integer *matmul* instead: the per-row reduction coefficient of block
+    b is c_kb = w_k * s_kb, quantized per block over K with one f32
+    absmax scale S_b (the same granule idea as the wire format, now
+    applied to coefficients), so
+
+        sum_k c_kb q_kb  ≈  S_b * sum_k cq_kb q_kb
+
+    with the inner sum an int8 dot accumulated in int32 (|cq*q| <= 127^2,
+    so K up to ~130k rows fits int32) that XLA lowers to a batched
+    integer GEMM.  Coefficient rounding adds at most 0.5/127 of the
+    block's largest |c| per row — the same order as the wire
+    quantization noise itself.
+
+    ``coeff_scale`` overrides the per-block coefficient absmax scale
+    (:func:`int8dot_coeff_scale`): the mesh-sharded server passes the
+    pod-wide pmax so every shard quantizes its coefficients on the same
+    grid as the single-device round.
+    """
+    K, Dq = q.shape
+    nb = Dq // qblock
+    c = weights.astype(jnp.float32)[:, None] * scales  # (K, nb)
+    if coeff_scale is None:
+        coeff_scale = int8dot_coeff_scale(scales, weights)
+    cs = jnp.maximum(coeff_scale, 1e-30)  # (nb,)
+    cq = jnp.clip(jnp.round(c / cs[None, :]), -127, 127).astype(jnp.int8)
+    acc = jnp.einsum("kb,kbq->bq", cq, q.reshape(K, nb, qblock),
+                     preferred_element_type=jnp.int32)  # (nb, qblock) i32
+    return (acc.astype(jnp.float32) * cs[:, None]).reshape(Dq)
+
+
 def weighted_sum_q8_ref(q: jax.Array, scales: jax.Array,
                         weights: jax.Array, qblock: int,
-                        chunk: int | None = None) -> jax.Array:
+                        chunk: int | None = None,
+                        int8_dot: bool | None = None) -> jax.Array:
     """sum_k w_k * dequant(q_k) -> (Dq,) f32, streaming.
 
     Unlike ``dequant_flat_ref`` + einsum, this never materializes the f32
@@ -118,8 +181,17 @@ def weighted_sum_q8_ref(q: jax.Array, scales: jax.Array,
     keeping XLA from re-fusing them back together (the partials cost one
     extra (D,) f32 round-trip each — the small-K single fusion is the
     fast case).
+
+    ``int8_dot`` (default: auto, K >= INT8_DOT_MIN_K) dispatches to
+    :func:`weighted_sum_q8_int8dot_ref` instead — per-block-quantized
+    coefficients + int32-accumulated integer dot, the large-K regime
+    where the single fused loop stops scaling.
     """
     K, Dq = q.shape
+    if int8_dot is None:
+        int8_dot = K >= INT8_DOT_MIN_K
+    if int8_dot:
+        return weighted_sum_q8_int8dot_ref(q, scales, weights, qblock)
     if chunk is None:
         chunk = K if K <= 16 else 16
     w = weights.astype(jnp.float32)

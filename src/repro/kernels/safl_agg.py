@@ -16,7 +16,13 @@ Kernels:
     fedasync: K sequential per-update mixes p <- (1-a_i) p + a_i w_i
     fold into one unnormalized linear combination
     (1 - sum(c)) p + c @ u with c_i = a_i prod_{j>i}(1-a_j), so the
-    per-update pytree path becomes one fused buffered pass.
+    per-update pytree path becomes one fused buffered pass.  ``mode="sum"``
+    is the shard-aware grid: the *unnormalized* weighted row sum w @ u
+    with no server step — the per-shard partial each device computes when
+    the (K, D) buffer is sharded over the mesh "pod" axis
+    (repro.sharding.flat.podwise_sums runs it per shard and folds the
+    partials with one psum; the caller then applies the server step to the
+    reduced mean).
   * ``sdga_aggregate`` — the full SDGA server round in one pass: staleness
     discount, weighted mean, server momentum, SGD step and EMA anchor, with
     the new params / momentum / EMA emitted as three fused outputs.
@@ -109,7 +115,10 @@ def safl_aggregate(updates: jax.Array, weights: jax.Array,
     ``mode="mix"`` is the fedasync fold: weights are precomputed mix
     coefficients (:func:`repro.core.aggregation.fedasync_coefficients`)
     and o = (1 - sum(w)) * params + w @ updates, unnormalized.
-    D is padded to a multiple of ``block_d`` internally.
+    ``mode="sum"`` is the per-shard partial: the unnormalized weighted
+    row sum w @ updates (no params, no normalization, no server step) —
+    what each device reduces locally under the mesh "pod" sharding before
+    the one psum.  D is padded to a multiple of ``block_d`` internally.
     """
     assert discount in _DISCOUNTS
     K, D = updates.shape
@@ -151,11 +160,13 @@ def safl_aggregate(updates: jax.Array, weights: jax.Array,
 
 def _avg_kernel(w_ref, u_ref, o_ref, *, server_lr: float, mode: str,
                 alpha: float, discount: str):
-    del server_lr, mode
+    del server_lr
     w = _weights(w_ref[...], alpha, discount)
     u = u_ref[...].astype(jnp.float32)
-    wsum = jnp.maximum(jnp.sum(w), 1e-12)
-    o_ref[...] = (jnp.einsum("k,kd->d", w, u) / wsum).astype(o_ref.dtype)
+    g = jnp.einsum("k,kd->d", w, u)
+    if mode != "sum":  # "avg" normalizes; "sum" is the per-shard partial
+        g = g / jnp.maximum(jnp.sum(w), 1e-12)
+    o_ref[...] = g.astype(o_ref.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -258,11 +269,13 @@ def _agg_q8_kernel(w_ref, q_ref, s_ref, p_ref, o_ref, *, server_lr: float,
 
 def _avg_q8_kernel(w_ref, q_ref, s_ref, o_ref, *, server_lr: float,
                    mode: str, alpha: float, discount: str, qblock: int):
-    del server_lr, mode
+    del server_lr
     w = _weights(w_ref[...], alpha, discount)
     u = _dequant_tile(q_ref[...], s_ref[...], qblock)
-    wsum = jnp.maximum(jnp.sum(w), 1e-12)
-    o_ref[...] = (jnp.einsum("k,kd->d", w, u) / wsum).astype(o_ref.dtype)
+    g = jnp.einsum("k,kd->d", w, u)
+    if mode != "sum":  # "avg" normalizes; "sum" is the per-shard partial
+        g = g / jnp.maximum(jnp.sum(w), 1e-12)
+    o_ref[...] = g.astype(o_ref.dtype)
 
 
 def _pad_q8(q, scales, block_d: int, qblock: int):
@@ -287,9 +300,10 @@ def safl_aggregate_q8(q: jax.Array, scales: jax.Array, weights: jax.Array,
                       discount: str = "none") -> jax.Array:
     """Quantized-channel ``safl_aggregate``: q (K, Dq) int8, scales
     (K, Dq/qblock) f32, weights (K,), params (D,) [fedsgd / mix] -> (D,)
-    (fedsgd / mix) or (Dq,) (avg).  Dequantize, discount, reduction and
-    server step run in one pass over the int8 buffer (f32 updates never
-    touch HBM)."""
+    (fedsgd / mix) or (Dq,) (avg / sum — ``"sum"`` is the unnormalized
+    per-shard partial for the mesh-sharded reduction).  Dequantize,
+    discount, reduction and server step run in one pass over the int8
+    buffer (f32 updates never touch HBM)."""
     assert discount in _DISCOUNTS
     K, Dq = q.shape
     q, scales, Dp = _pad_q8(q, scales, block_d, qblock)

@@ -49,6 +49,22 @@ def main() -> None:
                     help="force the sequential per-upload engine path "
                          "(batch_clients=False) — the parity oracle for "
                          "the default horizon-batched execution")
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard the flat upload channel and the batched "
+                         "waves over this many devices (mesh 'pod' axis; "
+                         "requires k %% devices == 0; on CPU hosts set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N before launching)")
+    ap.add_argument("--wave-impl", default="auto",
+                    choices=["auto", "vmap", "map"],
+                    help="batched-wave lane execution: vmap (vectorized), "
+                         "map (lax.map serial lanes, one dispatch — "
+                         "avoids the grouped-conv lowering penalty for "
+                         "conv models on CPU), auto (per model/backend)")
+    ap.add_argument("--no-wave-buckets", action="store_true",
+                    help="disable power-of-two wave-size bucketing "
+                         "(compile one program per distinct wave size — "
+                         "the bucketing parity oracle)")
     ap.add_argument("--json-out", default="")
     args = ap.parse_args()
 
@@ -91,7 +107,9 @@ def main() -> None:
                    server_lr=slr, seed=args.seed, speed_sigma=0.8,
                    compress_updates=args.compress,
                    eval_every=args.eval_every,
-                   batch_clients=not args.sequential)
+                   batch_clients=not args.sequential,
+                   devices=args.devices, wave_impl=args.wave_impl,
+                   wave_buckets=not args.no_wave_buckets)
     eng = FLEngine(cfg, fn, ds.kind, p0, s0, shards, te.x[:400], te.y[:400])
     res = eng.run(args.rounds, log_every=max(args.rounds // 10, 1))
     summary = res.metrics.summary()

@@ -29,6 +29,17 @@ def make_debug_mesh(n_devices: int = 1):
     return jax.make_mesh((1, n_devices), ("data", "model"))
 
 
+def make_pod_mesh(n_devices: int):
+    """1-D mesh over the "pod" axis — the paper's federated aggregation
+    axis, used by the multi-device SAFL engine (FLConfig.devices > 1) to
+    shard the flat (K, D) upload channel and the vmapped waves row-wise
+    (repro.sharding.flat).  On CPU hosts grow the device pool with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before the
+    first jax import."""
+    from repro.sharding.flat import make_pod_mesh as _mk
+    return _mk(n_devices)
+
+
 def mesh_chips(mesh) -> int:
     n = 1
     for v in mesh.shape.values():

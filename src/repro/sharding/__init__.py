@@ -1,2 +1,6 @@
 from repro.sharding.rules import (param_specs, batch_spec, cache_specs,  # noqa: F401
                                   spec_for_path, add_fsdp)
+from repro.sharding.flat import (POD_AXIS, constrain_rows,  # noqa: F401
+                                 lead_axis_sharding, make_pod_mesh,
+                                 mesh_size, podwise_sums, replicated,
+                                 row_sharding, shard_rows)

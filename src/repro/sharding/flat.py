@@ -1,0 +1,120 @@
+"""Pod-axis sharding for the flat (K, D) SAFL channel.
+
+The batched SAFL engine keeps every client upload as a row of one flat
+(K, D) device buffer (f32 :class:`repro.core.flatbuf.PytreeCodec` layout or
+the int8+scales :class:`repro.core.flatbuf.QuantBuffer`).  Both halves of
+the hot path scale along that same leading K axis:
+
+  * the vmapped heterogeneous *wave* (one lane per buffered client
+    training) is data-parallel over clients, and
+  * the server round is a K-way weighted reduction.
+
+So multi-device SAFL is ONE sharding decision: lay the K rows out over a
+1-D device mesh whose axis is named ``"pod"`` (the paper's federated
+aggregation axis, :mod:`repro.launch.mesh`).  Wave programs then partition
+lane-wise under GSPMD (each device trains its slice of the wave's
+clients), and the server reduction lowers to a per-shard partial weighted
+sum plus one ``psum`` over pod links (:func:`podwise_sums` — the
+``shard_map`` form of ``repro.core.aggregation.podwise_aggregate``, now on
+the flat-kernel hot path instead of the retired pytree one).
+
+Everything here is layout only — no numerics.  The per-shard partial
+reduction body is injected by the caller
+(:class:`repro.core.aggregation.FlatServer` passes the Pallas ``mode="sum"``
+kernel on TPU and the jnp / streaming-q8 references on CPU), so backend
+selection stays in one place.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+try:  # newer jax promoted shard_map out of experimental
+    from jax import shard_map
+except ImportError:  # pragma: no cover - version-dependent import path
+    from jax.experimental.shard_map import shard_map
+
+POD_AXIS = "pod"
+
+
+def make_pod_mesh(n_devices: int, devices=None) -> Mesh:
+    """1-D mesh over the first ``n_devices`` local devices, axis "pod".
+
+    On CPU hosts the device pool is grown with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (set before the
+    first jax import — see the multidevice CI job).
+    """
+    devs = list(devices if devices is not None else jax.devices())
+    assert 1 <= n_devices <= len(devs), \
+        f"requested {n_devices} mesh devices, have {len(devs)}"
+    return Mesh(np.array(devs[:n_devices]), (POD_AXIS,))
+
+
+def mesh_size(mesh: Optional[Mesh]) -> int:
+    if mesh is None:
+        return 1
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n
+
+
+def row_sharding(mesh: Mesh) -> NamedSharding:
+    """(K, D) buffers / (K,) vectors: rows split over the pod axis."""
+    return NamedSharding(mesh, P(POD_AXIS, None))
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def lead_axis_sharding(mesh: Mesh, ndim: int) -> NamedSharding:
+    """Leading (client/lane) axis on "pod", trailing dims replicated."""
+    return NamedSharding(mesh, P(POD_AXIS, *((None,) * (ndim - 1))))
+
+
+def constrain_rows(tree, mesh: Optional[Mesh]):
+    """``with_sharding_constraint`` pinning every leaf's leading axis to the
+    pod axis (no-op without a mesh).  Used inside the jitted wave programs
+    so GSPMD partitions the per-client lanes across devices regardless of
+    where the operands were produced."""
+    if mesh is None:
+        return tree
+    return jax.tree_util.tree_map(
+        lambda l: jax.lax.with_sharding_constraint(
+            l, lead_axis_sharding(mesh, l.ndim)), tree)
+
+
+def podwise_sums(mesh: Mesh, partial_fn: Callable,
+                 quantized: bool) -> Callable:
+    """The server reduction as a collective: per-shard partials + one psum.
+
+    ``partial_fn(buf_shard, wvec_shard) -> (gsum_local, wsum_local)``
+    computes the *unnormalized* weighted row sum of its local shard (the
+    staleness discount is elementwise over K, so it is applied per shard).
+    The returned callable maps the full ``(buf, wvec)`` — rows sharded
+    ``P("pod", None)`` — to the globally reduced ``(gsum (D,), wsum ())``,
+    replicated on every device.  Callable from inside a jitted program
+    (FlatServer's one-program server round keeps being one program).
+    """
+    buf_spec = ((P(POD_AXIS, None), P(POD_AXIS, None)) if quantized
+                else P(POD_AXIS, None))
+
+    def local(buf, wvec):
+        gsum, wsum = partial_fn(buf, wvec)
+        return (jax.lax.psum(gsum, POD_AXIS),
+                jax.lax.psum(jnp.asarray(wsum, jnp.float32), POD_AXIS))
+
+    return shard_map(local, mesh=mesh, in_specs=(buf_spec, P(POD_AXIS)),
+                     out_specs=(P(), P()), check_rep=False)
+
+
+def shard_rows(x: jax.Array, mesh: Optional[Mesh]) -> jax.Array:
+    """Commit an array's rows to the pod axis (no-op without a mesh)."""
+    if mesh is None:
+        return x
+    return jax.device_put(x, row_sharding(mesh))

@@ -34,6 +34,34 @@ def test_safl_agg_avg(K, D):
     np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-5)
 
 
+@pytest.mark.parametrize("K,D", [(8, 1024), (3, 777)])
+def test_safl_agg_sum_partial(K, D):
+    """mode="sum" — the unnormalized per-shard partial of the mesh-sharded
+    reduction — must equal the weighted row sum, with no server step."""
+    from repro.kernels import safl_agg
+    u = jax.random.normal(jax.random.PRNGKey(0), (K, D))
+    w = jnp.arange(1.0, K + 1.0)
+    got = safl_agg.safl_aggregate(u, w, mode="sum", block_d=256,
+                                  interpret=True)
+    want = ref.weighted_sum_ref(u, w)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-4,
+                               rtol=1e-5)
+
+
+def test_safl_agg_sum_partial_q8():
+    from repro.kernels import safl_agg
+    K, D, QB = 8, 2048, 512
+    u = jax.random.normal(jax.random.PRNGKey(0), (K, D)) * 0.1
+    q, s = jax.vmap(lambda v: ref.quantize_ref(v.reshape(-1, QB)))(u)
+    q = q.reshape(K, D)
+    w = jnp.arange(1.0, K + 1.0)
+    got = safl_agg.safl_aggregate_q8(q, s, w, mode="sum", qblock=QB,
+                                     block_d=1024, interpret=True)
+    want = ref.weighted_sum_ref(ref.dequant_flat_ref(q, s, QB), w)
+    np.testing.assert_allclose(np.array(got), np.array(want), atol=1e-4,
+                               rtol=1e-5)
+
+
 @pytest.mark.parametrize("R,B", [(8, 256), (37, 512), (1, 128), (100, 1024)])
 def test_quantize_matches_ref(R, B):
     x = jax.random.normal(jax.random.PRNGKey(R), (R, B)) * 5

@@ -1,0 +1,279 @@
+"""Multi-device SAFL (PR 4 tentpole): mesh-sharded flat channel.
+
+The in-process tests need more than one jax device and skip otherwise
+(the tier-1 suite runs on ONE CPU device by harness contract — see
+conftest.py); the multidevice CI job sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=4`` so they execute
+there.  One subprocess test exercises the 4-virtual-device path even from
+a single-device session."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import FLEngine
+from repro.core import aggregation as agg
+from repro.data import build_client_shards, make_dataset, train_test_split
+from repro.models.lstm import build_lstm
+from repro.sharding import flat as shflat
+
+NDEV = jax.device_count()
+multidevice = pytest.mark.skipif(
+    NDEV < 2, reason="needs >1 jax device (set XLA_FLAGS="
+    "--xla_force_host_platform_device_count before importing jax)")
+
+MODES = ("fedsgd", "fedavg", "fedasync", "fedbuff", "fedopt", "sdga")
+
+
+def _mesh_n() -> int:
+    return 4 if NDEV >= 4 else 2
+
+
+# ----------------------- server-level parity -----------------------
+
+
+def _quantize(buf, D, QB):
+    dq = -(-D // QB) * QB
+    x = jnp.pad(buf, ((0, 0), (0, dq - D)))
+    blocks = x.reshape(buf.shape[0], dq // QB, QB)
+    s = jnp.maximum(jnp.max(jnp.abs(blocks), axis=-1) / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(blocks / s[..., None]), -127,
+                 127).astype(jnp.int8)
+    return q.reshape(buf.shape[0], dq), s
+
+
+@multidevice
+@pytest.mark.parametrize("quantized", [False, True], ids=["f32", "q8"])
+@pytest.mark.parametrize("mode", MODES)
+def test_flat_server_mesh_matches_single_device(mode, quantized, key):
+    """FlatServer(mesh=...) — per-shard partial reduction + one psum —
+    must reproduce the single-device fused round for every mode on both
+    channels (fp tolerance only: the partial+psum reassociates the K
+    reduction)."""
+    n = _mesh_n()
+    mesh = shflat.make_pod_mesh(n)
+    K, D, QB = 2 * n, 5000, 512
+    ks = jax.random.split(key, 3)
+    buf = jax.random.normal(ks[0], (K, D), jnp.float32) * 0.1
+    params = jax.random.normal(ks[1], (D,), jnp.float32)
+    if mode == "fedavg":
+        wvec = jax.random.uniform(ks[2], (K,), jnp.float32) * 100 + 1
+    elif mode == "fedsgd":
+        wvec = jnp.ones((K,), jnp.float32)
+    elif mode == "fedasync":
+        wvec = agg.fedasync_coefficients(list(range(K)), 0.6, 0.5)
+    else:
+        wvec = jnp.asarray(np.arange(K) % 5, jnp.float32)  # staleness
+
+    b = _quantize(buf, D, QB) if quantized else buf
+    kw = dict(server_lr=0.3, alpha=0.5, momentum=0.8, ema_anchor=0.05,
+              backend="xla", quantized=quantized, qblock=QB)
+    single = agg.FlatServer(mode, D, **kw)
+    sharded = agg.FlatServer(mode, D, mesh=mesh, **kw)
+    p1, o1, m1 = single.step(jnp.array(params, copy=True), b, wvec,
+                             single.init_opt(params))
+    bsh = (tuple(shflat.shard_rows(a, mesh) for a in b) if quantized
+           else shflat.shard_rows(b, mesh))
+    p2, o2, m2 = sharded.step(jnp.array(params, copy=True), bsh, wvec,
+                              sharded.init_opt(params))
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2),
+                               atol=2e-5, rtol=2e-5)
+    assert float(m1["update_norm"]) == pytest.approx(
+        float(m2["update_norm"]), rel=1e-3, abs=1e-6)
+    for a, c in zip(jax.tree_util.tree_leaves(o1),
+                    jax.tree_util.tree_leaves(o2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(c),
+                                   atol=2e-5, rtol=2e-5)
+
+
+@multidevice
+@pytest.mark.parametrize("mode", ["fedsgd", "fedavg", "fedasync", "sdga"])
+def test_flat_server_mesh_q8_parity_in_int8dot_regime(mode, key):
+    """K=64 (the BENCH cell): the q8 CPU reduction auto-dispatches to the
+    int8-dot path at K >= 32.  The dispatch keys on the GLOBAL K and the
+    coefficient scales are pmax-ed pod-wide, so the sharded round must
+    still match the single-device one at the same tight tolerance
+    (regression: a local-K dispatch sent shards down the exact streaming
+    path while the single device ran the approximate integer dot)."""
+    n = _mesh_n()
+    mesh = shflat.make_pod_mesh(n)
+    K, D, QB = 64, 5000, 512
+    ks = jax.random.split(key, 3)
+    buf = jax.random.normal(ks[0], (K, D), jnp.float32) * 0.1
+    params = jax.random.normal(ks[1], (D,), jnp.float32)
+    if mode == "fedavg":
+        wvec = jax.random.uniform(ks[2], (K,), jnp.float32) * 100 + 1
+    elif mode == "fedasync":
+        # geometrically decaying fold coefficients — the hardest case
+        # for the coefficient quantization grid
+        wvec = agg.fedasync_coefficients([i % 7 for i in range(K)],
+                                         0.6, 0.5)
+    elif mode == "sdga":
+        wvec = jnp.asarray(np.arange(K) % 5, jnp.float32)
+    else:
+        wvec = jnp.ones((K,), jnp.float32)
+    q, s = _quantize(buf, D, QB)
+    kw = dict(server_lr=0.3, alpha=0.5, momentum=0.8, ema_anchor=0.05,
+              backend="xla", quantized=True, qblock=QB)
+    single = agg.FlatServer(mode, D, **kw)
+    sharded = agg.FlatServer(mode, D, mesh=mesh, **kw)
+    p1, _, m1 = single.step(jnp.array(params, copy=True), (q, s), wvec,
+                            single.init_opt(params))
+    qs = tuple(shflat.shard_rows(a, mesh) for a in (q, s))
+    p2, _, m2 = sharded.step(jnp.array(params, copy=True), qs, wvec,
+                             sharded.init_opt(params))
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2),
+                               atol=2e-5, rtol=2e-5)
+    assert float(m1["update_norm"]) == pytest.approx(
+        float(m2["update_norm"]), rel=1e-3, abs=1e-6)
+
+
+@multidevice
+def test_mesh_requires_even_row_split():
+    with pytest.raises(AssertionError):
+        FLConfig(k=3, n_clients=6, devices=2).validate()
+
+
+# ----------------------- engine-level parity -----------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("sentiment140", n=400, seed=0)
+    tr, te = train_test_split(ds)
+    shards = build_client_shards(tr, "iid", n_clients=8, batch_size=8)
+    p0, s0, apply_fn = build_lstm(jax.random.PRNGKey(0), "sentiment",
+                                  embed=2, hidden=4)
+    return shards, te, p0, s0, apply_fn
+
+
+def _run(setup, aggregation, devices, rounds=4, **kw):
+    shards, te, p0, s0, apply_fn = setup
+    slr = {"fedsgd": 0.05, "sdga": 0.05, "fedbuff": 0.05,
+           "fedopt": 0.005}.get(aggregation, 1.0)
+    cfg = FLConfig(n_clients=8, k=4, mode="semi_async",
+                   aggregation=aggregation, client_lr=0.05, server_lr=slr,
+                   target_accuracy=0.9, devices=devices, **kw)
+    eng = FLEngine(cfg, apply_fn, "sentiment", p0, s0, shards,
+                   te.x[:32], te.y[:32])
+    return eng.run(rounds), eng
+
+
+@multidevice
+@pytest.mark.parametrize("compress", [False, True], ids=["f32", "q8"])
+@pytest.mark.parametrize("aggregation", MODES)
+def test_sharded_engine_matches_single_device(setup, aggregation,
+                                              compress):
+    """The mesh-sharded batched engine runs the identical simulated
+    schedule and reproduces the single-device batched numerics (which are
+    themselves parity with the sequential oracle) for every mode x
+    channel."""
+    n = min(_mesh_n(), 4)
+    r1, e1 = _run(setup, aggregation, 1, compress_updates=compress)
+    rn, en = _run(setup, aggregation, n, compress_updates=compress)
+    assert rn.staleness_hist == r1.staleness_hist
+    assert rn.metrics.total_tx_bytes() == r1.metrics.total_tx_bytes()
+    assert rn.metrics.total_rx_bytes() == r1.metrics.total_rx_bytes()
+    for a, b in zip(rn.metrics.records, r1.metrics.records):
+        assert a.round == b.round
+        assert a.sim_time == pytest.approx(b.sim_time, abs=1e-9)
+        assert a.accuracy == pytest.approx(b.accuracy, abs=2e-3)
+        assert a.update_norm == pytest.approx(b.update_norm, rel=1e-3,
+                                              abs=1e-5)
+    np.testing.assert_allclose(np.asarray(en._flat_params),
+                               np.asarray(e1._flat_params),
+                               atol=1e-4, rtol=1e-4)
+
+
+@multidevice
+def test_sharded_buffer_lives_on_the_mesh(setup):
+    """The flat channel must actually be laid out across devices, not
+    replicated on one."""
+    n = _mesh_n()
+    _, eng = _run(setup, "fedsgd", n)
+    assert eng._mesh is not None
+    devs = {d for d in eng._buf.sharding.device_set}
+    assert len(devs) == n, eng._buf.sharding
+    _, enq = _run(setup, "fedsgd", n, compress_updates=True)
+    assert len(enq._qbuf.q.sharding.device_set) == n
+
+
+@multidevice
+def test_sharded_sync_round_matches_single_device(setup):
+    """SFL (sync) rounds shard the K-lane round program too."""
+    shards, te, p0, s0, apply_fn = setup
+
+    def run(devices):
+        cfg = FLConfig(n_clients=8, k=4, mode="sync",
+                       aggregation="fedsgd", client_lr=0.05,
+                       server_lr=0.05, target_accuracy=0.9,
+                       devices=devices)
+        eng = FLEngine(cfg, apply_fn, "sentiment", p0, s0, shards,
+                       te.x[:32], te.y[:32])
+        return eng.run(3), eng
+
+    r1, e1 = run(1)
+    rn, en = run(min(_mesh_n(), 4))
+    np.testing.assert_allclose(np.asarray(en._flat_params),
+                               np.asarray(e1._flat_params),
+                               atol=1e-4, rtol=1e-4)
+    for a, b in zip(rn.metrics.records, r1.metrics.records):
+        assert a.accuracy == pytest.approx(b.accuracy, abs=2e-3)
+
+
+# ------------------- single-device fallback guard -------------------
+
+
+def test_devices_must_not_exceed_pool(setup):
+    shards, te, p0, s0, apply_fn = setup
+    cfg = FLConfig(n_clients=NDEV + 64, k=NDEV + 64, devices=NDEV + 64,
+                   mode="semi_async")
+    with pytest.raises(AssertionError, match="jax devices"):
+        FLEngine(cfg, apply_fn, "sentiment", p0, s0, shards,
+                 te.x[:8], te.y[:8])
+
+
+@pytest.mark.slow
+def test_sharded_parity_subprocess():
+    """4-virtual-device engine parity, runnable from a 1-device session:
+    the subprocess sets XLA_FLAGS before its jax import (same pattern as
+    the mini dry-run)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, numpy as np
+        from repro.configs.base import FLConfig
+        from repro.core import FLEngine
+        from repro.data import (build_client_shards, make_dataset,
+                                train_test_split)
+        from repro.models.lstm import build_lstm
+        ds = make_dataset("sentiment140", n=300, seed=0)
+        tr, te = train_test_split(ds)
+        shards = build_client_shards(tr, "iid", n_clients=8, batch_size=8)
+        p0, s0, fn = build_lstm(jax.random.PRNGKey(0), "sentiment",
+                                embed=2, hidden=4)
+        outs = {}
+        for dev in (1, 4):
+            cfg = FLConfig(n_clients=8, k=4, mode="semi_async",
+                           aggregation="fedsgd", client_lr=0.05,
+                           server_lr=0.05, target_accuracy=0.9,
+                           devices=dev)
+            eng = FLEngine(cfg, fn, "sentiment", p0, s0, shards,
+                           te.x[:32], te.y[:32])
+            eng.run(3)
+            outs[dev] = np.asarray(eng._flat_params)
+        np.testing.assert_allclose(outs[1], outs[4], atol=1e-4, rtol=1e-4)
+        print("SHARDED_PARITY_OK")
+    """)
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert "SHARDED_PARITY_OK" in out.stdout, out.stderr[-2000:]

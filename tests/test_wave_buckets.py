@@ -1,0 +1,167 @@
+"""Bucketed wave compilation + wave_impl (PR 4): masked-row numerics are
+bit-exact vs the unbucketed vmap (and thereby the sequential oracle — see
+test_engine_batched) for every aggregation mode, the compile count stays
+O(log K) under a high-churn schedule, and the lax.map serial-wave fallback
+matches the vmapped wave."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import FLEngine
+from repro.core.client import (make_batched_hetero_train, model_has_conv,
+                               resolve_wave_impl)
+from repro.data import build_client_shards, make_dataset, train_test_split
+from repro.models.lstm import build_lstm
+from repro.models.vision_cnn import build_paper_model
+
+MODES = ("fedsgd", "fedavg", "fedasync", "fedbuff", "fedopt", "sdga")
+
+# high-churn schedule: k == n_clients and a wide speed spread make fast
+# clients upload several times per horizon, so wave counts and wave sizes
+# vary round to round (the regime bucketing exists for)
+CHURN = dict(n_clients=8, k=8, speed_sigma=1.5)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("sentiment140", n=400, seed=0)
+    tr, te = train_test_split(ds)
+    shards = build_client_shards(tr, "iid", n_clients=8, batch_size=8)
+    p0, s0, apply_fn = build_lstm(jax.random.PRNGKey(0), "sentiment",
+                                  embed=2, hidden=4)
+    return shards, te, p0, s0, apply_fn
+
+
+def _run(setup, aggregation, rounds=6, **kw):
+    shards, te, p0, s0, apply_fn = setup
+    slr = {"fedsgd": 0.05, "sdga": 0.05, "fedbuff": 0.05,
+           "fedopt": 0.005}.get(aggregation, 1.0)
+    cfg = FLConfig(mode="semi_async", aggregation=aggregation,
+                   client_lr=0.05, server_lr=slr, target_accuracy=0.9,
+                   **{**CHURN, **kw})
+    eng = FLEngine(cfg, apply_fn, "sentiment", p0, s0, shards,
+                   te.x[:32], te.y[:32])
+    return eng.run(rounds), eng
+
+
+# ------------------- masked-row numerics (bit-exact) -------------------
+
+
+@pytest.mark.parametrize("compress", [False, True], ids=["f32", "q8"])
+@pytest.mark.parametrize("aggregation", MODES)
+def test_bucketed_waves_bit_exact(setup, aggregation, compress):
+    """Padding lanes are discarded (dropped slot + real-members-only host
+    bookkeeping) and lanes are independent, so bucketing must not change a
+    single bit of the trained model or the schedule."""
+    rb, eb = _run(setup, aggregation, wave_buckets=True,
+                  compress_updates=compress)
+    ru, eu = _run(setup, aggregation, wave_buckets=False,
+                  compress_updates=compress)
+    assert rb.staleness_hist == ru.staleness_hist
+    assert rb.metrics.total_tx_bytes() == ru.metrics.total_tx_bytes()
+    np.testing.assert_array_equal(np.asarray(eb._flat_params),
+                                  np.asarray(eu._flat_params))
+    for a, b in zip(rb.metrics.records, ru.metrics.records):
+        assert a.accuracy == b.accuracy and a.loss == b.loss
+        assert a.update_norm == b.update_norm
+
+
+def test_bucket_sizes_are_pow2_capped(setup):
+    _, eng = _run(setup, "fedsgd", rounds=2)
+    assert [eng._wave_bucket(kw) for kw in range(1, 9)] == \
+        [1, 2, 4, 4, 8, 8, 8, 8]
+    _, eng = _run(setup, "fedsgd", rounds=2, k=6, n_clients=6)
+    # capped at K when K is not a power of two
+    assert [eng._wave_bucket(kw) for kw in range(1, 7)] == \
+        [1, 2, 4, 4, 6, 6]
+
+
+# ----------------------- compile-count guard -----------------------
+
+
+def test_high_churn_compiles_olog_k_wave_programs(setup):
+    """Under a schedule producing many distinct wave sizes, the number of
+    compiled wave programs must stay bounded by the pow2 bucket count
+    (O(log K)), not the number of distinct sizes.  A fresh model keys a
+    fresh program cache, so other tests don't pollute the count."""
+    shards, te, _, _, _ = setup
+    p0, s0, apply_fn = build_lstm(jax.random.PRNGKey(1), "sentiment",
+                                  embed=2, hidden=4)
+    cfg = FLConfig(mode="semi_async", aggregation="fedsgd",
+                   client_lr=0.05, server_lr=0.05, target_accuracy=0.9,
+                   **CHURN)
+    eng = FLEngine(cfg, apply_fn, "sentiment", p0, s0, shards,
+                   te.x[:32], te.y[:32])
+    eng.run(20)
+    # the engine's wave program is the memoized jit fn for these args
+    wave_fn = make_batched_hetero_train(
+        apply_fn, "sentiment", "grad", 1, eng.codec,
+        impl=eng.wave_impl_resolved, mesh=None)
+    n_buckets = int(math.log2(cfg.k)) + 1  # {1, 2, 4, 8} for K=8
+    n_compiles = wave_fn._cache_size()
+    sizes = set(eng.wave_size_hist)
+    assert len(sizes) > 1, "schedule produced no churn; fixture too tame"
+    assert n_compiles <= n_buckets, (n_compiles, sizes)
+    # and the guard is meaningful: the schedule hit more distinct sizes
+    # than the bucketed path compiled programs for
+    if len(sizes) > n_buckets:
+        assert n_compiles < len(sizes)
+
+
+def test_unbucketed_compiles_one_program_per_size(setup):
+    """The converse: with bucketing off, every distinct wave size is its
+    own program (the pre-PR behavior bucketing bounds)."""
+    shards, te, _, _, _ = setup
+    p0, s0, apply_fn = build_lstm(jax.random.PRNGKey(2), "sentiment",
+                                  embed=2, hidden=4)
+    cfg = FLConfig(mode="semi_async", aggregation="fedsgd",
+                   client_lr=0.05, server_lr=0.05, target_accuracy=0.9,
+                   wave_buckets=False, **CHURN)
+    eng = FLEngine(cfg, apply_fn, "sentiment", p0, s0, shards,
+                   te.x[:32], te.y[:32])
+    eng.run(20)
+    wave_fn = make_batched_hetero_train(
+        apply_fn, "sentiment", "grad", 1, eng.codec,
+        impl=eng.wave_impl_resolved, mesh=None)
+    assert wave_fn._cache_size() == len(set(eng.wave_size_hist))
+
+
+# --------------------------- wave_impl ---------------------------
+
+
+def test_lax_map_wave_matches_vmap(setup):
+    """The serial-wave fallback is the same numerics in one dispatch."""
+    rv, ev = _run(setup, "fedsgd", wave_impl="vmap")
+    rm, em = _run(setup, "fedsgd", wave_impl="map")
+    assert ev.wave_impl_resolved == "vmap"
+    assert em.wave_impl_resolved == "map"
+    assert rm.staleness_hist == rv.staleness_hist
+    np.testing.assert_allclose(np.asarray(em._flat_params),
+                               np.asarray(ev._flat_params),
+                               atol=1e-6, rtol=1e-6)
+    for a, b in zip(rm.metrics.records, rv.metrics.records):
+        assert a.accuracy == pytest.approx(b.accuracy, abs=1e-3)
+
+
+def test_wave_impl_auto_picks_map_for_conv_on_cpu(setup):
+    shards, te, p0, s0, lstm_fn = setup
+    cp, cs, cnn_fn = build_paper_model("cnn", jax.random.PRNGKey(0),
+                                       width=4, image_size=16)
+    x_img = np.zeros((1, 16, 16, 3), np.float32)
+    x_txt = te.x[:1]
+    assert model_has_conv(cnn_fn, cp, cs, x_img)
+    assert not model_has_conv(lstm_fn, p0, s0, x_txt)
+    if jax.default_backend() == "cpu":
+        assert resolve_wave_impl("auto", cnn_fn, cp, cs, x_img) == "map"
+        assert resolve_wave_impl("auto", lstm_fn, p0, s0, x_txt) == "vmap"
+    # explicit choices always pass through
+    assert resolve_wave_impl("map", lstm_fn, p0, s0, x_txt) == "map"
+    assert resolve_wave_impl("vmap", cnn_fn, cp, cs, x_img) == "vmap"
+
+
+def test_wave_impl_validated():
+    with pytest.raises(AssertionError):
+        FLConfig(wave_impl="jit").validate()
