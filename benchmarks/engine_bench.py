@@ -30,17 +30,32 @@ grouped-convolution lowering penalty):
     sharding *overhead* (parity still asserted); parallel wall-clock
     scaling needs real multi-device hardware (TPU pod slices).
 
-Every pairing runs identical simulated schedules (same seed => same event
-heap; staleness histogram and byte accounting asserted equal — the
-batched-vs-sequential parity oracle) at the default ``eval_every=1``.
+  * ``--sched POLICY ...``: the scheduling column (PR 5 tentpole) — the
+    batched engine re-timed under a participation policy
+    (``repro.sched.policy``: uniform C-of-N sampling, SEAFL
+    staleness-capped selective training, FedQS adaptive reweighting) on
+    the heavy-tailed ``lognormal`` device-time model, interleaved
+    against the full-participation/static baseline so
+    ``overhead_vs_full`` isolates what the scheduler costs per round
+    (policy admission + stochastic draws + any wave-shape churn).  Each
+    entry records rounds/sec and the run's mean buffered staleness —
+    selection policies shift the staleness distribution, which is the
+    effect they exist for.
+
+Every full-vs-batched pairing runs identical simulated schedules (same
+seed => same event heap; staleness histogram and byte accounting asserted
+equal — the batched-vs-sequential parity oracle) at the default
+``eval_every=1``.  Policy entries intentionally diverge from the full
+schedule (selection drops uploads), so only fedqs asserts schedule parity.
 Timing is best-of-reps over *marginal* rounds of warm engines with the
 reps interleaved between the two columns of each pair, so shared-host
 throughput drift hits both paths equally (the same discipline as
 benchmarks.agg_bench).
 
-Writes machine-readable ``BENCH_engine.json`` (schema 2: one entry per
-(K, model, devices) with rounds/sec, the resolved wave impl, and
-speedups) so the perf trajectory is tracked across PRs.
+Writes machine-readable ``BENCH_engine.json`` (schema 3: one entry per
+(K, model, devices) — plus one per scheduling policy — with rounds/sec,
+the resolved wave impl, mean staleness and speedups) so the perf
+trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.engine_bench
     # tiny CI smoke grid:
@@ -73,7 +88,16 @@ WARMUP_ROUNDS = 3
 REPS = 7
 ROUNDS_PER_REP = 5
 OUT_PATH = "BENCH_engine.json"
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
+# per-policy FLConfig overrides for the --sched column (lognormal timing
+# exercises the stochastic draw path; selection knobs sized so policies
+# actually reject under the bench's 8-clients-per-slot population)
+SCHED_POLICIES = {
+    "uniform": lambda n, k: dict(sched_policy="uniform",
+                                 sched_c=max(n // 2, k)),
+    "seafl": lambda n, k: dict(sched_policy="seafl", sched_stale_cap=2),
+    "fedqs": lambda n, k: dict(sched_policy="fedqs"),
+}
 
 _CACHE = {}
 
@@ -149,19 +173,19 @@ def _assert_same_schedule(a: FLEngine, b: FLEngine, what: str) -> None:
 
 
 def bench_point(K: int, model: str, reps: int, rounds_per_rep: int,
-                devices=(1,)) -> list:
+                devices=(1,), sched=()) -> list:
     # 8x clients per buffer slot keeps most horizons single-wave (few
     # repeat uploads), the schedule regime SAFL targets at scale
     n_clients = max(8 * K, 32)
     shards, te = _data(model, n_clients)
     p0, s0, apply_fn, kind = _model(model)
 
-    def mk(batched: bool, dev: int = 1) -> FLEngine:
+    def mk(batched: bool, dev: int = 1, **sched_kw) -> FLEngine:
         cfg = FLConfig(n_clients=n_clients, k=K, mode="semi_async",
                        aggregation="fedsgd", client_lr=0.05,
                        server_lr=0.05, speed_sigma=0.3,
                        target_accuracy=0.99, batch_clients=batched,
-                       devices=dev)
+                       devices=dev, **sched_kw)
         return FLEngine(cfg, apply_fn, kind, p0, s0, shards,
                         te.x[:48], te.y[:48])
 
@@ -214,25 +238,60 @@ def bench_point(K: int, model: str, reps: int, rounds_per_rep: int,
                             batched_rounds_per_sec=round(1.0 / bd, 2),
                             speedup_vs_1dev=round(ratio, 2),
                             speedup_vs_seq=round(speedup * ratio, 2)))
+
+    # ---- scheduling-policy column: batched engine under a policy +
+    # lognormal device time, interleaved vs a full-participation engine
+    # on the SAME lognormal timing — overhead_vs_full is drift-robust
+    # and isolates the policy layer (admission + reweighting + wave
+    # churn), with the stochastic draw cost common to both columns ----
+    if sched:  # pre-compile the shared full+lognormal baseline's waves
+        mk(True, sched_timing="lognormal").run(total_rounds)
+    for pol in sched:
+        sched_kw = dict(SCHED_POLICIES[pol](n_clients, K),
+                        sched_timing="lognormal")
+        mk(True, **sched_kw).run(total_rounds)  # pre-compile wave sizes
+        e_full, e_pol = (mk(True, sched_timing="lognormal"),
+                         mk(True, **sched_kw))
+        e_full.run(WARMUP_ROUNDS)
+        e_pol.run(WARMUP_ROUNDS)
+        b_full, b_pol, ratio = _timed_pair(e_full, e_pol, reps,
+                                           rounds_per_rep, WARMUP_ROUNDS)
+        if pol == "fedqs":  # admits everyone: same schedule as full
+            _assert_same_schedule(e_pol, e_full, "fedqs vs full")
+        ms = e_pol.metrics.summary()["mean_staleness"]
+        entries.append(dict(
+            base, devices=1, sched_policy=pol, sched_timing="lognormal",
+            batched_ms_per_round=round(b_pol * 1e3, 2),
+            batched_rounds_per_sec=round(1.0 / b_pol, 2),
+            mean_staleness=round(float(ms), 3),
+            rejected_uploads=int(e_pol.sched.rejected.sum()),
+            # full/policy per-round time ratio (>1: the policy run is
+            # faster per aggregation, <1: scheduling overhead)
+            overhead_vs_full=round(ratio, 2)))
     return entries
 
 
 def main(ks=KS, models=tuple(MODELS), reps: int = REPS,
          rounds_per_rep: int = ROUNDS_PER_REP,
-         out_path: str = OUT_PATH, devices=(1,)) -> dict:
+         out_path: str = OUT_PATH, devices=(1,), sched=()) -> dict:
     entries = []
     print("# SAFL engine: sequential vs horizon-batched vs multi-device "
-          "rounds/sec (same schedule, same host)")
-    print("K,model,D,devices,impl,seq_rps,batched_rps,speedup")
+          "vs scheduling-policy rounds/sec (same host)")
+    print("K,model,D,devices,sched,impl,seq_rps,batched_rps,speedup,"
+          "mean_stale")
     for model in models:
         for K in ks:
-            for e in bench_point(K, model, reps, rounds_per_rep, devices):
+            for e in bench_point(K, model, reps, rounds_per_rep, devices,
+                                 sched):
                 entries.append(e)
-                sp = e.get("speedup", e.get("speedup_vs_1dev"))
+                sp = e.get("speedup", e.get("speedup_vs_1dev",
+                                            e.get("overhead_vs_full")))
                 print(f"{e['K']},{e['model']},{e['D']},{e['devices']},"
+                      f"{e.get('sched_policy', 'full')},"
                       f"{e['wave_impl']},"
                       f"{e.get('seq_rounds_per_sec', '-')},"
-                      f"{e['batched_rounds_per_sec']},{sp}x",
+                      f"{e['batched_rounds_per_sec']},{sp}x,"
+                      f"{e.get('mean_staleness', '-')}",
                       flush=True)
     report = {
         "benchmark": "safl_engine",
@@ -249,7 +308,13 @@ def main(ks=KS, models=tuple(MODELS), reps: int = REPS,
             "serially in-process, so speedup_vs_1dev tracks sharding "
             "overhead there (parallel wall-clock gains need real "
             "multi-device hardware); speedup_vs_seq is the sharded "
-            "engine vs the sequential per-upload oracle."),
+            "engine vs the sequential per-upload oracle. sched_policy "
+            "entries re-time the batched engine under a participation "
+            "policy on the lognormal device-time model "
+            "(repro.sched); overhead_vs_full is the full-participation/"
+            "policy per-round time ratio and mean_staleness the run's "
+            "mean buffered staleness (selection shifts it — the policy "
+            "effect)."),
         "entries": entries,
     }
     with open(out_path, "w") as f:
@@ -273,6 +338,11 @@ if __name__ == "__main__":
                     help="mesh device counts to sweep for the batched "
                          "path (1 = single device; >1 shards the flat "
                          "channel + waves over the pod axis)")
+    ap.add_argument("--sched", nargs="+", default=[],
+                    choices=list(SCHED_POLICIES),
+                    help="scheduling policies to add as extra batched "
+                         "columns (lognormal device time): rounds/sec + "
+                         "mean staleness per policy")
     a = ap.parse_args()
     main(tuple(a.ks), tuple(a.models), a.reps, a.rounds_per_rep, a.out,
-         tuple(a.devices))
+         tuple(a.devices), tuple(a.sched))

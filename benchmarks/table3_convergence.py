@@ -3,10 +3,21 @@
 
 Validated claims: FedSGD reaches the target earlier (smaller T_f) but takes
 longer to stabilize (larger T_s - T_f); FedAvg is slower but steadier.
+
+Scale axis (PR 5): ``--scale N`` multiplies the client population (the
+horizon-batched engine + bucketed waves keep the compile count and
+wall-clock bounded — the regime that was infeasible on the per-upload
+path), and ``--sched-policy uniform --sched-c C`` runs the grid under
+C-of-N uniform sampling (:mod:`repro.sched.policy`), e.g. the 10x grid:
+
+    PYTHONPATH=src python -m benchmarks.table3_convergence \\
+        --scale 10 --sched-policy uniform --sched-c 64
 """
 from __future__ import annotations
 
-from benchmarks.fl_common import run_experiment
+import argparse
+
+from benchmarks.fl_common import N_CLIENTS, run_experiment
 
 SCENARIOS = [
     ("cifar10", "cnn", "hetero_dirichlet", {"alpha": 0.3}, 0.45),
@@ -15,21 +26,44 @@ SCENARIOS = [
 ]
 
 
-def main() -> list:
+def main(scale: int = 1, sched_policy: str = "full",
+         sched_c: int = 0) -> list:
+    n_clients = N_CLIENTS * scale
+    extra = {}
+    tag = ""
+    if sched_policy != "full":
+        extra = {"sched_policy": sched_policy, "sched_c": sched_c}
+        tag = f" policy={sched_policy}" + (f" C={sched_c}/{n_clients}"
+                                           if sched_c else "")
     out = []
-    print("# Table 3 — convergence (SAFL), threshold = Acc_t")
-    print("scenario,strategy,Acc_t,T_f,T_s,stability")
+    print(f"# Table 3 — convergence (SAFL), threshold = Acc_t, "
+          f"clients={n_clients}{tag}")
+    print("scenario,strategy,Acc_t,T_f,T_s,stability,mean_stale,wall_s")
     for dataset, model, dist, dkw, acc_t in SCENARIOS:
         for aggn in ("fedsgd", "fedavg"):
             r = run_experiment(dataset=dataset, model=model, dist=dist,
                                dist_kw=dkw, mode="semi_async",
-                               aggregation=aggn, target_accuracy=acc_t)
+                               aggregation=aggn, target_accuracy=acc_t,
+                               n_clients=n_clients, **extra)
             print(f"{dataset}/{dist},{aggn},{acc_t},"
-                  f"{r['T_f']},{r['T_s']},{r['stability']}")
+                  f"{r['T_f']},{r['T_s']},{r['stability']},"
+                  f"{r['mean_staleness']:.2f},{r.get('wall_s', '-')}",
+                  flush=True)
             out.append((dataset, dist, aggn, r["T_f"], r["T_s"],
                         r["stability"]))
     return out
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scale", type=int, default=1,
+                    help="client-population multiplier on the seed grid "
+                         "(10 = the ROADMAP's 10x scale proof)")
+    ap.add_argument("--sched-policy", default="full",
+                    choices=["full", "uniform", "seafl", "fedqs"],
+                    help="participation policy for the grid")
+    ap.add_argument("--sched-c", type=int, default=0,
+                    help="uniform policy: clients admitted per round "
+                         "(0 = all)")
+    a = ap.parse_args()
+    main(a.scale, a.sched_policy, a.sched_c)

@@ -219,6 +219,30 @@ class FLConfig:
     speed_sigma: float = 0.6
     comm_mean_s: float = 1.0
     seed: int = 0
+    # ---- client scheduling subsystem (repro.sched, tentpole PR 5) ----
+    # device-time model for the semi-async event schedule (and the SFL
+    # round durations): "static" (the original deterministic per-client
+    # duration — the parity oracle), "lognormal" (heavy-tailed per-epoch
+    # compute jitter exp(sigma * z), jax-PRNG seeded via sched_seed), or
+    # "markov" (two-state availability: clients drop offline after an
+    # upload with prob sched_drop_p for an Exponential(sched_off_mean_s)
+    # holding time — no-show events — on top of the lognormal jitter).
+    sched_timing: str = "static"
+    sched_jitter_sigma: float = 0.25  # lognormal/markov per-epoch sigma
+    sched_drop_p: float = 0.1  # markov: P(offline) after each upload
+    sched_off_mean_s: float = 5.0  # markov: mean offline holding time
+    # participation policy: "full" (every upload admitted — the paper's
+    # implicit setting), "uniform" (C-of-N sampling per round, C =
+    # sched_c; C = N is exactly full), "seafl" (selective training: skip
+    # clients whose projected staleness exceeds sched_stale_cap — they
+    # discard stale work and resync), "fedqs" (adaptive: admit all,
+    # reweight aggregation coefficients by n_i/(1+tau_i)^sched_qs_beta).
+    # See repro/sched/__init__.py for the source-paper mapping.
+    sched_policy: str = "full"
+    sched_c: int = 0  # uniform: clients admitted per round (0 -> n_clients)
+    sched_stale_cap: int = 4  # seafl: max admissible projected staleness
+    sched_qs_beta: float = 1.0  # fedqs: staleness exponent in the score
+    sched_seed: int = 0  # PRNG seed for timing jitter + policy sampling
     # beyond-paper: int8 quantized flat channel (repro.core.flatbuf /
     # repro.kernels.safl_agg q8 kernels; repro.core.compression for the
     # fedasync tree path)
@@ -279,6 +303,20 @@ class FLConfig:
             "quant_block must be a power of two in [8, 2048]"
         # every eval_every-th round is evaluated; 0 would record nothing
         assert self.eval_every >= 1, "eval_every must be >= 1"
+        # scheduling subsystem knobs (repro.sched)
+        assert self.sched_timing in ("static", "lognormal", "markov"), \
+            self.sched_timing
+        assert self.sched_policy in ("full", "uniform", "seafl", "fedqs"), \
+            self.sched_policy
+        assert self.sched_jitter_sigma >= 0.0
+        assert 0.0 <= self.sched_drop_p < 1.0, \
+            "sched_drop_p must be in [0, 1) (1 would end every schedule)"
+        assert self.sched_off_mean_s > 0.0
+        assert self.sched_stale_cap >= 0
+        # 0 means "all clients"; any C >= 1 keeps the buffer fillable
+        # (an admitted client may upload several times per horizon)
+        assert 0 <= self.sched_c <= self.n_clients, \
+            f"sched_c={self.sched_c} must be in [0, n_clients]"
         assert isinstance(self.batch_clients, bool)
         assert self.wave_impl in ("vmap", "map", "auto"), self.wave_impl
         assert isinstance(self.wave_buckets, bool)

@@ -110,7 +110,8 @@ def fedasync_mix(global_params: Pytree, client_params: Pytree,
 
 
 def fedasync_coefficients(staleness: Sequence[int], fedasync_alpha: float,
-                          alpha: float) -> jax.Array:
+                          alpha: float,
+                          score: Optional[np.ndarray] = None) -> jax.Array:
     """Fold K sequential fedasync mixes into ONE buffered reduction.
 
     Applying p <- (1 - a_i) p + a_i w_i for i = 1..K in arrival order
@@ -123,9 +124,16 @@ def fedasync_coefficients(staleness: Sequence[int], fedasync_alpha: float,
     buffered fedasync round is the single fused program
     (1 - sum(c)) p + c @ u (``mode="mix"`` in the flat kernels).  Pure
     host numpy over the host-resident staleness ints — no device sync.
+
+    ``score`` (optional, from an adaptive scheduling policy —
+    :mod:`repro.sched.policy`) multiplies each per-update mix rate a_i
+    before the fold, clipped back to [0, 1] so every sequential mix
+    stays a convex combination.
     """
     a = fedasync_alpha * np.power(
         1.0 + np.asarray(staleness, np.float32), -np.float32(alpha))
+    if score is not None:
+        a = np.clip(a * np.asarray(score, np.float32), 0.0, 1.0)
     one_minus = (1.0 - a).astype(np.float32)
     # tail_i = prod_{j>i} (1 - a_j): exclusive reversed cumprod
     tail = np.concatenate(
@@ -227,7 +235,12 @@ class FlatServer:
     in-program), or precomputed fold coefficients for fedasync
     (:func:`fedasync_coefficients` — K sequential per-update mixes as one
     unnormalized linear combination, so even the per-update aggregator
-    rides the fused flat channel).
+    rides the fused flat channel).  ``external_discount=True`` (set by
+    the engine when an adaptive scheduling policy reweights — see
+    :mod:`repro.sched.policy`) switches EVERY mode to reading ``wvec`` as
+    the final precomputed reduction weights: the in-program staleness
+    discount is disabled so the host-composed base-discount-times-score
+    vector is applied verbatim.
 
     ``quantized=True`` switches the buffer input to the int8 flat channel:
     ``step`` consumes ``buf = (q int8 (K, Dq), scales f32 (K, Dq/qblock))``
@@ -257,7 +270,8 @@ class FlatServer:
                  quantized: bool = False,
                  qblock: Optional[int] = None,
                  donate: Optional[bool] = None,
-                 mesh=None):
+                 mesh=None,
+                 external_discount: bool = False):
         from repro.kernels import ref as _ref
         from repro.kernels import safl_agg as _k
         from repro.sharding import flat as _shflat
@@ -279,7 +293,18 @@ class FlatServer:
                 f"block_d={bd} must be a multiple of qblock={qb}"
         self.mesh = mesh if _shflat.mesh_size(mesh) > 1 else None
 
+        # external_discount: an adaptive scheduling policy
+        # (repro.sched.policy, reweights=True) precomputes the FINAL
+        # reduction weights host-side (per-mode base discount x policy
+        # score), so every mode — including the staleness-discounted
+        # ones, in-kernel and in-oracle — reads wvec as-is.  Default
+        # False keeps the jitted program identical to the pre-sched one.
+        self.external_discount = external_discount
+        sdga_disc = "none" if external_discount else "poly"
+
         def discounted(wvec):
+            if external_discount:
+                return wvec.astype(jnp.float32)
             if mode in ("fedbuff", "fedopt", "sdga"):
                 return staleness_poly(wvec, alpha)
             return wvec.astype(jnp.float32)
@@ -380,7 +405,8 @@ class FlatServer:
             elif mode in ("fedsgd", "fedavg", "fedbuff", "fedasync"):
                 kmode = {"fedavg": "avg", "fedasync": "mix"}.get(mode,
                                                                  "fedsgd")
-                disc = "poly" if mode == "fedbuff" else "none"
+                disc = ("poly" if mode == "fedbuff"
+                        and not external_discount else "none")
                 if use_pallas and quantized:
                     q, scales = buf
                     new = _k.safl_aggregate_q8(
@@ -428,16 +454,28 @@ class FlatServer:
                         opt["ema"], server_lr=server_lr, alpha=alpha,
                         momentum=momentum, ema_anchor=ema_anchor,
                         ema_decay=ema_decay, qblock=qb, block_d=bd,
-                        interpret=interpret)
+                        interpret=interpret, discount=sdga_disc)
                 elif use_pallas:
                     new, m, e = _k.sdga_aggregate(
                         buf, wvec, params, opt["momentum"], opt["ema"],
                         server_lr=server_lr, alpha=alpha, momentum=momentum,
                         ema_anchor=ema_anchor, ema_decay=ema_decay,
-                        block_d=bd, interpret=interpret)
+                        block_d=bd, interpret=interpret,
+                        discount=sdga_disc)
                 elif quantized:
                     # the shared SDGA step over the streaming q8 mean
                     g = q8_mean(buf, discounted(wvec))
+                    new, m, e = _ref.sdga_step_from_mean(
+                        g, params, opt["momentum"], opt["ema"],
+                        server_lr=server_lr, momentum=momentum,
+                        ema_anchor=ema_anchor, ema_decay=ema_decay)
+                elif external_discount:
+                    # the reference discounts in-fn; the external-weight
+                    # path takes the mean with wvec as-is and shares the
+                    # SDGA step (the same split the q8 branch uses)
+                    w = wvec.astype(jnp.float32)
+                    g = (_ref.weighted_sum_ref(buf, w)
+                         / jnp.maximum(jnp.sum(w), 1e-12))
                     new, m, e = _ref.sdga_step_from_mean(
                         g, params, opt["momentum"], opt["ema"],
                         server_lr=server_lr, momentum=momentum,

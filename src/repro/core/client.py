@@ -29,7 +29,14 @@ Pytree = Any
 
 @dataclasses.dataclass
 class ClientState:
-    """Host-side record for one simulated client."""
+    """Host-side record for one simulated client.
+
+    ``speed`` MAY be mutated between (not during) ``FLEngine.run()``
+    calls to model drifting device performance: the scheduling
+    subsystem snapshots speeds when events are scheduled and rescales
+    the compute portion of pending event times on resume
+    (:meth:`repro.sched.events.EventQueue.resume`), so a persisted heap
+    never replays durations computed from a stale speed."""
     cid: int
     params: Pytree  # current local weights
     model_state: Pytree  # non-trainables (BN running stats)

@@ -31,9 +31,19 @@ class DeviceMetricsRing:
     with the buffer donated — one tiny async dispatch, no host transfer,
     so the engine's hot loop never blocks on a metric.  ``flush`` does
     the single device->host copy at run end.
+
+    ``stale_bins`` / ``n_clients`` (the scheduling-stats channels,
+    PR 5): when set, the ring additionally owns a device-resident
+    staleness histogram (int32 ``(stale_bins,)``, last bin = overflow)
+    and per-client participation counts (int32 ``(n_clients,)``).
+    ``append_sched`` scatter-adds one aggregation round's (K,) staleness
+    and client-index vectors into both with the buffers donated — the
+    same no-host-sync discipline as ``append`` — and ``flush_sched``
+    does their single device->host copy at run end.
     """
 
-    def __init__(self, capacity: int, channels: int = 3):
+    def __init__(self, capacity: int, channels: int = 3,
+                 stale_bins: int = 0, n_clients: int = 0):
         # lazy import keeps this module importable without jax for
         # host-only consumers of MetricsLog
         import jax.numpy as jnp
@@ -45,6 +55,12 @@ class DeviceMetricsRing:
         cap = 1 << (max(64, self.capacity) - 1).bit_length()
         self._buf = jnp.zeros((cap, self.channels), jnp.float32)
         self._n = 0
+        self.stale_bins = int(stale_bins)
+        self.n_clients = int(n_clients)
+        self._hist = self._part = None
+        if self.stale_bins:
+            self._hist = jnp.zeros((self.stale_bins,), jnp.int32)
+            self._part = jnp.zeros((max(self.n_clients, 1),), jnp.int32)
 
     def append(self, *scalars) -> None:
         assert len(scalars) == self.channels, (len(scalars), self.channels)
@@ -53,12 +69,26 @@ class DeviceMetricsRing:
         self._buf = _ring_write(self._buf, jnp.int32(self._n), *scalars)
         self._n += 1
 
+    def append_sched(self, staleness, cids) -> None:
+        """Scatter-add one round's (K,) int32 staleness values and client
+        ids into the device histogram / participation counts (donated
+        in-place writes, no host transfer)."""
+        assert self._hist is not None, "ring built without sched channels"
+        self._hist, self._part = _sched_write(
+            self._hist, self._part, staleness, cids)
+
     def __len__(self) -> int:
         return self._n
 
     def flush(self) -> np.ndarray:
         """One host transfer: the (n, channels) rows appended so far."""
         return np.asarray(self._buf[:self._n])
+
+    def flush_sched(self):
+        """One host transfer: (staleness histogram, participation)."""
+        assert self._hist is not None, "ring built without sched channels"
+        return (np.asarray(self._hist),
+                np.asarray(self._part[:self.n_clients]))
 
 
 @functools.lru_cache(maxsize=None)
@@ -76,6 +106,25 @@ def _ring_writer(channels: int):
 
 def _ring_write(buf, i, *scalars):
     return _ring_writer(len(scalars))(buf, i, *scalars)
+
+
+@functools.lru_cache(maxsize=None)
+def _sched_writer():
+    import jax
+    import jax.numpy as jnp
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1))
+    def write(hist, part, staleness, cids):
+        bins = hist.shape[0]
+        hist = hist.at[jnp.clip(staleness, 0, bins - 1)].add(1)
+        part = part.at[cids].add(1)
+        return hist, part
+
+    return write
+
+
+def _sched_write(hist, part, staleness, cids):
+    return _sched_writer()(hist, part, staleness, cids)
 
 
 @dataclasses.dataclass

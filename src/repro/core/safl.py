@@ -79,17 +79,35 @@ size.  ``wave_impl`` selects vmap (vectorized lanes) or ``lax.map``
 (serial lanes, one dispatch — same numerics, no grouped-convolution
 lowering penalty for conv models on CPU); ``"auto"`` picks per model and
 backend (client.resolve_wave_impl).
+
+*Client scheduling* (:mod:`repro.sched`): simulated time and
+participation are pluggable.  A ``Scheduler`` built from the
+``FLConfig.sched_*`` knobs owns the persistent event heap, the
+device-time model (static / lognormal jitter / Markov availability) and
+the participation policy (full / uniform C-of-N / SEAFL staleness-capped
+selective training / FedQS adaptive reweighting); both SAFL paths
+consume its upload-decision stream, so the sequential and
+horizon-batched schedules stay identical under every model x policy, and
+``sched_policy="full"`` + ``sched_timing="static"`` reproduce the
+pre-sched engine bit-exactly.  Rejected uploads (selective policies)
+discard the client's local progress and resync it to the current global
+model — in the batched path that training never runs at all, which is
+the point of selective training.  Adaptive policies hand re-scored
+aggregation coefficients to a ``FlatServer(external_discount=True)``.
+Per-client participation counts and a device-resident staleness
+histogram ride the metrics ring (one extra host transfer per run) into
+``FLResult.participation`` / ``FLResult.sched_stats``.
 """
 from __future__ import annotations
 
 import dataclasses
-import heapq
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import sched as schedmod
 from repro.core import aggregation as agg
 from repro.core import flatbuf
 from repro.core.client import (ClientState, make_batched_hetero_train,
@@ -100,6 +118,10 @@ from repro.core.metrics import DeviceMetricsRing, MetricsLog
 from repro.sharding import flat as shflat
 
 Pytree = Any
+
+# device-resident staleness histogram width (last bin = overflow); the
+# host-side dict in FLResult.staleness_hist stays unbounded
+_STALE_BINS = 32
 
 # simulated samples/second at speed 1.0
 _BASE_RATE = 500.0
@@ -118,6 +140,13 @@ class FLResult:
     final_params: Pytree
     staleness_hist: Dict[int, int]
     idle_time: float  # SFL: total simulated idle seconds across clients
+    # per-client admitted-upload counts (host accounting, both paths) +
+    # the scheduler summary: policy/timing names, rejected-upload and
+    # no-show totals, and — batched path — the device-resident staleness
+    # histogram accumulated in the DeviceMetricsRing (one transfer per
+    # run; "staleness_bins" key, last bin = overflow)
+    participation: Optional[np.ndarray] = None
+    sched_stats: Optional[Dict] = None
 
 
 class FLEngine:
@@ -151,6 +180,16 @@ class FLEngine:
         self.global_state = init_state
         self.t_global = 0
         self.rng = rng
+
+        # ---- scheduling subsystem: simulated time + participation ----
+        # (repro.sched: device-time model, participation policy and the
+        # persistent event heap — replaces the engine's inlined heap)
+        self.sched = schedmod.build_scheduler(fl_cfg, self.clients,
+                                              self._base_compute)
+        # device-resident sched-stat accumulators (batched path): folded
+        # from the per-run DeviceMetricsRing flush at each run() end
+        self._dev_stale_hist = np.zeros(_STALE_BINS, np.int64)
+        self._dev_participation = np.zeros(len(self.clients), np.int64)
 
         self.metrics = MetricsLog(fl_cfg.target_accuracy,
                                   fl_cfg.oscillation_thresholds)
@@ -196,7 +235,8 @@ class FLEngine:
             ema_anchor=fl_cfg.ema_anchor or 0.05,
             quantized=self._quant, qblock=fl_cfg.quant_block,
             donate=False if self._batched_async else None,
-            mesh=self._mesh)
+            mesh=self._mesh,
+            external_discount=self.sched.policy.reweights)
         self._opt = self._server.init_opt(self._flat_params)
         if self._quant:
             self._qbuf = flatbuf.QuantBuffer(fl_cfg.k, self.codec.d,
@@ -226,18 +266,21 @@ class FLEngine:
         # device-resident (n_clients, ...) shard bank for the batched
         # path, built once on first use (waves gather rows in-program)
         self._shard_bank = None
-        # the semi-async event heap persists across run() calls, so
-        # incremental runs (run(5) then run(10)) continue ONE simulated
-        # schedule instead of re-jittering and restarting simulated time
-        self._heap: Optional[List[Tuple[float, int]]] = None
-        # batched-mode client weights (flat (D,) rows) persist alongside
-        # the heap — the counterpart of ClientState.params on the
-        # sequential path
+        # the semi-async event heap (inside self.sched) persists across
+        # run() calls, so incremental runs (run(5) then run(10)) continue
+        # ONE simulated schedule instead of re-jittering and restarting
+        # simulated time.  Batched-mode client weights (flat (D,) rows)
+        # persist alongside it — the counterpart of ClientState.params on
+        # the sequential path.
         self._client_flats: Optional[List[jax.Array]] = None
 
     # ------------------------------------------------------------------
-    def _epoch_time(self, c: ClientState) -> float:
-        """Simulated seconds for one upload period (local_epochs) of c."""
+    def _base_compute(self, c: ClientState) -> float:
+        """Deterministic simulated compute seconds for one upload period
+        (local_epochs) of c — the base the sched timing models jitter.
+        Reads ``c.speed`` at call time: the scheduler's event queue
+        snapshots speeds and rescales pending events when they are
+        mutated across run() calls (sched.events.EventQueue.resume)."""
         per_epoch = c.n_samples / (_BASE_RATE * c.speed)
         return per_epoch * self.cfg.local_epochs
 
@@ -354,19 +397,40 @@ class FLEngine:
     # ------------------------------------------------------------------
     def _weight_vector(self, staleness: Sequence[int],
                        sizes: Sequence[int]) -> jax.Array:
-        """Per-mode weight-input vector for the flat server program."""
+        """Per-mode weight-input vector for the flat server program.
+
+        With an adaptive participation policy (``policy.reweights``, e.g.
+        fedqs) the final reduction weights are composed on host — the
+        per-mode base (data sizes / unit weights / the (1+tau)^-alpha
+        discount / the fedasync mix rates) times the policy score — and
+        the server was built ``external_discount=True`` so it applies
+        them verbatim."""
         cfg = self.cfg
-        if cfg.aggregation == "fedavg":
-            return jnp.asarray(sizes, jnp.float32)
-        if cfg.aggregation == "fedsgd":
-            return jnp.ones((len(staleness),), jnp.float32)
+        policy = self.sched.policy
+        score = (policy.score(staleness, sizes)
+                 if policy.reweights else None)
         if cfg.aggregation == "fedasync":
             # K sequential mixes folded into one reduction (host math
-            # over host ints — no device sync)
+            # over host ints — no device sync); the policy score scales
+            # the per-update mix rates before the fold
             return agg.fedasync_coefficients(
-                staleness, cfg.fedasync_alpha, cfg.staleness_alpha)
-        # staleness-discounted modes discount in-program
-        return jnp.asarray(staleness, jnp.float32)
+                staleness, cfg.fedasync_alpha, cfg.staleness_alpha,
+                score=score)
+        if score is None:
+            if cfg.aggregation == "fedavg":
+                return jnp.asarray(sizes, jnp.float32)
+            if cfg.aggregation == "fedsgd":
+                return jnp.ones((len(staleness),), jnp.float32)
+            # staleness-discounted modes discount in-program
+            return jnp.asarray(staleness, jnp.float32)
+        if cfg.aggregation == "fedavg":
+            base = np.asarray(sizes, np.float32)
+        elif cfg.aggregation == "fedsgd":
+            base = np.ones((len(staleness),), np.float32)
+        else:  # fedbuff / fedopt / sdga: the poly discount, host-side
+            base = np.power(1.0 + np.asarray(staleness, np.float32),
+                            -np.float32(cfg.staleness_alpha))
+        return jnp.asarray(base * score, jnp.float32)
 
     def _server_round(self, staleness: Sequence[int],
                       sizes: Sequence[int]) -> Dict[str, jax.Array]:
@@ -456,8 +520,12 @@ class FLEngine:
             # flat end-to-end: the ONE unravel of the whole run
             self.global_params = self.codec.unravel(self._flat_params)
             self._global_stale = False
+        stats = self.sched.stats()
+        stats["staleness_bins"] = self._dev_stale_hist.copy()
         return FLResult(self.metrics, self.global_params,
-                        self.staleness_hist, self.idle_time)
+                        self.staleness_hist, self.idle_time,
+                        participation=self.sched.participation.copy(),
+                        sched_stats=stats)
 
     # ----- SFL -----
     def _run_sync(self, n_rounds: int, log_every: int) -> None:
@@ -515,7 +583,8 @@ class FLEngine:
                     self.tx_bytes += self._upload_nbytes()
                     buffer.append({"staleness": 0, "cid": cid,
                                    "n": c.n_samples})
-                    durations.append(self._epoch_time(c) + c.comm_time)
+                    durations.append(self.sched.timing.sync_duration(c))
+                    self.sched.participation[cid] += 1
             else:
                 for cid in active:
                     c = self.clients[cid]
@@ -524,7 +593,8 @@ class FLEngine:
                     c.version = self.t_global
                     w_end, s_end, _ = self._run_local(c)
                     self._enqueue_upload(buffer, c, w_end, s_end, 0)
-                    durations.append(self._epoch_time(c) + c.comm_time)
+                    durations.append(self.sched.timing.sync_duration(c))
+                    self.sched.participation[cid] += 1
             round_t = max(durations) + self._agg_overhead()
             self.idle_time += sum(round_t - d for d in durations)
             now += round_t
@@ -538,15 +608,28 @@ class FLEngine:
 
     # ----- SAFL: sequential per-upload path (the parity oracle) -----
     def _run_semi_async(self, n_rounds: int, log_every: int) -> None:
-        heap = self._heap_resume()
+        """Per-upload loop over the scheduler's event stream.  The
+        scheduler owns the heap (WAKE no-shows are consumed internally,
+        every pop schedules the client's successor event) and surfaces
+        one upload *decision* per pop; a policy-rejected upload discards
+        the client's local progress and resyncs it to the current global
+        model (selective training — see repro.sched.policy)."""
+        self.sched.resume()
         buffer: List[Dict] = []
         now = 0.0
-        while self.t_global < n_rounds and heap:
-            now, cid = heapq.heappop(heap)
+        while self.t_global < n_rounds:
+            ev = self.sched.pop(self.t_global)
+            if ev is None:
+                break
+            now, cid = ev.time, ev.cid
             c = self.clients[cid]
+            if not ev.admitted:
+                c.params, c.model_state = (self.global_params,
+                                           self.global_state)
+                c.version = self.t_global
+                continue
             w_end, s_end, _ = self._run_local(c)
-            staleness = self.t_global - c.version
-            self._enqueue_upload(buffer, c, w_end, s_end, staleness)
+            self._enqueue_upload(buffer, c, w_end, s_end, ev.staleness)
 
             # client-side model refresh (paper §2.2.2): adopt newest global
             # if one arrived since this client's version, else continue local
@@ -556,8 +639,6 @@ class FLEngine:
                 c.version = self.t_global
             else:
                 c.params, c.model_state = w_end, s_end
-            heapq.heappush(heap, (now + self._epoch_time(c) + c.comm_time,
-                                  cid))
 
             if len(buffer) >= self.cfg.k:
                 stale_vals = [b["staleness"] for b in buffer]
@@ -572,16 +653,6 @@ class FLEngine:
                               f"loss={r.loss:.4f} "
                               f"stale={r.mean_staleness:.2f}")
                 buffer = []
-
-    def _heap_resume(self) -> List[Tuple[float, int]]:
-        if self._heap is None:
-            heap: List[Tuple[float, int]] = []
-            for c in self.clients:
-                jitter = float(c.rng.uniform(0, 0.1))
-                heapq.heappush(heap, (self._epoch_time(c) + c.comm_time
-                                      + jitter, c.cid))
-            self._heap = heap
-        return self._heap
 
     # ----- SAFL: horizon-batched path (the hot path) -----
     def _run_semi_async_batched(self, n_rounds: int, log_every: int) -> None:
@@ -622,23 +693,45 @@ class FLEngine:
         if self._client_flats is None:
             self._client_flats = [self._flat_params] * len(self.clients)
         flats = self._client_flats
-        ring = DeviceMetricsRing(n_rounds + 1, channels=3)
+        ring = DeviceMetricsRing(n_rounds + 1, channels=3,
+                                 stale_bins=_STALE_BINS,
+                                 n_clients=len(self.clients))
         pending: List[Dict] = []  # host-side fields per recorded round
 
         tree_stack = jax.tree_util.tree_map
-        heap = self._heap_resume()
-        while self.t_global < n_rounds and heap:
+        self.sched.resume()
+        while self.t_global < n_rounds:
             r = self.t_global
-            # ---- pop the heap to the aggregation horizon (K events);
-            # re-push times are schedule-only, so the heap evolves exactly
-            # as in the sequential path ----
+            # ---- pop the scheduler to the aggregation horizon (K
+            # admitted uploads); the scheduler re-pushes successor events
+            # at pop time from schedule data only, so the heap evolves
+            # exactly as in the sequential path.  Policy-rejected uploads
+            # are handled inline: the client discards its local progress
+            # and adopts the round-r global model (selective training) —
+            # which is also what makes a later ADMITTED event of the same
+            # client this horizon train from the adopted weights. ----
             events: List[Tuple[float, int]] = []
-            for _ in range(cfg.k):
-                now, cid = heapq.heappop(heap)
-                c = self.clients[cid]
-                heapq.heappush(
-                    heap, (now + self._epoch_time(c) + c.comm_time, cid))
-                events.append((now, cid))
+            stal = [0] * cfg.k
+            while len(events) < cfg.k:
+                ev = self.sched.pop(r)
+                if ev is None:
+                    break
+                if not ev.admitted:
+                    # rejection after admission cannot happen under the
+                    # built-in policies (admission resets projected
+                    # staleness to 0); the wave decomposition below
+                    # relies on it, so keep the invariant explicit
+                    assert all(cid != ev.cid for _, cid in events), \
+                        "policy rejected a client it admitted this horizon"
+                    flats[ev.cid] = self._flat_params
+                    c = self.clients[ev.cid]
+                    c.model_state = self.global_state
+                    c.version = r
+                    continue
+                stal[len(events)] = ev.staleness
+                events.append((ev.time, ev.cid))
+            if not events:
+                break
             now = events[-1][0]
 
             # ---- wave decomposition ----
@@ -652,7 +745,6 @@ class FLEngine:
                 waves[w].append((slot, cid))
 
             g_flat, g_state = self._flat_params, self.global_state
-            stal = [0] * cfg.k
             sizes = [0] * cfg.k
             nbytes = self._upload_nbytes()
             prev_new_flat = prev_states = None
@@ -738,8 +830,9 @@ class FLEngine:
                 for row, (slot, cid) in enumerate(members):
                     c = self.clients[cid]
                     self.tx_bytes += nbytes
-                    # a member's wave>=1 events always see version == r
-                    stal[slot] = r - c.version
+                    # staleness was recorded at pop time from the
+                    # scheduler's projected versions (== r - c.version
+                    # here: the projection mirrors this refresh rule)
                     sizes[slot] = c.n_samples
                     size_parts.append(c.n_samples)
                     if slot == cfg.k - 1 and cfg.aggregation != "fedavg":
@@ -765,6 +858,12 @@ class FLEngine:
             # ---- fused server round (no host sync) ----
             m = self._server_round(stal, sizes)
             self._global_stale = True
+            # device-resident sched stats: scatter-add this round's
+            # staleness values + client ids (donated in-place writes;
+            # host transfer happens once, at the run-end flush)
+            ring.append_sched(jnp.asarray(stal, jnp.int32),
+                              jnp.asarray([cid for _, cid in events],
+                                          jnp.int32))
             if cfg.aggregation == "fedavg":
                 stacked = (state_parts[0] if len(state_parts) == 1
                            else tree_stack(
@@ -799,3 +898,6 @@ class FLEngine:
                 accuracy=float(acc), loss=float(loss),
                 nan_event=not np.isfinite(loss),
                 update_norm=float(unorm), **fields)
+        hist, part = ring.flush_sched()
+        self._dev_stale_hist += hist.astype(np.int64)
+        self._dev_participation += part.astype(np.int64)

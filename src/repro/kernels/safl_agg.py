@@ -176,16 +176,18 @@ def _avg_kernel(w_ref, u_ref, o_ref, *, server_lr: float, mode: str,
 
 def _sdga_kernel(tau_ref, u_ref, p_ref, m_ref, e_ref,
                  op_ref, om_ref, oe_ref, *, server_lr: float, alpha: float,
-                 momentum: float, ema_anchor: float, ema_decay: float):
+                 momentum: float, ema_anchor: float, ema_decay: float,
+                 discount: str):
     """One (K, BLOCK_D) tile of the full SDGA server round:
 
-        w   = (1 + tau)^(-alpha)
+        w   = (1 + tau)^(-alpha)     [discount="poly"; "none" reads the
+                                      weight input as final weights]
         g   = (w @ u) / sum(w)
         m'  = momentum * m + g
         p'  = p - lr * m' + ema_anchor * (e - p)
         e'  = ema_decay * e + (1 - ema_decay) * p'
     """
-    w = _weights(tau_ref[...], alpha, "poly")
+    w = _weights(tau_ref[...], alpha, discount)
     u = u_ref[...].astype(jnp.float32)
     wsum = jnp.maximum(jnp.sum(w), 1e-12)
     g = jnp.einsum("k,kd->d", w, u) / wsum
@@ -204,9 +206,13 @@ def sdga_aggregate(updates: jax.Array, staleness: jax.Array,
                    server_lr: float, alpha: float = 0.5,
                    momentum: float = 0.8, ema_anchor: float = 0.05,
                    ema_decay: float = 0.95, block_d: int = BLOCK_D,
-                   interpret: bool = True):
+                   interpret: bool = True, discount: str = "poly"):
     """Fused SDGA round.  updates (K, D), staleness (K,), params/mom/ema
-    (D,) -> (new_params, new_mom, new_ema), all (D,)."""
+    (D,) -> (new_params, new_mom, new_ema), all (D,).  ``discount="poly"``
+    (default) reads ``staleness`` as tau and discounts in-kernel;
+    ``"none"`` reads it as precomputed final weights (the adaptive
+    scheduling policies' externally-reweighted path)."""
+    assert discount in _DISCOUNTS
     K, D = updates.shape
     pad = (-D) % block_d
     if pad:
@@ -218,7 +224,7 @@ def sdga_aggregate(updates: jax.Array, staleness: jax.Array,
     vec_spec = pl.BlockSpec((block_d,), lambda i: (i,))
     kern = functools.partial(
         _sdga_kernel, server_lr=server_lr, alpha=alpha, momentum=momentum,
-        ema_anchor=ema_anchor, ema_decay=ema_decay)
+        ema_anchor=ema_anchor, ema_decay=ema_decay, discount=discount)
     outs = pl.pallas_call(
         kern,
         grid=(Dp // block_d,),
@@ -345,8 +351,8 @@ def safl_aggregate_q8(q: jax.Array, scales: jax.Array, weights: jax.Array,
 def _sdga_q8_kernel(tau_ref, q_ref, s_ref, p_ref, m_ref, e_ref,
                     op_ref, om_ref, oe_ref, *, server_lr: float,
                     alpha: float, momentum: float, ema_anchor: float,
-                    ema_decay: float, qblock: int):
-    w = _weights(tau_ref[...], alpha, "poly")
+                    ema_decay: float, qblock: int, discount: str):
+    w = _weights(tau_ref[...], alpha, discount)
     u = _dequant_tile(q_ref[...], s_ref[...], qblock)
     wsum = jnp.maximum(jnp.sum(w), 1e-12)
     g = jnp.einsum("k,kd->d", w, u) / wsum
@@ -365,10 +371,13 @@ def sdga_aggregate_q8(q: jax.Array, scales: jax.Array, staleness: jax.Array,
                       server_lr: float, alpha: float = 0.5,
                       momentum: float = 0.8, ema_anchor: float = 0.05,
                       ema_decay: float = 0.95, qblock: int = QBLOCK,
-                      block_d: int = BLOCK_D, interpret: bool = True):
+                      block_d: int = BLOCK_D, interpret: bool = True,
+                      discount: str = "poly"):
     """Quantized-channel SDGA round: q (K, Dq) int8, scales (K, Dq/qblock),
     staleness (K,), params/mom/ema (D,) -> (new_params, new_mom, new_ema),
-    all (D,), with blockwise dequantize fused into the single pass."""
+    all (D,), with blockwise dequantize fused into the single pass.
+    ``discount`` as in :func:`sdga_aggregate`."""
+    assert discount in _DISCOUNTS
     K, Dq = q.shape
     D = params.shape[0]
     assert D <= Dq, (D, Dq)
@@ -381,7 +390,8 @@ def sdga_aggregate_q8(q: jax.Array, scales: jax.Array, staleness: jax.Array,
     vec_spec = pl.BlockSpec((block_d,), lambda i: (i,))
     kern = functools.partial(
         _sdga_q8_kernel, server_lr=server_lr, alpha=alpha, momentum=momentum,
-        ema_anchor=ema_anchor, ema_decay=ema_decay, qblock=qblock)
+        ema_anchor=ema_anchor, ema_decay=ema_decay, qblock=qblock,
+        discount=discount)
     outs = pl.pallas_call(
         kern,
         grid=(Dp // block_d,),

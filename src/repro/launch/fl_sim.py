@@ -65,6 +65,33 @@ def main() -> None:
                     help="disable power-of-two wave-size bucketing "
                          "(compile one program per distinct wave size — "
                          "the bucketing parity oracle)")
+    ap.add_argument("--sched-timing", default="static",
+                    choices=["static", "lognormal", "markov"],
+                    help="device-time model (repro.sched.timing): static "
+                         "(deterministic, the paper's implicit model), "
+                         "lognormal (heavy-tailed per-epoch compute "
+                         "jitter), markov (drop-out/rejoin availability "
+                         "on top of the jitter)")
+    ap.add_argument("--sched-policy", default="full",
+                    choices=["full", "uniform", "seafl", "fedqs"],
+                    help="participation policy (repro.sched.policy): "
+                         "full, uniform C-of-N sampling (--sched-c), "
+                         "seafl staleness-capped selective training "
+                         "(--sched-stale-cap), fedqs adaptive "
+                         "staleness x sample-count reweighting")
+    ap.add_argument("--sched-c", type=int, default=0,
+                    help="uniform policy: clients admitted per round "
+                         "(0 = all -> identical to full)")
+    ap.add_argument("--sched-stale-cap", type=int, default=4,
+                    help="seafl policy: max admissible projected "
+                         "staleness")
+    ap.add_argument("--sched-jitter-sigma", type=float, default=0.25,
+                    help="lognormal/markov: per-epoch compute jitter "
+                         "sigma")
+    ap.add_argument("--sched-drop-p", type=float, default=0.1,
+                    help="markov: P(go offline) after each upload")
+    ap.add_argument("--sched-seed", type=int, default=0,
+                    help="PRNG seed for timing jitter + policy sampling")
     ap.add_argument("--json-out", default="")
     args = ap.parse_args()
 
@@ -109,11 +136,30 @@ def main() -> None:
                    eval_every=args.eval_every,
                    batch_clients=not args.sequential,
                    devices=args.devices, wave_impl=args.wave_impl,
-                   wave_buckets=not args.no_wave_buckets)
+                   wave_buckets=not args.no_wave_buckets,
+                   sched_timing=args.sched_timing,
+                   sched_policy=args.sched_policy, sched_c=args.sched_c,
+                   sched_stale_cap=args.sched_stale_cap,
+                   sched_jitter_sigma=args.sched_jitter_sigma,
+                   sched_drop_p=args.sched_drop_p,
+                   sched_seed=args.sched_seed)
     eng = FLEngine(cfg, fn, ds.kind, p0, s0, shards, te.x[:400], te.y[:400])
     res = eng.run(args.rounds, log_every=max(args.rounds // 10, 1))
     summary = res.metrics.summary()
+    # scheduling surface: per-client staleness/participation — the
+    # device-resident histogram (batched path, one host transfer at run
+    # end) plus the scheduler's host accounting
+    ss = dict(res.sched_stats)
+    ss["staleness_bins"] = [int(v) for v in ss["staleness_bins"]]
+    ss["staleness_hist"] = {int(kk): v
+                            for kk, v in sorted(res.staleness_hist.items())}
+    summary["sched"] = ss
     print(json.dumps(summary, indent=1, default=str))
+    print(f"# sched[{ss['policy']}/{ss['timing']}] participation "
+          f"per client: {ss['participation']}")
+    print(f"# rejected uploads: {ss['rejected_uploads']}  "
+          f"no-shows: {ss['no_shows']}  staleness hist: "
+          f"{ss['staleness_hist']}")
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(summary, f, default=str)

@@ -1,0 +1,157 @@
+"""Pluggable client scheduling: simulated device time + participation.
+
+The subsystem owns everything the FL engines used to inline around their
+event heap — *when* each simulated client surfaces an upload, and *whether*
+the server accepts it — in three pluggable layers:
+
+  * :mod:`repro.sched.timing` — device-time models (``FLConfig.sched_timing``):
+
+      ============  ====================================================
+      ``static``    the original deterministic per-client duration — the
+                    bit-exact parity oracle for the pre-sched engine.
+      ``lognormal`` heavy-tailed per-epoch compute jitter (jax-PRNG
+                    seeded): the straggler-latency heterogeneity behind
+                    the paper's Fig. 3 FedSGD oscillations, now a
+                    sweepable axis instead of a fixed speed draw.
+      ``markov``    two-state availability (drop-out / rejoin with
+                    exponential holding times) on top of the jitter —
+                    clients emit no-show (WAKE) events, the
+                    churn regime semi-async aggregation exists for.
+      ============  ====================================================
+
+  * :mod:`repro.sched.policy` — participation policies
+    (``FLConfig.sched_policy``), each mapped to its source:
+
+      ============  ====================================================
+      ``full``      every upload admitted — the paper's implicit setting
+                    and the parity oracle (§2.2: the server buffers the
+                    first K uploads, whoever they come from).
+      ``uniform``   C-of-N sampling per round (``sched_c``): classic
+                    FedAvg-style partial participation grafted onto the
+                    semi-async buffer; with C = N it IS ``full``.
+      ``seafl``     SEAFL's selective training (arXiv:2503.05755): skip
+                    clients whose projected staleness exceeds
+                    ``sched_stale_cap`` — they discard stale work and
+                    resync, bounding buffered staleness and reproducing
+                    the paper's stale-gradient ablation as a policy.
+      ``fedqs``     FedQS (arXiv:2510.07664): admit everyone, but score
+                    uploads by sample count / (1 + staleness)^beta and
+                    fold the score into the aggregation coefficients the
+                    engine hands to FlatServer — adaptive reconciliation
+                    of the FedSGD-vs-FedAvg weighting gap the source
+                    paper measures.
+      ============  ====================================================
+
+  * :mod:`repro.sched.events` — the persistent ``(time, cid, kind,
+    compute_s)`` heap with speed-safe resume across ``run()`` calls.
+
+:class:`Scheduler` is the facade the engines consume: ``pop(round)``
+surfaces the next *upload* decision (admitted or policy-rejected, with
+its staleness), handling WAKE events and next-event scheduling
+internally, while mirroring the engine's client-version refresh rule in
+a projected-version map so the sequential and horizon-batched paths see
+the identical schedule (the batched path pops a whole aggregation
+horizon before refreshing any client state).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.sched.events import UPLOAD, WAKE, EventQueue
+from repro.sched.policy import POLICIES, Policy, make_policy
+from repro.sched.timing import TIMING_MODELS, make_timing
+
+__all__ = ["Scheduler", "SchedEvent", "build_scheduler", "EventQueue",
+           "POLICIES", "TIMING_MODELS", "UPLOAD", "WAKE"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedEvent:
+    """One upload decision surfaced to the engine."""
+    time: float
+    cid: int
+    staleness: int  # projected staleness at pop time (== engine's value)
+    admitted: bool  # False: policy-rejected — discard + resync the client
+
+
+class Scheduler:
+    """Facade over (timing model, participation policy, event queue).
+
+    The engine calls :meth:`resume` at the start of each ``run()`` (heap
+    init / speed-mutation rescale), then :meth:`pop` per upload slot.
+    ``pop`` drains WAKE events and schedules every client's next event
+    internally, so the heap evolution is identical whether the caller is
+    the sequential per-upload loop or the horizon-batched one.
+
+    The projected-version map mirrors the engine's refresh rule — a
+    client's version becomes the current round at every upload boundary,
+    admitted (adopt-or-continue) or rejected (discard-and-resync) — so
+    admission decisions never need the engine's not-yet-refreshed
+    ``ClientState.version`` (the batched path refreshes a whole horizon
+    after popping it).
+    """
+
+    def __init__(self, cfg, clients, base_compute):
+        self.cfg = cfg
+        self.clients = clients
+        self.timing = make_timing(cfg, base_compute)
+        self.policy = make_policy(cfg, len(clients))
+        self.queue = EventQueue()
+        self._version: Dict[int, int] = {}
+        # host-side accounting (the device-resident counterparts live in
+        # the batched engine's DeviceMetricsRing)
+        self.participation = np.zeros(len(clients), np.int64)
+        self.rejected = np.zeros(len(clients), np.int64)
+        self.no_shows = 0
+
+    def resume(self) -> None:
+        self.queue.resume(self.clients, self.timing)
+
+    def pop(self, rnd: int) -> Optional[SchedEvent]:
+        """Next upload decision at aggregation round ``rnd`` (WAKE events
+        are consumed internally).  Returns None only if the heap is empty
+        (cannot happen in the engines: every pop schedules a successor)."""
+        while len(self.queue):
+            t, cid, kind, _comp = self.queue.pop()
+            c = self.clients[cid]
+            if kind == WAKE:
+                nt, nkind, ncomp = self.timing.after_wake(c, t)
+                self.queue.push(nt, cid, nkind, ncomp)
+                continue
+            # schedule the client's next event first: the heap evolves on
+            # schedule data only, exactly like the pre-sched engine paths
+            nt, nkind, ncomp = self.timing.after_upload(c, t)
+            if nkind == WAKE:
+                self.no_shows += 1
+            self.queue.push(nt, cid, nkind, ncomp)
+            stal = rnd - self._version.get(cid, 0)
+            self._version[cid] = rnd
+            if self.policy.admit(cid, stal, c.n_samples, rnd):
+                self.participation[cid] += 1
+                return SchedEvent(t, cid, stal, True)
+            self.rejected[cid] += 1
+            return SchedEvent(t, cid, stal, False)
+        return None
+
+    def stats(self) -> Dict:
+        """Host-side scheduling summary for the run report."""
+        return {
+            "policy": self.policy.name,
+            "timing": self.timing.name,
+            "participation": self.participation.tolist(),
+            "rejected_uploads": int(self.rejected.sum()),
+            "no_shows": int(self.no_shows),
+        }
+
+
+def build_scheduler(cfg, clients, base_compute) -> Scheduler:
+    """Engine entry point: a Scheduler from the ``FLConfig.sched_*`` knobs.
+
+    ``base_compute(client) -> seconds`` is the deterministic compute time
+    of one upload period (``local_epochs`` epochs at the client's speed);
+    the timing model layers jitter / availability on top of it.
+    """
+    return Scheduler(cfg, clients, base_compute)

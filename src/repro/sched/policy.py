@@ -1,0 +1,147 @@
+"""Participation policies: which client uploads the server accepts, and
+with what aggregation weight.
+
+A policy sees every UPLOAD event the scheduler pops and decides
+*admission*; an adaptive policy can additionally *reweight* the
+aggregation coefficients the engine hands to
+:class:`repro.core.aggregation.FlatServer`.
+
+Rejection semantics (shared by every selective policy, both engine
+paths): a rejected client's local progress is **discarded** and the
+client syncs to the current global model before retraining — the
+server-side view of SEAFL's "selective training" (the server tells
+too-stale/unselected clients to skip, so their compute never runs in the
+batched engine and their bytes never hit the channel).  Rejected uploads
+consume no buffer slot, no tx bytes and no staleness-histogram entry;
+the scheduler counts them per client.
+
+Admission is decided against the scheduler's *projected* client versions
+(updated at pop time), which mirror the engine's refresh rule exactly —
+that is what keeps the sequential and horizon-batched schedules
+identical: the batched path pops a whole aggregation horizon before any
+client state is refreshed, so it must not read the (not yet updated)
+``ClientState.version``.
+
+Built-in policies (see :mod:`repro.sched` for the paper mapping):
+``full`` (everyone, the parity oracle), ``uniform`` (C-of-N sampling per
+round), ``seafl`` (staleness-capped selective training), ``fedqs``
+(adaptive staleness x sample-count reweighting).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Set
+
+import numpy as np
+
+
+class Policy:
+    """Full participation — every upload is admitted (the parity oracle
+    and the paper's implicit policy)."""
+
+    name = "full"
+    #: True for policies that rescale the aggregation coefficients; the
+    #: engine then builds its FlatServer with ``external_discount=True``
+    #: and composes the per-mode base weights with :meth:`score` on host.
+    reweights = False
+
+    def __init__(self, cfg, n_clients: int):
+        self.cfg = cfg
+        self.n_clients = n_clients
+
+    def admit(self, cid: int, staleness: int, n_samples: int,
+              rnd: int) -> bool:
+        return True
+
+    def score(self, staleness: Sequence[int],
+              sizes: Sequence[int]) -> Optional[np.ndarray]:
+        """(K,) multiplier on the mode's base aggregation weights, or
+        None for policies that keep the paper weighting."""
+        return None
+
+
+class UniformSampling(Policy):
+    """Uniform C-of-N sampling per aggregation round.
+
+    Each round ``r`` draws a fresh admitted set of ``sched_c`` clients
+    (without replacement) from a dedicated numpy generator seeded by
+    ``(sched_seed, seed, r)`` — deterministic per round regardless of
+    event interleaving, so both engine paths sample identically.  With
+    C = N this is exactly full participation (the CI parity leg)."""
+
+    name = "uniform"
+
+    def __init__(self, cfg, n_clients: int):
+        super().__init__(cfg, n_clients)
+        self.c = cfg.sched_c or n_clients
+        assert 1 <= self.c <= n_clients, (self.c, n_clients)
+        self._sets: Dict[int, Set[int]] = {}
+
+    def _round_set(self, rnd: int) -> Set[int]:
+        s = self._sets.get(rnd)
+        if s is None:
+            rng = np.random.default_rng(
+                [self.cfg.sched_seed, self.cfg.seed, rnd])
+            s = set(rng.choice(self.n_clients, self.c,
+                               replace=False).tolist())
+            # rounds are visited in order; drop stale sets
+            self._sets = {rnd: s}
+        return s
+
+    def admit(self, cid, staleness, n_samples, rnd) -> bool:
+        return self.c >= self.n_clients or cid in self._round_set(rnd)
+
+
+class SEAFLSelective(Policy):
+    """SEAFL-style selective training (arXiv:2503.05755): skip clients
+    whose projected staleness exceeds ``sched_stale_cap``.
+
+    A rejected client discards its stale progress and syncs to the
+    current global model, so its *next* upload has staleness 0 — the cap
+    bounds the staleness that ever reaches the aggregation buffer
+    (``max(staleness_hist) <= cap``) without deadlocking slow clients."""
+
+    name = "seafl"
+
+    def __init__(self, cfg, n_clients: int):
+        super().__init__(cfg, n_clients)
+        self.cap = int(cfg.sched_stale_cap)
+        assert self.cap >= 0, self.cap
+
+    def admit(self, cid, staleness, n_samples, rnd) -> bool:
+        return staleness <= self.cap
+
+
+class FedQSAdaptive(Policy):
+    """FedQS-style adaptive weighting (arXiv:2510.07664): admit everyone
+    but score each buffered upload by sample count over a polynomial
+    staleness penalty,
+
+        score_i  ∝  n_i / (1 + tau_i)^beta,   normalized to mean 1,
+
+    and multiply it into the mode's base aggregation coefficients (data
+    sizes for fedavg, unit weights for fedsgd, the (1+tau)^-alpha
+    discount for the staleness modes, the per-update mix rates for
+    fedasync) — reconciling sample-quantity and staleness weighting, the
+    gradient-vs-weight tension FedQS targets in SAFL."""
+
+    name = "fedqs"
+    reweights = True
+
+    def __init__(self, cfg, n_clients: int):
+        super().__init__(cfg, n_clients)
+        self.beta = float(cfg.sched_qs_beta)
+
+    def score(self, staleness, sizes) -> np.ndarray:
+        n = np.asarray(sizes, np.float32)
+        tau = np.asarray(staleness, np.float32)
+        s = n / np.power(1.0 + tau, np.float32(self.beta))
+        return s / max(float(np.mean(s)), 1e-12)
+
+
+POLICIES = {p.name: p for p in
+            (Policy, UniformSampling, SEAFLSelective, FedQSAdaptive)}
+
+
+def make_policy(cfg, n_clients: int) -> Policy:
+    assert cfg.sched_policy in POLICIES, cfg.sched_policy
+    return POLICIES[cfg.sched_policy](cfg, n_clients)

@@ -1,0 +1,197 @@
+"""Device-time models: how long a client's upload period takes.
+
+Three models, all producing ``(absolute_time, event_kind, compute_s)``
+entries for the :class:`repro.sched.events.EventQueue`:
+
+  * :class:`StaticTiming` — the original engine behavior (the parity
+    oracle): one deterministic duration per client,
+    ``n_samples * local_epochs / (rate * speed) + comm_time``, with the
+    original small ``ClientState.rng`` uniform jitter on the very first
+    event so clients don't all fire at t=0.
+  * :class:`LognormalTiming` — heavy-tailed per-epoch stochastic compute:
+    each upload period's compute time is the static duration times a
+    lognormal jitter ``exp(sigma * z)`` (median 1, heavy right tail — the
+    straggler regime the paper's Fig. 3 oscillations come from).
+  * :class:`MarkovTiming` — two-state availability on top of the
+    lognormal jitter: after each upload a client drops offline with
+    probability ``drop_p`` for an Exponential(``off_mean_s``) holding
+    time, emitting a WAKE (no-show) event instead of an upload; on wake
+    it resumes training from its next adopted model.
+
+Stochastic draws come from a **jax PRNG stream** seeded by
+``FLConfig.sched_seed`` and keyed counter-style per ``(cid, event
+index)`` (``jax.random.fold_in`` twice), so the schedule is
+
+  * reproducible for a given seed,
+  * identical between the sequential and horizon-batched engine paths
+    (both pop/push events per client in the same per-client order, and
+    the value of draw #n for client c never depends on global
+    interleaving), and
+  * cheap: draws are generated in blocks of 64 per client by ONE jitted
+    program and cached host-side, so the per-event cost is a numpy index.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Tuple
+
+import numpy as np
+
+from repro.sched.events import UPLOAD, WAKE
+
+Entry = Tuple[float, int, float]  # (absolute time, kind, compute_s)
+
+_BLOCK = 64  # draws per jitted dispatch (per client)
+
+
+@functools.lru_cache(maxsize=None)
+def _block_fn():
+    """Jitted (seed, cid, block) -> (BLOCK, 3) draws: [normal, u1, u2]."""
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def draw(seed, cid, block):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed), cid), block)
+        kn, ku = jax.random.split(key)
+        z = jax.random.normal(kn, (_BLOCK, 1), jnp.float32)
+        u = jax.random.uniform(ku, (_BLOCK, 2), jnp.float32)
+        return jnp.concatenate([z, u], axis=1)
+
+    return draw
+
+
+class PRNGStream:
+    """Counter-based per-client draw stream over a jax PRNG.
+
+    ``draw(cid)`` returns the client's next ``[z ~ N(0,1), u1, u2 ~
+    U[0,1)]`` triple.  Values depend only on ``(seed, cid, counter)`` —
+    never on the interleaving of clients — which is what makes the
+    sequential and batched engine schedules bit-identical.  Counters
+    persist across ``run()`` calls (one stochastic schedule per engine).
+    """
+
+    def __init__(self, seed: int):
+        self._seed = int(seed)
+        self._counters: Dict[int, int] = {}
+        # one cached block per client: counters are monotone, so older
+        # blocks are never re-read
+        self._blocks: Dict[int, Tuple[int, np.ndarray]] = {}
+
+    def draw(self, cid: int) -> np.ndarray:
+        n = self._counters.get(cid, 0)
+        self._counters[cid] = n + 1
+        b, i = divmod(n, _BLOCK)
+        cached = self._blocks.get(cid)
+        if cached is None or cached[0] != b:
+            blk = np.asarray(_block_fn()(self._seed, cid, b))
+            self._blocks[cid] = (b, blk)
+        else:
+            blk = cached[1]
+        return blk[i]
+
+
+class StaticTiming:
+    """The original deterministic model (the engine's parity oracle)."""
+
+    name = "static"
+
+    def __init__(self, base_compute):
+        self._base = base_compute  # callable(ClientState) -> seconds
+
+    def _compute(self, c) -> float:
+        return self._base(c)
+
+    def initial(self, c) -> Entry:
+        # identical to the pre-sched `_heap_resume`: first event at
+        # compute + comm + a small ClientState.rng jitter (consumed from
+        # the same generator, so the schedule trace is bit-exact)
+        comp = self._compute(c)
+        return (comp + c.comm_time + float(c.rng.uniform(0, 0.1)),
+                UPLOAD, comp)
+
+    def after_upload(self, c, now: float) -> Entry:
+        comp = self._compute(c)
+        return (now + comp + c.comm_time, UPLOAD, comp)
+
+    # unreachable for static/lognormal (they never emit WAKE) but keeps
+    # the model interface total
+    def after_wake(self, c, now: float) -> Entry:
+        return self.after_upload(c, now)
+
+    def sync_duration(self, c) -> float:
+        """One SFL round's duration contribution for an active client."""
+        return self._compute(c) + c.comm_time
+
+
+class LognormalTiming(StaticTiming):
+    """Heavy-tailed stochastic compute: static * exp(sigma * z)."""
+
+    name = "lognormal"
+
+    def __init__(self, base_compute, sigma: float, stream: PRNGStream):
+        super().__init__(base_compute)
+        self.sigma = float(sigma)
+        self._stream = stream
+
+    def _compute(self, c) -> float:
+        z = float(self._stream.draw(c.cid)[0])
+        return self._base(c) * math.exp(self.sigma * z)
+
+
+class MarkovTiming(LognormalTiming):
+    """Two-state (online/offline) availability + lognormal jitter.
+
+    Each post-upload transition draws one ``(z, u1, u2)`` triple: with
+    ``u1 < drop_p`` the client goes offline for ``-off_mean_s *
+    log(1 - u2)`` seconds (a WAKE event — the scheduler counts it as a
+    no-show); otherwise the next upload lands after the jittered compute
+    + comm interval.  Wake-ups and the initial event always schedule an
+    upload (clients start online)."""
+
+    name = "markov"
+
+    def __init__(self, base_compute, sigma: float, drop_p: float,
+                 off_mean_s: float, stream: PRNGStream):
+        super().__init__(base_compute, sigma, stream)
+        self.drop_p = float(drop_p)
+        self.off_mean_s = float(off_mean_s)
+
+    def after_upload(self, c, now: float) -> Entry:
+        z, u1, u2 = (float(v) for v in self._stream.draw(c.cid))
+        if u1 < self.drop_p:
+            off = -self.off_mean_s * math.log1p(-min(u2, 1.0 - 1e-7))
+            return (now + off, WAKE, 0.0)
+        comp = self._base(c) * math.exp(self.sigma * z)
+        return (now + comp + c.comm_time, UPLOAD, comp)
+
+    def after_wake(self, c, now: float) -> Entry:
+        comp = self._compute(c)
+        return (now + comp + c.comm_time, UPLOAD, comp)
+
+    def sync_duration(self, c) -> float:
+        # SFL waits for every activated client (the straggler effect), so
+        # availability is not modeled there — an offline activated client
+        # would stall the round forever.  Only the compute jitter applies.
+        return LognormalTiming._compute(self, c) + c.comm_time
+
+
+TIMING_MODELS = ("static", "lognormal", "markov")
+
+
+def make_timing(cfg, base_compute):
+    """Build the ``FLConfig.sched_timing`` model.  The stochastic models
+    share one PRNG stream seeded by ``sched_seed`` (folded with the
+    experiment seed so two experiments differing only in ``seed`` also
+    get distinct schedules)."""
+    name = cfg.sched_timing
+    if name == "static":
+        return StaticTiming(base_compute)
+    stream = PRNGStream(cfg.sched_seed * 1_000_003 + cfg.seed)
+    if name == "lognormal":
+        return LognormalTiming(base_compute, cfg.sched_jitter_sigma, stream)
+    assert name == "markov", name
+    return MarkovTiming(base_compute, cfg.sched_jitter_sigma,
+                        cfg.sched_drop_p, cfg.sched_off_mean_s, stream)
