@@ -16,9 +16,18 @@ buffered updates and D in {1M, 4M} parameters:
     into the reduction.  The K x D read (which dominates memory-bound
     large-D rounds) is 4x fewer HBM bytes.
 
-Writes machine-readable ``BENCH_agg.json`` (``schema_version`` 2:
-rounds/sec and µs/aggregation for all three paths per grid point) so the
-perf trajectory is tracked across PRs, and prints all numbers per point.
+  * ``stream``: the accumulate-on-arrival channel (PR 6) — each of the K
+    uploads is folded into the O(D) running sum the moment it "arrives"
+    (:class:`repro.core.flatbuf.AccumBuffer` + ``FlatServer.fold_program``),
+    then one O(D) finalize closes the horizon.  Server channel memory is
+    the double-buffered 2 x D accumulator — flat in K — vs the buffered
+    paths' K x D resident rows.
+
+Writes machine-readable ``BENCH_agg.json`` (``schema_version`` 3: 2 +
+the streaming column — folds/sec, µs/aggregation and measured peak
+channel bytes per grid point, with the O(D)-flat-in-K claim asserted at
+report time) so the perf trajectory is tracked across PRs, and prints
+all numbers per point.
 
     PYTHONPATH=src python -m benchmarks.agg_bench
     # tiny CI smoke grid:
@@ -42,7 +51,7 @@ KS = (8, 16, 64)
 DS = (1 << 20, 1 << 22)  # 1M, 4M
 SERVER_LR = 0.05
 OUT_PATH = "BENCH_agg.json"
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 
 def _leaf_shapes(d: int, n_leaves: int = 48):
@@ -140,6 +149,18 @@ def bench_point(K: int, d: int) -> dict:
         tree = codec.unravel(state["p"])
         _block(tree)
 
+    # the buffered channel's per-upload ingest (what the engine pays at
+    # enqueue time and this round-timing excludes): buf[slot] <- vec
+    chan = {"buf": flatbuf.alloc_buffer(K, codec.d)}
+    ingest_rows = [buf[i] for i in range(K)]
+    for r in ingest_rows:
+        r.block_until_ready()
+
+    def buffered_ingest():
+        for i, r in enumerate(ingest_rows):
+            chan["buf"] = flatbuf.write_slot(chan["buf"], r, jnp.int32(i))
+        chan["buf"].block_until_ready()
+
     # --- q8 path: same fused program over the int8 buffer + scales ---
     # uploads arrive quantized on the wire: quantization is client-side
     # (PytreeCodec.ravel_delta_q8) and is not part of the server round
@@ -157,21 +178,63 @@ def bench_point(K: int, d: int) -> dict:
         tree = codec.unravel(state_q8["p"])
         _block(tree)
 
-    # interleave the two flat paths so host drift hits both equally
-    flat_us, q8_us = _time_interleaved([flat_round, q8_round], iters)
+    # --- streaming path: K accumulate-on-arrival folds + O(D) finalize ---
+    # weights are host-composed at ingest (discount-at-ingest), so the
+    # server runs with external_discount; fedsgd's final weight is 1.0
+    srv_s = agg.FlatServer("fedsgd", codec.d, server_lr=SERVER_LR,
+                           external_discount=True)
+    acc = flatbuf.AccumBuffer(codec.d, srv_s.fold_program)
+    rows = [buf[i] for i in range(K)]  # per-upload (D,) vectors
+    for r in rows:
+        r.block_until_ready()
+    state_s = {"p": codec.ravel(params),
+               "opt": srv_s.init_opt(codec.ravel(params))}
+
+    def stream_round():
+        for r in rows:
+            acc.fold((r,), w=np.float32(1.0))
+        bank, wvec, stats = acc.seal()
+        state_s["p"], state_s["opt"], _, zeroed = srv_s.finalize(
+            state_s["p"], bank, wvec, state_s["opt"],
+            pprod=stats["pprod"])
+        acc.release(zeroed)
+        tree = codec.unravel(state_s["p"])
+        _block(tree)
+
+    # interleave the flat paths so host drift hits them equally
+    flat_us, q8_us, stream_us, ingest_us = _time_interleaved(
+        [flat_round, q8_round, stream_round, buffered_ingest], iters)
     # -1 = compile count unavailable on this jax version, not a recompile
     assert srv.compile_count in (1, -1), \
         "flat server recompiled during bench"
     assert srv_q8.compile_count in (1, -1), \
         "q8 server recompiled during bench"
+    assert srv_s.fold_compile_count in (1, -1), \
+        "streaming fold recompiled during bench"
 
     return {"K": K, "D": d, "n_leaves": len(shapes), "iters": iters,
             "seed_us_per_agg": round(seed_us, 1),
             "flat_us_per_agg": round(flat_us, 1),
             "q8_us_per_agg": round(q8_us, 1),
+            "stream_us_per_agg": round(stream_us, 1),
             "seed_rounds_per_sec": round(1e6 / seed_us, 2),
             "flat_rounds_per_sec": round(1e6 / flat_us, 2),
             "q8_rounds_per_sec": round(1e6 / q8_us, 2),
+            "stream_rounds_per_sec": round(1e6 / stream_us, 2),
+            "stream_folds_per_sec": round(K * 1e6 / stream_us, 1),
+            "buffered_ingest_us_per_row": round(ingest_us / K, 1),
+            # per-upload cost ratio: a streaming fold REPLACES the
+            # buffered path's write_slot ingest + its per-row share of
+            # the reduction, so that sum is the apples-to-apples per-row
+            # baseline (fold does vec read + accum read/write; buffered
+            # splits the same traffic between enqueue and reduce)
+            "stream_fold_vs_flat_row": round(
+                (stream_us / K) / (ingest_us / K + flat_us / K), 2),
+            # measured peak server-channel memory: double-buffered O(D)
+            # accumulator vs K resident rows (f32 / int8+scales)
+            "stream_channel_bytes": acc.channel_bytes,
+            "buffered_channel_bytes": K * codec.d * 4,
+            "q8_channel_bytes": int(qbuf.nbytes + sbuf.nbytes),
             "speedup": round(seed_us / flat_us, 2),
             "speedup_q8_vs_flat": round(flat_us / q8_us, 2),
             "speedup_q8_vs_seed": round(seed_us / q8_us, 2)}
@@ -180,16 +243,34 @@ def bench_point(K: int, d: int) -> dict:
 def main(ks=KS, ds=DS, out_path: str = OUT_PATH) -> dict:
     entries = []
     print("# Server aggregation: seed tree_map/stack vs flat f32 buffer vs "
-          "quantized int8 buffer (same host)")
-    print("K,D,seed_us,flat_us,q8_us,flat_speedup,q8_vs_flat")
+          "quantized int8 buffer vs streaming accumulator (same host)")
+    print("K,D,seed_us,flat_us,q8_us,stream_us,flat_speedup,q8_vs_flat,"
+          "stream_chan_bytes")
     for d in ds:
         for K in ks:
             e = bench_point(K, d)
             entries.append(e)
             print(f"{e['K']},{e['D']},{e['seed_us_per_agg']},"
                   f"{e['flat_us_per_agg']},{e['q8_us_per_agg']},"
-                  f"{e['speedup']}x,{e['speedup_q8_vs_flat']}x",
+                  f"{e['stream_us_per_agg']},"
+                  f"{e['speedup']}x,{e['speedup_q8_vs_flat']}x,"
+                  f"{e['stream_channel_bytes']}",
                   flush=True)
+    # the tentpole memory claim, asserted on the measured numbers: the
+    # streaming channel's footprint depends on D only — flat in K — while
+    # the buffered rows scale with K
+    byD = {}
+    for e in entries:
+        byD.setdefault(e["D"], []).append(e)
+    for D, es in byD.items():
+        sizes = {e["stream_channel_bytes"] for e in es}
+        assert len(sizes) == 1, \
+            f"streaming channel bytes vary with K at D={D}: {sizes}"
+        for e in es:
+            assert e["stream_channel_bytes"] <= 2 * e["D"] * 4, e
+            if e["K"] > 2:  # buffered rows already dominate 2 banks
+                assert (e["stream_channel_bytes"]
+                        < e["buffered_channel_bytes"]), e
     report = {
         "benchmark": "server_aggregation",
         "schema_version": SCHEMA_VERSION,

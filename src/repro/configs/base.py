@@ -200,10 +200,55 @@ class FLConfig:
     wave lane execution (vmap / lax.map / auto), and ``wave_buckets``
     power-of-two-buckets wave sizes with masked rows so high-churn
     schedules compile O(log k) wave programs.
+
+    Streaming server channel (``server_channel``, tentpole PR 6): the
+    semi-async engine defaults to accumulate-on-arrival aggregation —
+    each upload is folded into a double-buffered O(D) accumulator bank
+    (:class:`repro.core.flatbuf.AccumBuffer`) the moment it lands, with
+    its FINAL aggregation weight composed at ingest (staleness discount /
+    data size / policy score / fedasync mix rate), so peak channel memory
+    is independent of how many uploads a horizon admits.  ``"buffered"``
+    keeps the resident (K, D) row buffer — the bit-exact parity oracle
+    (f32; q8 within the established tolerance) — and ``"auto"`` picks
+    streaming for semi-async, buffered for sync (the batched SFL round
+    emits whole (K, D) blocks).  The streaming fold honours the same
+    ``REPRO_AGG_BACKEND`` override as the buffered step: the Pallas
+    ``safl_fold``/``safl_fold_q8`` kernels on TPU (or
+    ``pallas_interpret``), the jnp fold oracle on CPU — backend choice
+    never changes which channel runs.
+
+    Aggregation horizons (``horizon``): ``"k"`` closes a horizon after
+    exactly ``k`` admitted uploads (the paper's buffered-K rule);
+    ``"queue"`` after ``horizon_queue`` uploads (0 -> ``k``; with the
+    buffered channel this doubles as the queue-length parity oracle);
+    ``"timeout"`` at the first upload once ``horizon_timeout_s``
+    simulated seconds have passed since the last aggregation (SEAFL-style
+    adaptive horizons, arXiv:2503.05755 — admits an unbounded number of
+    uploads, so it requires the streaming channel); ``"hybrid"``
+    whichever of queue/timeout fires first.
+
+    Rate control (``sched_policy="ratelimit"``): a FedBuff-style server
+    that asks fast clients to IDLE once ``sched_rate_limit`` uploads have
+    been admitted in the current round — idle clients skip the upload
+    (no buffer slot, no tx bytes) and retrain from the current global
+    model; the run summary counts ``idle_requests`` next to the
+    rejected/no-show counters.
     """
 
     n_clients: int = 50
     k: int = 10  # aggregation buffer size / activation count
+    # aggregation horizon trigger (semi-async): "k" (the paper's
+    # buffered-K rule), "queue" (horizon_queue admitted uploads, 0 -> k),
+    # "timeout" (first upload after horizon_timeout_s simulated seconds
+    # since the last aggregation; unbounded count -> streaming channel
+    # required), "hybrid" (queue OR timeout, whichever first)
+    horizon: str = "k"
+    horizon_queue: int = 0  # queue/hybrid: uploads per horizon (0 -> k)
+    horizon_timeout_s: float = 0.0  # timeout/hybrid: horizon wall-clock
+    # server channel: "auto" (streaming for semi_async, buffered for
+    # sync), "streaming" (O(D) accumulate-on-arrival AccumBuffer),
+    # "buffered" (resident (K, D) rows — the bit-exact parity oracle)
+    server_channel: str = "auto"
     mode: str = "semi_async"  # "sync" | "semi_async"
     aggregation: str = "fedsgd"  # fedsgd | fedavg | sdga | fedasync | fedbuff | fedopt
     local_epochs: int = 1
@@ -242,6 +287,10 @@ class FLConfig:
     sched_c: int = 0  # uniform: clients admitted per round (0 -> n_clients)
     sched_stale_cap: int = 4  # seafl: max admissible projected staleness
     sched_qs_beta: float = 1.0  # fedqs: staleness exponent in the score
+    # FedBuff-style rate control (sched_policy="ratelimit"): admit the
+    # first sched_rate_limit uploads of each aggregation round, ask later
+    # arrivals to idle (counted separately from rejections; 0 -> k)
+    sched_rate_limit: int = 0
     sched_seed: int = 0  # PRNG seed for timing jitter + policy sampling
     # beyond-paper: int8 quantized flat channel (repro.core.flatbuf /
     # repro.kernels.safl_agg q8 kernels; repro.core.compression for the
@@ -306,8 +355,41 @@ class FLConfig:
         # scheduling subsystem knobs (repro.sched)
         assert self.sched_timing in ("static", "lognormal", "markov"), \
             self.sched_timing
-        assert self.sched_policy in ("full", "uniform", "seafl", "fedqs"), \
+        assert self.sched_policy in (
+            "full", "uniform", "seafl", "fedqs", "ratelimit"), \
             self.sched_policy
+        assert self.sched_rate_limit >= 0, "sched_rate_limit must be >= 0"
+        if self.sched_policy == "ratelimit" and self.horizon in ("k",
+                                                                 "queue"):
+            # a count-triggered horizon must stay fillable: with fewer
+            # admissions than the trigger needs, every later upload idles
+            # and the round never closes (timeout/hybrid horizons close
+            # on the clock instead, so any limit is safe there)
+            target = (self.k if self.horizon == "k"
+                      else (self.horizon_queue or self.k))
+            limit = self.sched_rate_limit or self.k
+            assert limit >= target, \
+                (f"sched_rate_limit={limit} cannot fill a "
+                 f"{self.horizon} horizon of {target} uploads")
+        # aggregation horizon + server channel (tentpole PR 6)
+        assert self.horizon in ("k", "queue", "timeout", "hybrid"), \
+            self.horizon
+        assert self.horizon_queue >= 0, "horizon_queue must be >= 0 (0 -> k)"
+        if self.horizon in ("timeout", "hybrid"):
+            assert self.horizon_timeout_s > 0.0, \
+                f"horizon={self.horizon} needs horizon_timeout_s > 0"
+            assert self.mode == "semi_async", \
+                "timeout/hybrid horizons are semi-async constructs"
+        assert self.server_channel in ("auto", "streaming", "buffered"), \
+            self.server_channel
+        if self.server_channel == "buffered":
+            # the resident-rows oracle needs a fixed row count per horizon
+            assert self.horizon in ("k", "queue"), \
+                "buffered channel needs a fixed horizon (k or queue)"
+        if self.server_channel == "streaming":
+            assert self.mode == "semi_async", \
+                "streaming accumulation is a semi-async construct (the " \
+                "sync round produces its (K, D) rows as one program)"
         assert self.sched_jitter_sigma >= 0.0
         assert 0.0 <= self.sched_drop_p < 1.0, \
             "sched_drop_p must be in [0, 1) (1 would end every schedule)"
@@ -326,3 +408,9 @@ class FLConfig:
         if self.devices > 1:
             assert self.k % self.devices == 0, \
                 f"k={self.k} must be a multiple of devices={self.devices}"
+            if self.horizon == "queue":
+                q = self.horizon_queue or self.k
+                assert q % self.devices == 0, \
+                    (f"queue horizon of {q} uploads must be a multiple of "
+                     f"devices={self.devices} (the channel rows shard "
+                     "evenly over the pod axis)")

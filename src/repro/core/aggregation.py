@@ -257,6 +257,24 @@ class FlatServer:
     pod links (:func:`repro.sharding.flat.podwise_sums`), followed by the
     same fused server step on the replicated (D,) state.  Still one jitted
     program per experiment; K must divide the mesh size.
+
+    Streaming channel: alongside the buffered ``step`` the server compiles
+    a donated **fold** program (:attr:`fold_program` — one arriving upload
+    folded into a running (n_rows, D) accumulator bank row,
+    :class:`repro.core.flatbuf.AccumBuffer`) and a **finalize** program
+    (:meth:`finalize` — server step from the bank's partial sums + the
+    natural-length ingest-weight vector, returning the bank zeroed for
+    reuse).  Folding requires every upload's weight to be FINAL at ingest
+    (discount-at-ingest), so the engine always builds the streaming server
+    with ``external_discount=True``.  ``fedasync_rates=True`` switches
+    fedasync — in BOTH channels — from the reduce-time coefficient fold
+    (:func:`fedasync_coefficients`, whose reduction order cannot be
+    reproduced one arrival at a time) to the foldable (S, P) form of the
+    sequential mix: ``wvec`` carries the raw per-upload mix rates a_i, the
+    buffered step runs :func:`repro.kernels.ref.fedasync_rates_flat_ref`,
+    and the streaming channel folds with beta = 1 - a_i while the host
+    tracks P = prod(1 - a_i) — the two channels are bit-exact against
+    each other.
     """
 
     MODES = ("fedsgd", "fedavg", "fedbuff", "fedopt", "sdga", "fedasync")
@@ -271,7 +289,8 @@ class FlatServer:
                  qblock: Optional[int] = None,
                  donate: Optional[bool] = None,
                  mesh=None,
-                 external_discount: bool = False):
+                 external_discount: bool = False,
+                 fedasync_rates: bool = False):
         from repro.kernels import ref as _ref
         from repro.kernels import safl_agg as _k
         from repro.sharding import flat as _shflat
@@ -300,6 +319,7 @@ class FlatServer:
         # ones, in-kernel and in-oracle — reads wvec as-is.  Default
         # False keeps the jitted program identical to the pre-sched one.
         self.external_discount = external_discount
+        self.fedasync_rates = fedasync_rates
         sdga_disc = "none" if external_discount else "poly"
 
         def discounted(wvec):
@@ -359,13 +379,15 @@ class FlatServer:
                    ).astype(params_dtype)
             return new, {"m": m, "v": v, "step": step}
 
-        def _mesh_step(params, buf, wvec, opt):
-            """Server step from the podwise-reduced (gsum, wsum) — the
-            same per-mode math as the fused single-device kernels, over
-            the replicated (D,) state."""
+        def _from_sums(params, gsum, wsum, opt):
+            """Server step from reduced (gsum (d,), wsum ()) — the ONE
+            per-mode step body shared by the mesh buffered round, the
+            streaming finalize (single-device and mesh) and, in spirit,
+            the fused single-device kernels.  The op order mirrors the
+            single-device references exactly (``p0 - lr * (gsum/wsafe)``,
+            not ``p0 - (lr*gsum)/wsafe``) so the streaming channel is
+            bit-exact against the buffered oracle."""
             p0 = params.astype(jnp.float32)
-            gsum, wsum = pod_reduce(buf, wvec)
-            gsum = gsum[:d]  # q8 partials come back (Dq,)
             wsafe = jnp.maximum(wsum, 1e-12)
             new_opt = opt
             if mode == "fedasync":
@@ -374,7 +396,7 @@ class FlatServer:
             elif mode == "fedavg":
                 new = (gsum / wsafe).astype(params.dtype)
             elif mode in ("fedsgd", "fedbuff"):
-                new = (p0 - server_lr * gsum / wsafe).astype(params.dtype)
+                new = (p0 - server_lr * (gsum / wsafe)).astype(params.dtype)
             elif mode == "sdga":
                 new, m, e = _ref.sdga_step_from_mean(
                     gsum / wsafe, params, opt["momentum"], opt["ema"],
@@ -386,6 +408,13 @@ class FlatServer:
                 new, new_opt = _adam_step(p0, gsum / wsafe, opt,
                                           params.dtype)
             return new, new_opt
+
+        def _mesh_step(params, buf, wvec, opt):
+            """Server step from the podwise-reduced (gsum, wsum) over the
+            replicated (D,) state ((gsum)[:d]: q8 partials come back
+            (Dq,))."""
+            gsum, wsum = pod_reduce(buf, wvec)
+            return _from_sums(params, gsum[:d], wsum, opt)
 
         def q8_mean(buf, w):
             """Discount-weighted mean over the int8 buffer -> (d,) f32.
@@ -400,7 +429,21 @@ class FlatServer:
 
         def _step(params, buf, wvec, opt):
             p0 = params.astype(jnp.float32)
-            if pod_reduce is not None:
+            wmass = None
+            if mode == "fedasync" and fedasync_rates:
+                # foldable (S, P) form of the sequential mix: wvec is the
+                # RAW per-upload rates a_i; this fori recursion is the
+                # bit-exact buffered oracle of the streaming beta-folds
+                # (works sharded too — GSPMD gathers the rows)
+                if quantized:
+                    q, scales = buf
+                    new, wmass = _ref.fedasync_rates_flat_q8_ref(
+                        q, scales, wvec, params, qb)
+                else:
+                    new, wmass = _ref.fedasync_rates_flat_ref(
+                        buf, wvec, params)
+                new_opt = opt
+            elif pod_reduce is not None:
                 new, new_opt = _mesh_step(params, buf, wvec, opt)
             elif mode in ("fedsgd", "fedavg", "fedbuff", "fedasync"):
                 kmode = {"fedavg": "avg", "fedasync": "mix"}.get(mode,
@@ -499,7 +542,8 @@ class FlatServer:
                 new, new_opt = _adam_step(p0, g, opt, params.dtype)
             upd = new.astype(jnp.float32) - p0
             metrics = {"update_norm": jnp.sqrt(jnp.sum(jnp.square(upd))),
-                       "weight_sum": jnp.sum(discounted(wvec))}
+                       "weight_sum": (jnp.sum(discounted(wvec))
+                                      if wmass is None else wmass)}
             return new, new_opt, metrics
 
         # donate params + slow state on the compiled-kernel backends, where
@@ -514,6 +558,86 @@ class FlatServer:
         if donate is None:
             donate = use_pallas
         self._fn = jax.jit(_step, donate_argnums=(0, 3) if donate else ())
+
+        # ---- streaming channel: fold-on-arrival + finalize programs ----
+        # Only fedasync folds with a live beta (= 1 - a_i); the sum modes
+        # pass the CONSTANT 1.0 default so XLA elides the accumulator
+        # multiply — a traced beta=1.0 changes how LLVM contracts the
+        # mul+add into FMAs and breaks the fold-chain == einsum bitwise
+        # parity the streaming channel promises.
+        fold_beta = mode == "fedasync"
+        if quantized:
+            def _fold(bank, q_row, s_row, ridx, w, beta):
+                row = jax.lax.dynamic_slice(
+                    bank, (ridx, jnp.int32(0)), (1, bank.shape[1]))[0]
+                if use_pallas:
+                    folded = _k.safl_fold_q8(
+                        row, q_row, s_row, w, beta if fold_beta else 1.0,
+                        qblock=qb, block_d=bd, interpret=interpret)
+                elif fold_beta:
+                    folded = _ref.fold_q8_ref(row, q_row, s_row, w, qb,
+                                              beta)
+                else:
+                    folded = _ref.fold_q8_ref(row, q_row, s_row, w, qb)
+                return jax.lax.dynamic_update_slice(
+                    bank, folded[None], (ridx, jnp.int32(0)))
+        else:
+            def _fold(bank, vec, ridx, w, beta):
+                row = jax.lax.dynamic_slice(
+                    bank, (ridx, jnp.int32(0)), (1, bank.shape[1]))[0]
+                if use_pallas:
+                    folded = _k.safl_fold(
+                        row, vec, w, beta if fold_beta else 1.0,
+                        block_d=bd, interpret=interpret)
+                elif fold_beta:
+                    folded = _ref.fold_ref(row, vec, w, beta)
+                else:
+                    folded = _ref.fold_ref(row, vec, w)
+                return jax.lax.dynamic_update_slice(
+                    bank, folded[None], (ridx, jnp.int32(0)))
+
+        #: jitted donated fold: (bank, *payload, ridx, w, beta) -> bank
+        #: with bank[ridx] <- beta*bank[ridx] + w*payload, in place.  The
+        #: row index and both scalars are traced, so every upload of a
+        #: run reuses ONE compiled program (the one-compile guard —
+        #: :attr:`fold_compile_count`).  Payload is (vec,) f32 or
+        #: (q_row, s_row) on the quantized channel.
+        self.fold_program = jax.jit(_fold, donate_argnums=(0,))
+
+        pod_bank_reduce = (_shflat.podwise_bank_sums(self.mesh)
+                           if self.mesh is not None else None)
+
+        def _finalize(params, bank, wvec, opt, pprod):
+            p0 = params.astype(jnp.float32)
+            if mode == "fedasync":
+                assert fedasync_rates, \
+                    "streaming fedasync requires fedasync_rates=True"
+                # rates always fold into row 0; P = prod(1 - a_i) is
+                # tracked host-side (bit-equal to the in-program product)
+                gsum = bank[0][:d]
+                new = (pprod * p0 + gsum).astype(params.dtype)
+                new_opt = opt
+                wsum = 1.0 - pprod
+            elif pod_bank_reduce is not None:
+                gsum, wsum = pod_bank_reduce(bank, wvec)
+                new, new_opt = _from_sums(params, gsum[:d], wsum, opt)
+            else:
+                # sum(w) over the NATURAL-length weight vector: the same
+                # reduction tree the buffered step runs over its (K,)
+                # wvec, which is what keeps finalize bit-exact against it
+                gsum = bank[0][:d]
+                wsum = jnp.sum(wvec.astype(jnp.float32))
+                new, new_opt = _from_sums(params, gsum, wsum, opt)
+            upd = new.astype(jnp.float32) - p0
+            metrics = {"update_norm": jnp.sqrt(jnp.sum(jnp.square(upd))),
+                       "weight_sum": wsum}
+            return new, new_opt, metrics, jnp.zeros_like(bank)
+
+        # the bank is always donated: the fused zero-after-read output
+        # reuses its memory, which is what AccumBuffer.release recycles
+        self._finalize_fn = jax.jit(
+            _finalize,
+            donate_argnums=(1,) + ((0, 3) if donate else ()))
 
     def init_opt(self, params_flat: jax.Array):
         """Mode-matched slow state (flat f32 vectors, donated each round)."""
@@ -536,12 +660,42 @@ class FlatServer:
         the ``(q int8 (K, Dq), scales (K, Dq/qblock))`` pair."""
         return self._fn(params_flat, buf, wvec, opt)
 
+    def finalize(self, params_flat, bank, wvec, opt, pprod=1.0):
+        """Streaming server round from a sealed accumulator bank.
+
+        ``bank`` (n_rows, D) f32 partial sums (DONATED — consume the
+        returned zeroed bank via ``AccumBuffer.release``), ``wvec`` the
+        horizon's ingest weights in arrival order (natural length — one
+        finalize compilation per distinct horizon size; queue/k horizons
+        see exactly one), ``pprod`` the host-tracked fedasync survival
+        product (ignored by the other modes).  Returns
+        ``(new_params, new_opt, {update_norm, weight_sum}, zeroed_bank)``.
+        """
+        return self._finalize_fn(params_flat, bank,
+                                 jnp.asarray(wvec, jnp.float32), opt,
+                                 jnp.float32(pprod))
+
     @property
     def compile_count(self) -> int:
         """Number of XLA compilations of the server program (the recompile
-        guard: must stay 1 across rounds)."""
+        guard: must stay 1 across rounds).  Counts whichever channel ran:
+        the buffered step if it ever compiled, else the max over the
+        streaming fold / finalize programs."""
         try:
-            return int(self._fn._cache_size())
+            n = int(self._fn._cache_size())
+            if n > 0:
+                return n
+            return max(int(self.fold_program._cache_size()),
+                       int(self._finalize_fn._cache_size()))
+        except AttributeError:  # pragma: no cover - older/newer jax
+            return -1
+
+    @property
+    def fold_compile_count(self) -> int:
+        """Compilations of the streaming fold program alone (must stay 1
+        across every upload of a run — ridx/w/beta are traced)."""
+        try:
+            return int(self.fold_program._cache_size())
         except AttributeError:  # pragma: no cover - older/newer jax
             return -1
 

@@ -221,6 +221,95 @@ def _write_q_slot(q: jax.Array, scales: jax.Array, q_vec: jax.Array,
     return q, scales
 
 
+class AccumBuffer:
+    """Double-buffered streaming accumulator: the O(D) replacement for the
+    buffered (K, D) channel.
+
+    Holds TWO (n_rows, D) f32 sum banks (n_rows = mesh shards, 1 on a
+    single device) plus the host-side scalar moments of the horizon in
+    flight: per-shard ingest-weight lists (the finalize program recomputes
+    ``sum(w)`` from the *vector* of weights so the reduction tree matches
+    the buffered oracle bitwise), the running fedasync survival product
+    ``pprod = prod(1 - a_i)``, and the staleness sum/max.  ``fold`` folds
+    one arriving upload into the active bank via the server's donated
+    fold program (``FlatServer.fold_program``); ``seal`` hands the filled
+    bank to the server round and swaps in the spare, so ingestion of
+    horizon r+1 overlaps the (async-dispatched) server step of horizon r;
+    ``release`` returns the finalize program's zeroed bank as the new
+    spare.  Peak channel memory is ``channel_bytes`` = 2 * n_rows * D * 4
+    — flat in how many uploads a horizon admits.
+    """
+
+    def __init__(self, d: int, fold_fn, n_rows: int = 1, sharding=None):
+        self.d = int(d)
+        self.n_rows = int(n_rows)
+        self.sharding = sharding
+        self._fold_fn = fold_fn
+        self._bank = self._alloc()
+        self._spare = self._alloc()
+        self._reset_host()
+
+    def _alloc(self) -> jax.Array:
+        b = jnp.zeros((self.n_rows, self.d), jnp.float32)
+        return b if self.sharding is None else jax.device_put(b,
+                                                              self.sharding)
+
+    def _reset_host(self) -> None:
+        self._w: List[List[np.float32]] = [[] for _ in range(self.n_rows)]
+        self._pprod = np.float32(1.0)
+        self.count = 0
+        self.stal_sum = 0
+        self.stal_max = 0
+
+    def fold(self, payload: Tuple[jax.Array, ...], *, w, beta=1.0,
+             shard: int = 0, staleness: int = 0) -> None:
+        """Fold one upload into the active bank: row ``shard`` becomes
+        beta*row + w*payload (payload = (vec,) f32 or (q_row, s_row) q8;
+        the server's fold program handles the dequantize).  ``w`` is the
+        FINAL ingest weight (discount-at-ingest) and ``beta`` the decay
+        (1.0 except the fedasync sequential mix, where beta = 1 - a_i)."""
+        self._bank = self._fold_fn(self._bank, *payload, jnp.int32(shard),
+                                   jnp.float32(w), jnp.float32(beta))
+        self._w[shard].append(np.float32(w))
+        self._pprod = np.float32(self._pprod * np.float32(beta))
+        self.count += 1
+        self.stal_sum += int(staleness)
+        self.stal_max = max(self.stal_max, int(staleness))
+
+    def seal(self):
+        """Close the horizon: returns ``(bank, wvec, stats)`` and swaps
+        the spare bank in so the next horizon's folds can start while the
+        server round consumes this one.  ``wvec`` is the np.float32 ingest
+        weights in arrival order (mesh: per-shard lists concatenated in
+        shard-major order, zero-padded to equal length so the podwise
+        reduction's P("pod") split stays even)."""
+        assert self.count > 0, "seal() on an empty horizon"
+        if self.n_rows == 1:
+            wvec = np.asarray(self._w[0], np.float32)
+        else:
+            L = max(len(ws) for ws in self._w)
+            wvec = np.zeros((self.n_rows * L,), np.float32)
+            for s, ws in enumerate(self._w):
+                wvec[s * L:s * L + len(ws)] = ws
+        stats = {"count": self.count, "stal_sum": self.stal_sum,
+                 "stal_max": self.stal_max, "pprod": self._pprod}
+        bank = self._bank
+        assert self._spare is not None, \
+            "seal() before release() of the previous horizon's bank"
+        self._bank, self._spare = self._spare, None
+        self._reset_host()
+        return bank, wvec, stats
+
+    def release(self, zeroed_bank: jax.Array) -> None:
+        """Return the finalize program's zeroed bank as the new spare."""
+        self._spare = zeroed_bank
+
+    @property
+    def channel_bytes(self) -> int:
+        """Peak server-channel accumulator footprint (both banks)."""
+        return 2 * self.n_rows * self.d * 4
+
+
 class QuantBuffer:
     """Preallocated quantized (K, Dq) update buffer: int8 rows + per-block
     f32 scales.  ``write`` donates both backing arrays, so steady-state

@@ -40,6 +40,16 @@ class DeviceMetricsRing:
     and client-index vectors into both with the buffers donated — the
     same no-host-sync discipline as ``append`` — and ``flush_sched``
     does their single device->host copy at run end.
+
+    Unbounded-upload horizons (the streaming channel's queue/timeout
+    triggers, PR 6) removed the two fixed-K assumptions the ring was
+    built on: ``capacity`` is now a *hint*, not a ceiling — appending
+    past it grows the buffer by power-of-two doubling (an explicit
+    device reallocation, never a silent overwrite of live rows) — and
+    ``append_sched`` accepts any per-round K: inputs are padded host-side
+    to the next power of two with out-of-range sentinels the scatter's
+    drop mode discards, so the donated writer still compiles O(log K)
+    programs instead of one per distinct horizon size.
     """
 
     def __init__(self, capacity: int, channels: int = 3,
@@ -64,18 +74,42 @@ class DeviceMetricsRing:
 
     def append(self, *scalars) -> None:
         assert len(scalars) == self.channels, (len(scalars), self.channels)
-        assert self._n < self.capacity, "metrics ring full"
         import jax.numpy as jnp
+        if self._n >= self._buf.shape[0]:
+            # capacity was a hint (timeout horizons can aggregate more
+            # rounds than the caller projected): grow by doubling — one
+            # explicit O(rows) device copy per doubling, amortized O(1)
+            # per append, and the rows already written stay intact
+            self._buf = jnp.concatenate(
+                [self._buf, jnp.zeros_like(self._buf)])
+            self.capacity = self._buf.shape[0]
         self._buf = _ring_write(self._buf, jnp.int32(self._n), *scalars)
         self._n += 1
 
     def append_sched(self, staleness, cids) -> None:
-        """Scatter-add one round's (K,) int32 staleness values and client
-        ids into the device histogram / participation counts (donated
-        in-place writes, no host transfer)."""
+        """Scatter-add one round's (K,) staleness values and client ids
+        (host ints / arrays) into the device histogram / participation
+        counts (donated in-place writes, no host transfer).  K may vary
+        per round: the vectors are padded to the next power of two with
+        out-of-range sentinels (bin index ``stale_bins``, client index
+        ``n_clients``) that the writer's drop-mode scatter discards, so
+        compilation stays O(log K) under queue/timeout horizons.
+        Staleness is clipped into the histogram's overflow bin HERE (host
+        side) — in-program clipping would send the sentinels back in
+        range."""
         assert self._hist is not None, "ring built without sched channels"
+        stal = np.minimum(np.asarray(staleness, np.int32),
+                          self.stale_bins - 1)
+        ids = np.asarray(cids, np.int32)
+        k = stal.shape[0]
+        kb = 1 << max(k - 1, 0).bit_length()
+        if kb != k:
+            stal = np.concatenate(
+                [stal, np.full(kb - k, self.stale_bins, np.int32)])
+            ids = np.concatenate(
+                [ids, np.full(kb - k, self._part.shape[0], np.int32)])
         self._hist, self._part = _sched_write(
-            self._hist, self._part, staleness, cids)
+            self._hist, self._part, stal, ids)
 
     def __len__(self) -> int:
         return self._n
@@ -115,9 +149,10 @@ def _sched_writer():
 
     @functools.partial(jax.jit, donate_argnums=(0, 1))
     def write(hist, part, staleness, cids):
-        bins = hist.shape[0]
-        hist = hist.at[jnp.clip(staleness, 0, bins - 1)].add(1)
-        part = part.at[cids].add(1)
+        # mode="drop": the padding sentinels (index == length) fall out;
+        # real staleness was clipped into the overflow bin host-side
+        hist = hist.at[staleness].add(1, mode="drop")
+        part = part.at[cids].add(1, mode="drop")
         return hist, part
 
     return write

@@ -215,6 +215,31 @@ class FLEngine:
         self._quant = fl_cfg.compress_updates
         self._qbuf = None
         self._buf = None
+        # ---- server channel (tentpole PR 6): streaming vs buffered ----
+        # streaming: each upload is folded into an O(D) running partial
+        # sum the moment it arrives (AccumBuffer + FlatServer.fold/
+        # finalize) — peak channel memory flat in the horizon's upload
+        # count.  buffered: the resident (K, D) rows + one reduction (the
+        # bit-exact parity oracle).  "auto" picks streaming for the
+        # semi-async engine (whose uploads genuinely trickle in) and
+        # buffered for SFL (whose round emits its rows as one program).
+        self._channel = fl_cfg.server_channel
+        if self._channel == "auto":
+            self._channel = ("streaming" if fl_cfg.mode == "semi_async"
+                             else "buffered")
+        self._streaming = self._channel == "streaming"
+        # fixed per-horizon upload target: k / queue horizons close on a
+        # count, timeout/hybrid on the clock (None — unbounded, streaming
+        # only; validate() rejects buffered for those)
+        if fl_cfg.horizon == "queue":
+            self._horizon_target: Optional[int] = (fl_cfg.horizon_queue
+                                                   or fl_cfg.k)
+        elif fl_cfg.horizon in ("timeout", "hybrid"):
+            self._horizon_target = None
+        else:
+            self._horizon_target = fl_cfg.k
+        # simulated time of the last aggregation (timeout horizons)
+        self._last_agg_time = 0.0
         # per-client error-feedback residuals (dq,), created on first upload
         self._residuals: Dict[int, jax.Array] = {}
         # ---- multi-device: flat channel rows over the mesh "pod" axis ----
@@ -228,6 +253,16 @@ class FLEngine:
                 "jax)")
             self._mesh = shflat.make_pod_mesh(fl_cfg.devices)
             row_sh = shflat.row_sharding(self._mesh)
+        # discount-at-ingest: the engine composes the FINAL per-upload
+        # aggregation weights on host for EVERY mode (_weight_vector) —
+        # the (1+tau)^-alpha discount, fedavg data sizes, adaptive policy
+        # scores and the fedasync mix rates alike — so the streaming
+        # channel can fold them the moment an upload lands and the
+        # buffered oracle applies the exact same numbers verbatim
+        # (external_discount).  fedasync_rates makes the buffered fedasync
+        # step consume those raw rates through the same sequential
+        # (1-a)-mix recurrence the streaming fold runs, which is what
+        # keeps the two channels bit-exact.
         self._server = agg.FlatServer(
             fl_cfg.aggregation, self.codec.d,
             server_lr=fl_cfg.server_lr, alpha=fl_cfg.staleness_alpha,
@@ -236,14 +271,25 @@ class FLEngine:
             quantized=self._quant, qblock=fl_cfg.quant_block,
             donate=False if self._batched_async else None,
             mesh=self._mesh,
-            external_discount=self.sched.policy.reweights)
+            external_discount=True, fedasync_rates=True)
         self._opt = self._server.init_opt(self._flat_params)
-        if self._quant:
-            self._qbuf = flatbuf.QuantBuffer(fl_cfg.k, self.codec.d,
+        self._accum = None
+        if self._streaming:
+            # O(D) double-buffered accumulator: n_rows = mesh shards (the
+            # streaming counterpart of the row-sharded (K, D) buffer) —
+            # ingestion of horizon r+1 overlaps the server step of r
+            self._accum = flatbuf.AccumBuffer(
+                self.codec.dq if self._quant else self.codec.d,
+                self._server.fold_program,
+                n_rows=fl_cfg.devices, sharding=row_sh)
+        elif self._quant:
+            self._qbuf = flatbuf.QuantBuffer(self._horizon_target,
+                                             self.codec.d,
                                              fl_cfg.quant_block,
                                              sharding=row_sh)
         else:
-            self._buf = flatbuf.alloc_buffer(fl_cfg.k, self.codec.d,
+            self._buf = flatbuf.alloc_buffer(self._horizon_target,
+                                             self.codec.d,
                                              sharding=row_sh)
         # quantized channel, model targets: the non-trainable BN state
         # ships through the same ravel_q8 wire format as the weights
@@ -292,6 +338,40 @@ class FLEngine:
         # FedSGD's unweighted gradient mean needs no per-client
         # bookkeeping and pays a flat 0.01 s.
         return 0.05 * self.cfg.k if self.cfg.aggregation != "fedsgd" else 0.01
+
+    def _fold_shard(self, slot: int) -> int:
+        """Accumulator row for the streaming fold of upload ``slot``.
+
+        With a fixed, evenly divisible horizon target the assignment is
+        block-wise — slot i folds into the row that holds the rows the
+        buffered channel would shard to the same pod — so the per-shard
+        partial sums (and hence the mesh server round) match the buffered
+        oracle bitwise.  Clock-triggered horizons round-robin instead.
+        fedasync always folds into row 0: its sequential mix is one
+        non-commuting chain, not a per-shard decomposition."""
+        if self._mesh is None or self.cfg.aggregation == "fedasync":
+            return 0
+        n = self.cfg.devices
+        t = self._horizon_target
+        if t is not None and t % n == 0:
+            return min(slot // (t // n), n - 1)
+        return slot % n
+
+    def _horizon_due(self, count: int, now: float) -> bool:
+        """Aggregation-horizon trigger (``FLConfig.horizon``): close on
+        the paper's K-count, an explicit queue length, a wall-clock
+        timeout since the last aggregation (SEAFL-style periodic
+        aggregation — needs at least one buffered upload), or whichever
+        of queue/timeout fires first (hybrid)."""
+        if count <= 0:
+            return False
+        cfg = self.cfg
+        if cfg.horizon in ("k", "queue"):
+            return count >= self._horizon_target
+        timed = now >= self._last_agg_time + cfg.horizon_timeout_s
+        if cfg.horizon == "timeout":
+            return timed
+        return timed or count >= (cfg.horizon_queue or cfg.k)  # hybrid
 
     def _run_local(self, c: ClientState):
         """Run one local 'upload period' (local_epochs) for client c.
@@ -349,13 +429,16 @@ class FLEngine:
 
     def _enqueue_upload(self, buffer: List[Dict], c: ClientState,
                         w_end, s_end, staleness: int) -> None:
-        """Serialize one client upload: ravel the update and write it into
-        the buffer row for the next free slot (the buffer is donated — an
-        in-place device write); with the quantized channel the row is
-        emitted as int8 + block scales by one fused program and the
-        error-feedback residual stays client-side.  Must be called before
-        ``c.params`` is refreshed (gradient targets diff against the
-        client's round-start weights)."""
+        """Serialize one client upload.  Buffered channel: ravel the
+        update and write it into the row for the next free slot (the
+        buffer is donated — an in-place device write).  Streaming
+        channel: fold it into the running O(D) partial sum on arrival,
+        with its FINAL aggregation weight (discount-at-ingest).  With the
+        quantized channel the payload is int8 + block scales from one
+        fused program either way, and the error-feedback residual stays
+        client-side.  Must be called before ``c.params`` is refreshed
+        (gradient targets diff against the client's round-start
+        weights)."""
         cfg = self.cfg
         entry: Dict = {"staleness": staleness, "cid": c.cid,
                        "n": c.n_samples}
@@ -365,13 +448,10 @@ class FLEngine:
                 # not accumulate across rounds — no error feedback); the
                 # BN state ships int8 too — the server sees its roundtrip
                 q, s = self.codec.ravel_q8_nores(w_end)
-                self._qbuf.write(q, s, len(buffer))
+                payload = (q, s)
                 s_end = self._state_q8(s_end)
             else:
-                vec = self.codec.ravel(w_end)
-                self._buf = flatbuf.write_slot(self._buf, vec,
-                                               jnp.int32(len(buffer)))
-            entry["state"] = s_end
+                payload = (self.codec.ravel(w_end),)
         else:  # gradient targets: fedsgd, sdga, fedbuff, fedopt
             if self._quant:
                 # ONE fused program: diff + ravel + EF add + blockwise
@@ -384,71 +464,109 @@ class FLEngine:
                 else:
                     q, s = self.codec.ravel_delta_q8_nores(
                         c.params, w_end, cfg.client_lr)
-                self._qbuf.write(q, s, len(buffer))
+                payload = (q, s)
             else:
-                vec = self.codec.ravel_delta(c.params, w_end,
-                                             cfg.client_lr)
-                self._buf = flatbuf.write_slot(self._buf, vec,
-                                               jnp.int32(len(buffer)))
-            entry["state"] = s_end
+                payload = (self.codec.ravel_delta(c.params, w_end,
+                                                  cfg.client_lr),)
+        slot = len(buffer)
+        if self._streaming:
+            # accumulate-on-arrival: the upload's final weight (and, for
+            # fedasync, the 1-a survival factor) fold NOW — the horizon's
+            # server round is just a finalize over the partial sums
+            w = self._weight_vector([staleness], [c.n_samples])[0]
+            beta = (np.float32(1.0) - w
+                    if cfg.aggregation == "fedasync" else 1.0)
+            self._accum.fold(payload, w=w, beta=beta,
+                             shard=self._fold_shard(slot),
+                             staleness=staleness)
+        elif self._quant:
+            self._qbuf.write(*payload, slot)
+        else:
+            self._buf = flatbuf.write_slot(self._buf, payload[0],
+                                           jnp.int32(slot))
+        entry["state"] = s_end
         self.tx_bytes += self._upload_nbytes()
         buffer.append(entry)
 
     # ------------------------------------------------------------------
     def _weight_vector(self, staleness: Sequence[int],
-                       sizes: Sequence[int]) -> jax.Array:
-        """Per-mode weight-input vector for the flat server program.
+                       sizes: Sequence[int]) -> np.ndarray:
+        """FINAL per-upload aggregation weights, np.float32 on host
+        (discount-at-ingest).
 
-        With an adaptive participation policy (``policy.reweights``, e.g.
-        fedqs) the final reduction weights are composed on host — the
-        per-mode base (data sizes / unit weights / the (1+tau)^-alpha
-        discount / the fedasync mix rates) times the policy score — and
-        the server was built ``external_discount=True`` so it applies
-        them verbatim."""
+        Every mode's weighting — fedavg data sizes, fedsgd units, the
+        (1+tau)^-alpha discount of the staleness modes, fedasync's raw
+        mix rates a_i = clip(fedasync_alpha * (1+tau)^-alpha * score,
+        0, 1) — times any adaptive policy score, composed from host ints
+        with no device sync.  Both channels consume these verbatim: the
+        streaming channel folds weight i the moment upload i arrives
+        (``_weight_vector([tau], [n])[0]`` — numpy's scalar and vector
+        kernels agree bitwise), the buffered oracle applies the whole
+        vector in its one reduction (``external_discount=True``,
+        ``fedasync_rates=True``), which is what makes the two channels
+        bit-exact against each other."""
         cfg = self.cfg
         policy = self.sched.policy
         score = (policy.score(staleness, sizes)
                  if policy.reweights else None)
+        stal = np.asarray(staleness, np.float32)
         if cfg.aggregation == "fedasync":
-            # K sequential mixes folded into one reduction (host math
-            # over host ints — no device sync); the policy score scales
-            # the per-update mix rates before the fold
-            return agg.fedasync_coefficients(
-                staleness, cfg.fedasync_alpha, cfg.staleness_alpha,
-                score=score)
-        if score is None:
-            if cfg.aggregation == "fedavg":
-                return jnp.asarray(sizes, jnp.float32)
-            if cfg.aggregation == "fedsgd":
-                return jnp.ones((len(staleness),), jnp.float32)
-            # staleness-discounted modes discount in-program
-            return jnp.asarray(staleness, jnp.float32)
+            a = cfg.fedasync_alpha * np.power(
+                stal + 1.0, -np.float32(cfg.staleness_alpha))
+            if score is not None:
+                a = np.clip(a * np.asarray(score, np.float32), 0.0, 1.0)
+            return np.asarray(a, np.float32)
         if cfg.aggregation == "fedavg":
             base = np.asarray(sizes, np.float32)
         elif cfg.aggregation == "fedsgd":
             base = np.ones((len(staleness),), np.float32)
-        else:  # fedbuff / fedopt / sdga: the poly discount, host-side
-            base = np.power(1.0 + np.asarray(staleness, np.float32),
-                            -np.float32(cfg.staleness_alpha))
-        return jnp.asarray(base * score, jnp.float32)
+        else:  # fedbuff / fedopt / sdga: the poly discount
+            base = np.power(stal + 1.0, -np.float32(cfg.staleness_alpha))
+        if score is not None:
+            base = base * np.asarray(score, np.float32)
+        return np.asarray(base, np.float32)
 
-    def _server_round(self, staleness: Sequence[int],
-                      sizes: Sequence[int]) -> Dict[str, jax.Array]:
-        """ONE jitted flat server program + host bookkeeping shared by the
-        sequential and horizon-batched paths.  Returns the round's device
-        metric scalars (update_norm) without fetching them."""
+    def _record_staleness(self, staleness: Sequence[int]) -> None:
         for s in staleness:
             s = int(s)
             self.staleness_hist[s] = self.staleness_hist.get(s, 0) + 1
-        wvec = self._weight_vector(staleness, sizes)
+
+    def _broadcast_bytes(self) -> None:
+        # broadcast of the new global model to all clients
+        self.rx_bytes += int((self._params_bytes + self._state_bytes)
+                             * len(self.clients))
+
+    def _server_round(self, staleness: Sequence[int],
+                      sizes: Sequence[int]) -> Dict[str, jax.Array]:
+        """Buffered-channel server round: ONE jitted flat program + host
+        bookkeeping, shared by the sequential and horizon-batched paths.
+        Returns the round's device metric scalars (update_norm) without
+        fetching them."""
+        self._record_staleness(staleness)
+        wvec = jnp.asarray(self._weight_vector(staleness, sizes))
         self._flat_params, self._opt, m = self._server.step(
             self._flat_params,
             self._qbuf.views if self._quant else self._buf,
             wvec, self._opt)
         self.t_global += 1
-        # broadcast of the new global model to all clients
-        self.rx_bytes += int((self._params_bytes + self._state_bytes)
-                             * len(self.clients))
+        self._broadcast_bytes()
+        return m
+
+    def _server_round_streaming(
+            self, staleness: Sequence[int]) -> Dict[str, jax.Array]:
+        """Streaming-channel server round: every upload already folded at
+        ingest, so this is seal (swap the double-buffered accumulator —
+        horizon r+1 folds while this round's programs drain) + ONE
+        finalize from the O(D) partial sums + release of the zeroed
+        bank."""
+        self._record_staleness(staleness)
+        bank, wvec, stats = self._accum.seal()
+        self._flat_params, self._opt, m, zeroed = self._server.finalize(
+            self._flat_params, bank, wvec, self._opt,
+            pprod=stats["pprod"])
+        self._accum.release(zeroed)
+        self.t_global += 1
+        self._broadcast_bytes()
         return m
 
     def _aggregate(self, buffer: List[Dict],
@@ -456,8 +574,11 @@ class FLEngine:
         """Sequential-path aggregation: flat server round + non-trainable
         state handling + per-round unravel of the global pytree."""
         cfg = self.cfg
-        m = self._server_round([b["staleness"] for b in buffer],
-                               [b["n"] for b in buffer])
+        stal = [b["staleness"] for b in buffer]
+        if self._streaming:
+            m = self._server_round_streaming(stal)
+        else:
+            m = self._server_round(stal, [b["n"] for b in buffer])
         self.global_params = self.codec.unravel(self._flat_params)
         self._last_update_norm = m["update_norm"]
 
@@ -483,13 +604,17 @@ class FLEngine:
         return m
 
     def _wave_bucket(self, kw: int) -> int:
-        """Wave-size bucket: the next power of two >= kw (capped at K), so
-        high-churn schedules compile O(log K) distinct wave programs
-        instead of one per distinct wave size; identity with
-        ``wave_buckets=False`` (the unbucketed parity oracle)."""
+        """Wave-size bucket: the next power of two >= kw (capped at the
+        horizon's upload target when one exists — clock-triggered
+        horizons have no fixed ceiling), so high-churn schedules compile
+        O(log K) distinct wave programs instead of one per distinct wave
+        size; identity with ``wave_buckets=False`` (the unbucketed parity
+        oracle)."""
         if not self.cfg.wave_buckets:
             return kw
-        return min(1 << (kw - 1).bit_length(), self.cfg.k)
+        b = 1 << (kw - 1).bit_length()
+        t = self._horizon_target
+        return b if t is None else min(b, t)
 
     def _eval_due(self, rnd: int, n_rounds: int) -> bool:
         """Evaluate every eval_every-th aggregation + always the last."""
@@ -624,25 +749,37 @@ class FLEngine:
             now, cid = ev.time, ev.cid
             c = self.clients[cid]
             if not ev.admitted:
-                c.params, c.model_state = (self.global_params,
-                                           self.global_state)
-                c.version = self.t_global
-                continue
-            w_end, s_end, _ = self._run_local(c)
-            self._enqueue_upload(buffer, c, w_end, s_end, ev.staleness)
-
-            # client-side model refresh (paper §2.2.2): adopt newest global
-            # if one arrived since this client's version, else continue local
-            if c.version < self.t_global:
-                c.params, c.model_state = (self.global_params,
-                                           self.global_state)
-                c.version = self.t_global
+                # "reject" discards local progress + resyncs (selective
+                # training); "idle" is pure back-pressure — the client
+                # keeps its local chain and retries from where it is
+                if ev.verdict != "idle":
+                    c.params, c.model_state = (self.global_params,
+                                               self.global_state)
+                    c.version = self.t_global
             else:
-                c.params, c.model_state = w_end, s_end
+                w_end, s_end, _ = self._run_local(c)
+                self._enqueue_upload(buffer, c, w_end, s_end, ev.staleness)
 
-            if len(buffer) >= self.cfg.k:
+                # client-side model refresh (paper §2.2.2): adopt newest
+                # global if one arrived since this client's version, else
+                # continue local
+                if c.version < self.t_global:
+                    c.params, c.model_state = (self.global_params,
+                                               self.global_state)
+                    c.version = self.t_global
+                else:
+                    c.params, c.model_state = w_end, s_end
+
+            # the horizon check runs on EVERY event's clock, admitted or
+            # not: under rate control every over-limit upload idles, so a
+            # timeout horizon that only looked at admitted-event times
+            # would never see the deadline pass (livelock).  For count
+            # horizons this is a no-op — rejections don't grow the buffer.
+
+            if self._horizon_due(len(buffer), now):
                 stale_vals = [b["staleness"] for b in buffer]
                 self._aggregate(buffer)
+                self._last_agg_time = now
                 if self._eval_due(self.t_global, n_rounds):
                     self._eval_and_record(now + self._agg_overhead(),
                                           stale_vals)
@@ -711,12 +848,25 @@ class FLEngine:
             # which is also what makes a later ADMITTED event of the same
             # client this horizon train from the adopted weights. ----
             events: List[Tuple[float, int]] = []
-            stal = [0] * cfg.k
-            while len(events) < cfg.k:
+            stal: List[int] = []
+            # the horizon clock advances on EVERY popped event, admitted
+            # or not — under rate control the deadline of a timeout
+            # horizon is typically crossed by an idled upload, and the
+            # sequential oracle stamps _last_agg_time with that event's
+            # time, so the batched path must too (count horizons never
+            # fire on a non-admitted pop: the buffer didn't grow)
+            t_pop = 0.0
+            while not (events and self._horizon_due(len(events), t_pop)):
                 ev = self.sched.pop(r)
                 if ev is None:
                     break
+                t_pop = ev.time
                 if not ev.admitted:
+                    if ev.verdict == "idle":
+                        # back-pressure: nothing changes for the client —
+                        # its wave chain (and version) stay intact, only
+                        # the horizon clock advanced
+                        continue
                     # rejection after admission cannot happen under the
                     # built-in policies (admission resets projected
                     # staleness to 0); the wave decomposition below
@@ -728,11 +878,23 @@ class FLEngine:
                     c.model_state = self.global_state
                     c.version = r
                     continue
-                stal[len(events)] = ev.staleness
+                stal.append(ev.staleness)
                 events.append((ev.time, ev.cid))
             if not events:
                 break
-            now = events[-1][0]
+            now = t_pop
+            kh = len(events)  # this horizon's admitted upload count
+            sizes = [self.clients[cid].n_samples for _, cid in events]
+            wh = betah = None
+            pend: Dict[int, tuple] = {}
+            next_fold = 0
+            if self._streaming:
+                # discount-at-ingest weights for the whole horizon,
+                # slot-ordered (identical np kernels to the sequential
+                # path's per-upload singleton — bitwise the same folds)
+                wh = self._weight_vector(stal, sizes)
+                if cfg.aggregation == "fedasync":
+                    betah = np.float32(1.0) - wh
 
             # ---- wave decomposition ----
             waves: List[List[Tuple[int, int]]] = []  # per wave: (slot, cid)
@@ -745,7 +907,6 @@ class FLEngine:
                 waves[w].append((slot, cid))
 
             g_flat, g_state = self._flat_params, self.global_state
-            sizes = [0] * cfg.k
             nbytes = self._upload_nbytes()
             prev_new_flat = prev_states = None
             # refresh result per client with further events this horizon:
@@ -800,11 +961,8 @@ class FLEngine:
                     starts, states, xs_all, ys_all, mask_all,
                     jnp.asarray(cids), cfg.client_lr)
 
-                # ---- serialize the wave into its buffer slots ----
-                # padding lanes get slot K: out of range, dropped by the
-                # scatter (flatbuf.write_rows mode="drop")
-                slots = np.asarray([slot for slot, _ in members]
-                                   + [cfg.k] * npad, np.int32)
+                # ---- serialize the wave into the server channel ----
+                q = s = None
                 if self._quant:
                     if use_ef:
                         res = jnp.stack([self._residual(cid)
@@ -814,10 +972,37 @@ class FLEngine:
                             self._residuals[cid] = new_res[row]
                     else:
                         q, s = self.codec.quantize_rows_nores(vecs)
-                    self._qbuf.write_rows(q, s, slots)
+                if self._streaming:
+                    # hold-and-release: waves surface rows out of arrival
+                    # order (wave 0 spans the whole horizon), but the
+                    # sequential oracle folds in arrival order — so rows
+                    # park in ``pend`` and fold strictly in slot order,
+                    # which makes the batched fold chain the sequential
+                    # one by construction (and keeps fedasync's
+                    # non-commuting mix exact)
+                    for row, (slot, _cid) in enumerate(members):
+                        pend[slot] = ((q[row], s[row]) if self._quant
+                                      else (vecs[row],))
+                    while next_fold in pend:
+                        payload = pend.pop(next_fold)
+                        self._accum.fold(
+                            payload, w=wh[next_fold],
+                            beta=(betah[next_fold] if betah is not None
+                                  else 1.0),
+                            shard=self._fold_shard(next_fold),
+                            staleness=stal[next_fold])
+                        next_fold += 1
                 else:
-                    self._buf = flatbuf.write_rows(self._buf, vecs,
-                                                   jnp.asarray(slots))
+                    # padding lanes get the first out-of-range slot:
+                    # dropped by the scatter (write_rows mode="drop")
+                    slots = np.asarray(
+                        [slot for slot, _ in members]
+                        + [self._horizon_target] * npad, np.int32)
+                    if self._quant:
+                        self._qbuf.write_rows(q, s, slots)
+                    else:
+                        self._buf = flatbuf.write_rows(self._buf, vecs,
+                                                       jnp.asarray(slots))
 
                 # ---- host bookkeeping + client refresh ----
                 # model targets on the quantized channel: the server-side
@@ -833,9 +1018,8 @@ class FLEngine:
                     # staleness was recorded at pop time from the
                     # scheduler's projected versions (== r - c.version
                     # here: the projection mirrors this refresh rule)
-                    sizes[slot] = c.n_samples
                     size_parts.append(c.n_samples)
-                    if slot == cfg.k - 1 and cfg.aggregation != "fedavg":
+                    if slot == kh - 1 and cfg.aggregation != "fedavg":
                         # fedavg takes the weighted state mean instead
                         last_slot_state = jax.tree_util.tree_map(
                             lambda l, row=row: l[row], up_states)
@@ -856,14 +1040,19 @@ class FLEngine:
                 prev_new_flat, prev_states = new_flat, new_states
 
             # ---- fused server round (no host sync) ----
-            m = self._server_round(stal, sizes)
+            if self._streaming:
+                assert next_fold == kh, (next_fold, kh)
+                m = self._server_round_streaming(stal)
+            else:
+                m = self._server_round(stal, sizes)
+            self._last_agg_time = now
             self._global_stale = True
             # device-resident sched stats: scatter-add this round's
-            # staleness values + client ids (donated in-place writes;
-            # host transfer happens once, at the run-end flush)
-            ring.append_sched(jnp.asarray(stal, jnp.int32),
-                              jnp.asarray([cid for _, cid in events],
-                                          jnp.int32))
+            # staleness values + client ids (host ints in — the ring pads
+            # them to a power of two so queue/timeout horizons keep the
+            # writer at O(log K) compiles; donated in-place writes, host
+            # transfer happens once, at the run-end flush)
+            ring.append_sched(stal, [cid for _, cid in events])
             if cfg.aggregation == "fedavg":
                 stacked = (state_parts[0] if len(state_parts) == 1
                            else tree_stack(

@@ -35,6 +35,82 @@ def weighted_sum_ref(updates: jax.Array, weights: jax.Array) -> jax.Array:
                       updates.astype(jnp.float32))
 
 
+def fold_ref(acc: jax.Array, vec: jax.Array, w, beta=1.0) -> jax.Array:
+    """One streaming accumulate-on-arrival fold: acc <- beta*acc + w*vec.
+
+    acc (D,) f32 running partial sum, vec (D,) one arriving upload, w the
+    upload's FINAL aggregation weight (discount-at-ingest: the engine
+    folds the (1+tau)^-alpha discount / data size / policy score into w
+    before dispatch), beta the decay on the existing accumulator (1.0
+    for the sum modes; 1 - a_i for the fedasync sequential mix, where it
+    realizes prod_{j>i}(1 - a_j) one arrival at a time).  Oracle for
+    kernels.safl_agg.safl_fold; a chain of these folds is bitwise equal
+    to ``weighted_sum_ref`` on the same rows (XLA CPU reduces einsum
+    rows in order) — the streaming-vs-buffered parity contract.
+    """
+    return (jnp.asarray(beta, jnp.float32) * acc.astype(jnp.float32)
+            + jnp.asarray(w, jnp.float32) * vec.astype(jnp.float32))
+
+
+def fold_q8_ref(acc: jax.Array, q_row: jax.Array, s_row: jax.Array,
+                w, qblock: int, beta=1.0) -> jax.Array:
+    """Streaming fold of one quantized upload row: blockwise dequantize
+    q_row (Dq,) int8 with s_row (Dq//qblock,) f32 scales, then
+    :func:`fold_ref` — the q8 accumulate-on-arrival oracle."""
+    Dq = q_row.shape[0]
+    u = (q_row.astype(jnp.float32).reshape(Dq // qblock, qblock)
+         * s_row[:, None]).reshape(Dq)
+    return fold_ref(acc, u, w, beta)
+
+
+def fedasync_rates_flat_ref(updates: jax.Array, rates: jax.Array,
+                            params: jax.Array):
+    """Sequential fedasync mix over a flat (K, D) buffer in (S, P) form.
+
+    K per-update mixes p <- (1 - a_i) p + a_i u_i decompose into a
+    foldable pair: S accumulates a_i u_i prod_{j>i}(1 - a_j) one row at
+    a time (exactly the :func:`fold_ref` recursion with beta = 1 - a_i,
+    w = a_i) and P = prod_i (1 - a_i), with the final model P p + S.
+    This is the buffered oracle the streaming channel is bit-exact
+    against: both run the identical fold recursion, unlike the
+    coefficient-einsum form (``fedasync_flat_ref``), whose reduction
+    order differs.  Returns (mixed, weight_sum = 1 - P).
+    """
+    a = rates.astype(jnp.float32)
+    u = updates.astype(jnp.float32)
+
+    def body(i, sp):
+        s, prod = sp
+        return (1.0 - a[i]) * s + a[i] * u[i], prod * (1.0 - a[i])
+
+    s, prod = jax.lax.fori_loop(
+        0, a.shape[0], body,
+        (jnp.zeros(params.shape[0], jnp.float32), jnp.float32(1.0)))
+    mixed = prod * params.astype(jnp.float32) + s
+    return mixed.astype(params.dtype), 1.0 - prod
+
+
+def fedasync_rates_flat_q8_ref(q: jax.Array, scales: jax.Array,
+                               rates: jax.Array, params: jax.Array,
+                               qblock: int):
+    """Sequential (S, P) fedasync mix with per-row dequantize in the fold
+    — the q8 buffered oracle for the streaming rates channel."""
+    a = rates.astype(jnp.float32)
+    d = params.shape[0]
+
+    def body(i, sp):
+        s, prod = sp
+        u = fold_q8_ref(jnp.zeros((q.shape[1],), jnp.float32),
+                        q[i], scales[i], 1.0, qblock)[:d]
+        return (1.0 - a[i]) * s + a[i] * u, prod * (1.0 - a[i])
+
+    s, prod = jax.lax.fori_loop(
+        0, a.shape[0], body,
+        (jnp.zeros(d, jnp.float32), jnp.float32(1.0)))
+    mixed = prod * params.astype(jnp.float32) + s
+    return mixed.astype(params.dtype), 1.0 - prod
+
+
 def fedbuff_flat_ref(updates: jax.Array, staleness: jax.Array,
                      params: jax.Array, server_lr: float,
                      alpha: float = 0.5) -> jax.Array:

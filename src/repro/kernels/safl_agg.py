@@ -170,6 +170,93 @@ def _avg_kernel(w_ref, u_ref, o_ref, *, server_lr: float, mode: str,
 
 
 # ---------------------------------------------------------------------------
+# streaming accumulate-on-arrival: fold one upload into the running sum
+# ---------------------------------------------------------------------------
+
+
+def _fold_kernel(s_ref, a_ref, v_ref, o_ref):
+    """One (BLOCK_D,) tile of the streaming fold o = beta*a + w*v.
+
+    s_ref is the (2,) scalar pair [beta, w]: beta decays the existing
+    accumulator (1.0 for the sum modes, 1 - a_i for the fedasync
+    sequential mix), w is the arriving upload's final ingest weight
+    (discount-at-ingest: staleness discount / data size / policy score
+    are folded before dispatch)."""
+    o_ref[...] = (s_ref[0] * a_ref[...].astype(jnp.float32)
+                  + s_ref[1] * v_ref[...].astype(jnp.float32))
+
+
+def safl_fold(acc: jax.Array, vec: jax.Array, w, beta=1.0,
+              block_d: int = BLOCK_D, interpret: bool = True) -> jax.Array:
+    """Streaming fold: acc (D,) f32 running partial sum, vec (D,) one
+    arriving upload -> beta*acc + w*vec, one fused pass (oracle
+    :func:`repro.kernels.ref.fold_ref`).  The O(1)-memory replacement
+    for buffering a (K, D) row per client: K chained folds equal the
+    ``mode="sum"`` reduction bitwise on XLA CPU."""
+    D = acc.shape[0]
+    pad = (-D) % block_d
+    if pad:
+        acc = jnp.pad(acc, (0, pad))
+        vec = jnp.pad(vec, (0, pad))
+    Dp = D + pad
+    sw = jnp.stack([jnp.asarray(beta, jnp.float32),
+                    jnp.asarray(w, jnp.float32)])
+    vec_spec = pl.BlockSpec((block_d,), lambda i: (i,))
+    out = pl.pallas_call(
+        _fold_kernel,
+        grid=(Dp // block_d,),
+        in_specs=[pl.BlockSpec((2,), lambda i: (0,)), vec_spec, vec_spec],
+        out_specs=vec_spec,
+        out_shape=jax.ShapeDtypeStruct((Dp,), jnp.float32),
+        interpret=interpret,
+    )(sw, acc, vec)
+    return out[:D]
+
+
+def _fold_q8_kernel(s_ref, a_ref, q_ref, sc_ref, o_ref, *, qblock: int):
+    """Streaming fold of one quantized row tile: blockwise dequantize the
+    (BLOCK_D,) int8 slice in VMEM, then o = beta*a + w*u."""
+    BD = q_ref.shape[0]
+    u = (q_ref[...].astype(jnp.float32).reshape(BD // qblock, qblock)
+         * sc_ref[...][:, None]).reshape(BD)
+    o_ref[...] = s_ref[0] * a_ref[...].astype(jnp.float32) + s_ref[1] * u
+
+
+def safl_fold_q8(acc: jax.Array, q_row: jax.Array, scales_row: jax.Array,
+                 w, beta=1.0, qblock: int = QBLOCK,
+                 block_d: int = BLOCK_D, interpret: bool = True) -> jax.Array:
+    """Quantized-channel streaming fold: acc (Dq,) f32, q_row (Dq,) int8,
+    scales_row (Dq/qblock,) f32 -> beta*acc + w*dequant(q_row), with the
+    blockwise dequantize fused into the single pass (oracle
+    :func:`repro.kernels.ref.fold_q8_ref`)."""
+    Dq = acc.shape[0]
+    assert q_row.shape == (Dq,) and block_d % qblock == 0
+    pad = (-Dq) % block_d
+    if pad:
+        acc = jnp.pad(acc, (0, pad))
+        q_row = jnp.pad(q_row, (0, pad))
+        scales_row = jnp.pad(scales_row, (0, pad // qblock))
+    Dp = Dq + pad
+    sw = jnp.stack([jnp.asarray(beta, jnp.float32),
+                    jnp.asarray(w, jnp.float32)])
+    vec_spec = pl.BlockSpec((block_d,), lambda i: (i,))
+    out = pl.pallas_call(
+        functools.partial(_fold_q8_kernel, qblock=qblock),
+        grid=(Dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            vec_spec,
+            vec_spec,
+            pl.BlockSpec((block_d // qblock,), lambda i: (i,)),
+        ],
+        out_specs=vec_spec,
+        out_shape=jax.ShapeDtypeStruct((Dp,), jnp.float32),
+        interpret=interpret,
+    )(sw, acc, q_row, scales_row)
+    return out[:Dq]
+
+
+# ---------------------------------------------------------------------------
 # SDGA: staleness discount + momentum + SGD step + EMA anchor, one pass
 # ---------------------------------------------------------------------------
 

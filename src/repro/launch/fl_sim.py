@@ -72,13 +72,48 @@ def main() -> None:
                          "lognormal (heavy-tailed per-epoch compute "
                          "jitter), markov (drop-out/rejoin availability "
                          "on top of the jitter)")
+    ap.add_argument("--horizon", default="k",
+                    choices=["k", "queue", "timeout", "hybrid"],
+                    help="aggregation-horizon trigger (semi-async): k "
+                         "(the paper's buffered-K rule), queue "
+                         "(--horizon-queue admitted uploads), timeout "
+                         "(first upload after --horizon-timeout-s "
+                         "simulated seconds since the last aggregation; "
+                         "streaming channel only), hybrid (whichever of "
+                         "queue/timeout fires first)")
+    ap.add_argument("--horizon-queue", type=int, default=0,
+                    help="queue/hybrid horizons: admitted uploads per "
+                         "aggregation (0 -> k)")
+    ap.add_argument("--horizon-timeout-s", type=float, default=0.0,
+                    help="timeout/hybrid horizons: simulated seconds "
+                         "between aggregations")
+    ap.add_argument("--server-channel", default="auto",
+                    choices=["auto", "streaming", "buffered"],
+                    help="server upload channel: streaming folds each "
+                         "upload into an O(D) running sum on arrival "
+                         "(accumulate-at-ingest; the fold kernel follows "
+                         "REPRO_AGG_BACKEND=pallas|ref like every "
+                         "aggregation program), buffered keeps the "
+                         "(K, D) resident rows — the bit-exact parity "
+                         "oracle; auto = streaming for semi_async, "
+                         "buffered for sync")
     ap.add_argument("--sched-policy", default="full",
-                    choices=["full", "uniform", "seafl", "fedqs"],
+                    choices=["full", "uniform", "seafl", "fedqs",
+                             "ratelimit"],
                     help="participation policy (repro.sched.policy): "
                          "full, uniform C-of-N sampling (--sched-c), "
                          "seafl staleness-capped selective training "
                          "(--sched-stale-cap), fedqs adaptive "
-                         "staleness x sample-count reweighting")
+                         "staleness x sample-count reweighting, "
+                         "ratelimit FedBuff-style server back-pressure "
+                         "(--sched-rate-limit; idled clients keep "
+                         "training and retry)")
+    ap.add_argument("--sched-rate-limit", type=int, default=0,
+                    help="ratelimit policy: admitted uploads per round "
+                         "before the server answers IDLE (0 -> k); must "
+                         "cover the horizon target under count-triggered "
+                         "horizons — back-pressure bites with "
+                         "--horizon timeout/hybrid")
     ap.add_argument("--sched-c", type=int, default=0,
                     help="uniform policy: clients admitted per round "
                          "(0 = all -> identical to full)")
@@ -137,8 +172,12 @@ def main() -> None:
                    batch_clients=not args.sequential,
                    devices=args.devices, wave_impl=args.wave_impl,
                    wave_buckets=not args.no_wave_buckets,
+                   horizon=args.horizon, horizon_queue=args.horizon_queue,
+                   horizon_timeout_s=args.horizon_timeout_s,
+                   server_channel=args.server_channel,
                    sched_timing=args.sched_timing,
                    sched_policy=args.sched_policy, sched_c=args.sched_c,
+                   sched_rate_limit=args.sched_rate_limit,
                    sched_stale_cap=args.sched_stale_cap,
                    sched_jitter_sigma=args.sched_jitter_sigma,
                    sched_drop_p=args.sched_drop_p,
@@ -158,6 +197,7 @@ def main() -> None:
     print(f"# sched[{ss['policy']}/{ss['timing']}] participation "
           f"per client: {ss['participation']}")
     print(f"# rejected uploads: {ss['rejected_uploads']}  "
+          f"idle requests: {ss['idle_requests']}  "
           f"no-shows: {ss['no_shows']}  staleness hist: "
           f"{ss['staleness_hist']}")
     if args.json_out:

@@ -40,6 +40,11 @@ the server accepts it — in three pluggable layers:
                     engine hands to FlatServer — adaptive reconciliation
                     of the FedSGD-vs-FedAvg weighting gap the source
                     paper measures.
+      ``ratelimit`` FedBuff-style rate control (arXiv:2106.06639): admit
+                    the first ``sched_rate_limit`` uploads per round and
+                    IDLE the rest — server back-pressure on fast
+                    clients, counted as ``idle_requests`` (distinct from
+                    rejections) in the run summary.
       ============  ====================================================
 
   * :mod:`repro.sched.events` — the persistent ``(time, cid, kind,
@@ -74,7 +79,11 @@ class SchedEvent:
     time: float
     cid: int
     staleness: int  # projected staleness at pop time (== engine's value)
-    admitted: bool  # False: policy-rejected — discard + resync the client
+    admitted: bool  # False: the upload was refused (see ``verdict``)
+    #: "admit" | "reject" | "idle".  Rejection discards the client's local
+    #: progress and resyncs it (selective training); idle is rate-control
+    #: back-pressure — the client keeps its local chain and retries later.
+    verdict: str = "admit"
 
 
 class Scheduler:
@@ -91,7 +100,9 @@ class Scheduler:
     admitted (adopt-or-continue) or rejected (discard-and-resync) — so
     admission decisions never need the engine's not-yet-refreshed
     ``ClientState.version`` (the batched path refreshes a whole horizon
-    after popping it).
+    after popping it).  IDLED uploads (rate-control back-pressure) are
+    the one exception: the client's chain is untouched, so its projected
+    version stays put and staleness keeps accruing until admission.
     """
 
     def __init__(self, cfg, clients, base_compute):
@@ -99,12 +110,18 @@ class Scheduler:
         self.clients = clients
         self.timing = make_timing(cfg, base_compute)
         self.policy = make_policy(cfg, len(clients))
+        # foldable policies precompute their at-ingest normalization
+        # constants from the client population (e.g. fedqs's mean sample
+        # count) — anything a streaming-channel score needs beyond the
+        # upload itself
+        self.policy.bind(clients)
         self.queue = EventQueue()
         self._version: Dict[int, int] = {}
         # host-side accounting (the device-resident counterparts live in
         # the batched engine's DeviceMetricsRing)
         self.participation = np.zeros(len(clients), np.int64)
         self.rejected = np.zeros(len(clients), np.int64)
+        self.idle = np.zeros(len(clients), np.int64)
         self.no_shows = 0
 
     def resume(self) -> None:
@@ -128,12 +145,23 @@ class Scheduler:
                 self.no_shows += 1
             self.queue.push(nt, cid, nkind, ncomp)
             stal = rnd - self._version.get(cid, 0)
-            self._version[cid] = rnd
-            if self.policy.admit(cid, stal, c.n_samples, rnd):
+            v = self.policy.verdict(cid, stal, c.n_samples, rnd)
+            # the projected-version map mirrors the engine's refresh rule:
+            # admitted and rejected clients both end the event at version
+            # ``rnd`` (adopt-or-continue / discard-and-resync); an IDLED
+            # client keeps its local chain untouched, so its version must
+            # not move either — its eventual admitted upload carries the
+            # full staleness it accumulated while back-pressured
+            if v != "idle":
+                self._version[cid] = rnd
+            if v == "admit":
                 self.participation[cid] += 1
                 return SchedEvent(t, cid, stal, True)
-            self.rejected[cid] += 1
-            return SchedEvent(t, cid, stal, False)
+            if v == "idle":
+                self.idle[cid] += 1
+            else:
+                self.rejected[cid] += 1
+            return SchedEvent(t, cid, stal, False, v)
         return None
 
     def stats(self) -> Dict:
@@ -143,6 +171,7 @@ class Scheduler:
             "timing": self.timing.name,
             "participation": self.participation.tolist(),
             "rejected_uploads": int(self.rejected.sum()),
+            "idle_requests": int(self.idle.sum()),
             "no_shows": int(self.no_shows),
         }
 

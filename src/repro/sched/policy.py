@@ -25,7 +25,26 @@ client state is refreshed, so it must not read the (not yet updated)
 Built-in policies (see :mod:`repro.sched` for the paper mapping):
 ``full`` (everyone, the parity oracle), ``uniform`` (C-of-N sampling per
 round), ``seafl`` (staleness-capped selective training), ``fedqs``
-(adaptive staleness x sample-count reweighting).
+(adaptive staleness x sample-count reweighting), ``ratelimit``
+(FedBuff-style server rate control: IDLE fast clients past a per-round
+admission budget).
+
+Verdicts (streaming-channel PR 6): :meth:`Policy.verdict` generalizes
+the boolean admit to ``"admit" | "reject" | "idle"``.  ``idle`` is the
+rate-control answer — "the server is full right now, come back later".
+Unlike a rejection it does NOT invalidate the client's work: the idled
+client keeps its local chain (params, version) untouched and simply
+retries at its next upload event, accumulating staleness while it is
+back-pressured.  The scheduler counts ``idle_requests`` apart from
+rejections so run reports distinguish server capacity from selective
+filtering.
+
+Reweighting policies must be *foldable* (discount-at-ingest): the
+streaming server channel folds each upload into the running sum the
+moment it arrives, so a score may depend only on per-upload quantities
+and bind-time constants (:meth:`Policy.bind`), never on horizon-wide
+normalizers.  ``fedqs`` therefore normalizes by the bind-time mean
+sample count instead of the per-horizon mean score.
 """
 from __future__ import annotations
 
@@ -48,9 +67,29 @@ class Policy:
         self.cfg = cfg
         self.n_clients = n_clients
 
+    def bind(self, clients) -> None:
+        """One-time hook with the engine's client population (called from
+        ``Scheduler.__init__``).  Foldable policies precompute their
+        normalization constants here — anything an at-ingest score needs
+        beyond the upload itself must be fixed at bind time."""
+
     def admit(self, cid: int, staleness: int, n_samples: int,
               rnd: int) -> bool:
         return True
+
+    def verdict(self, cid: int, staleness: int, n_samples: int,
+                rnd: int) -> str:
+        """``"admit" | "reject" | "idle"`` — the generalized admission.
+        Default wraps :meth:`admit`; only rate-control policies answer
+        ``idle`` (counted apart from rejections by the scheduler)."""
+        return "admit" if self.admit(cid, staleness, n_samples, rnd) \
+            else "reject"
+
+    def score_one(self, staleness: int, n_samples: int) -> np.float32:
+        """Per-upload aggregation-weight multiplier (discount-at-ingest:
+        what the streaming channel folds the moment the upload lands).
+        Must satisfy ``score([t], [n])[0] == score_one(t, n)`` bitwise."""
+        return np.float32(1.0)
 
     def score(self, staleness: Sequence[int],
               sizes: Sequence[int]) -> Optional[np.ndarray]:
@@ -116,13 +155,19 @@ class FedQSAdaptive(Policy):
     but score each buffered upload by sample count over a polynomial
     staleness penalty,
 
-        score_i  ∝  n_i / (1 + tau_i)^beta,   normalized to mean 1,
+        score_i  =  (n_i / n_mean) / (1 + tau_i)^beta,
 
     and multiply it into the mode's base aggregation coefficients (data
     sizes for fedavg, unit weights for fedsgd, the (1+tau)^-alpha
     discount for the staleness modes, the per-update mix rates for
     fedasync) — reconciling sample-quantity and staleness weighting, the
-    gradient-vs-weight tension FedQS targets in SAFL."""
+    gradient-vs-weight tension FedQS targets in SAFL.
+
+    The normalizer ``n_mean`` is the bind-time mean client sample count,
+    NOT the per-horizon mean score: a horizon-wide normalizer cannot be
+    known when an upload arrives, and the streaming channel folds the
+    final weight at that moment (discount-at-ingest) — the score must be
+    a pure function of ``(tau_i, n_i)`` and bind-time constants."""
 
     name = "fedqs"
     reweights = True
@@ -130,16 +175,65 @@ class FedQSAdaptive(Policy):
     def __init__(self, cfg, n_clients: int):
         super().__init__(cfg, n_clients)
         self.beta = float(cfg.sched_qs_beta)
+        self.n_mean = np.float32(1.0)  # rebound from the real population
+
+    def bind(self, clients) -> None:
+        self.n_mean = np.float32(max(
+            float(np.mean([c.n_samples for c in clients])), 1e-12))
+
+    def score_one(self, staleness: int, n_samples: int) -> np.float32:
+        # same np.float32 ops as the vector form, elementwise — numpy's
+        # scalar and array kernels agree bitwise, which is what lets the
+        # streaming channel fold per-upload scores and still match the
+        # buffered oracle exactly
+        return np.float32(
+            (np.float32(n_samples) / self.n_mean)
+            / np.power(1.0 + np.float32(staleness), np.float32(self.beta)))
 
     def score(self, staleness, sizes) -> np.ndarray:
         n = np.asarray(sizes, np.float32)
         tau = np.asarray(staleness, np.float32)
-        s = n / np.power(1.0 + tau, np.float32(self.beta))
-        return s / max(float(np.mean(s)), 1e-12)
+        return ((n / self.n_mean)
+                / np.power(1.0 + tau, np.float32(self.beta)))
+
+
+class RateControl(Policy):
+    """FedBuff-style server rate control (arXiv:2106.06639): the server
+    admits the first ``sched_rate_limit`` uploads of each aggregation
+    round and answers IDLE to everything after — back-pressure for fast
+    clients so a few hot devices cannot monopolize the buffer while the
+    round's stragglers are still training.
+
+    An idled client keeps its local model and keeps training — the
+    refusal is a capacity signal, not a judgement on the update — so its
+    eventually-admitted upload carries the staleness accumulated while
+    back-pressured.  The scheduler counts ``idle_requests`` apart from
+    rejections.  Note the deadlock guard in ``FLConfig.validate``: with a
+    count-triggered horizon the limit must cover the horizon target, or
+    the buffer can never fill; clock-triggered horizons (timeout/hybrid)
+    are where rate control actually bites."""
+
+    name = "ratelimit"
+
+    def __init__(self, cfg, n_clients: int):
+        super().__init__(cfg, n_clients)
+        self.limit = int(cfg.sched_rate_limit) or int(cfg.k)
+        assert self.limit >= 1, self.limit
+        self._rnd = -1
+        self._admitted = 0
+
+    def verdict(self, cid, staleness, n_samples, rnd) -> str:
+        if rnd != self._rnd:  # rounds are visited in order
+            self._rnd, self._admitted = rnd, 0
+        if self._admitted < self.limit:
+            self._admitted += 1
+            return "admit"
+        return "idle"
 
 
 POLICIES = {p.name: p for p in
-            (Policy, UniformSampling, SEAFLSelective, FedQSAdaptive)}
+            (Policy, UniformSampling, SEAFLSelective, FedQSAdaptive,
+             RateControl)}
 
 
 def make_policy(cfg, n_clients: int) -> Policy:

@@ -113,6 +113,21 @@ def podwise_sums(mesh: Mesh, partial_fn: Callable,
                      out_specs=(P(), P()), check_rep=False)
 
 
+def podwise_bank_sums(mesh: Mesh) -> Callable:
+    """The streaming server reduction: each shard already holds ITS
+    partial sum (one (1, D) row of the AccumBuffer bank, folded on ingest)
+    and its slice of the ingest-weight vector, so the per-shard work is
+    just reading the row and summing the local weights before the same
+    one-psum fold :func:`podwise_sums` does for the buffered channel.
+    Maps ``(bank (n_pod, D) rows on "pod", wvec (n_pod*L,) on "pod")`` to
+    the replicated ``(gsum (D,), wsum ())``."""
+    return podwise_sums(
+        mesh,
+        lambda bank_local, w_local: (bank_local.reshape(-1),
+                                     jnp.sum(w_local)),
+        quantized=False)
+
+
 def shard_rows(x: jax.Array, mesh: Optional[Mesh]) -> jax.Array:
     """Commit an array's rows to the pod axis (no-op without a mesh)."""
     if mesh is None:

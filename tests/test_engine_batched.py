@@ -170,8 +170,30 @@ def test_device_metrics_ring_roundtrip():
     np.testing.assert_allclose(ring.flush(), np.asarray(rows), rtol=1e-6)
 
 
-def test_device_metrics_ring_capacity_guard():
+def test_device_metrics_ring_grows_past_capacity_hint():
+    """capacity is a hint, not a ceiling (PR 6): timeout horizons can
+    aggregate more rounds than the caller projected, so appending past
+    the allocation doubles the buffer and keeps every earlier row."""
     ring = DeviceMetricsRing(1, channels=3)
-    ring.append(jnp.float32(1), jnp.float32(2), jnp.float32(3))
-    with pytest.raises(AssertionError):
-        ring.append(jnp.float32(1), jnp.float32(2), jnp.float32(3))
+    cap0 = ring._buf.shape[0]  # allocation floor (64), not the hint
+    rows = [(float(i), float(2 * i), float(3 * i))
+            for i in range(cap0 + 3)]  # spill past the first allocation
+    for a, b, c in rows:
+        ring.append(jnp.float32(a), jnp.float32(b), jnp.float32(c))
+    assert ring.capacity == ring._buf.shape[0] == 2 * cap0  # one doubling
+    assert len(ring) == len(rows)
+    np.testing.assert_allclose(ring.flush(), np.asarray(rows), rtol=1e-6)
+
+
+def test_device_metrics_ring_sched_pads_variable_k():
+    """append_sched takes any per-round K (queue/timeout horizons):
+    padding sentinels must not land in the histogram or participation
+    counts, and real staleness clips into the overflow bin."""
+    ring = DeviceMetricsRing(4, channels=3, stale_bins=4, n_clients=5)
+    ring.append_sched([0, 1, 2], [0, 1, 2])   # K=3 -> padded to 4
+    ring.append_sched([1], [4])               # K=1
+    ring.append_sched([9, 0], [3, 3])         # 9 clips into overflow bin
+    hist, part = ring.flush_sched()
+    assert hist.tolist() == [2, 2, 1, 1]
+    assert part.tolist() == [1, 1, 1, 2, 1]
+    assert int(hist.sum()) == int(part.sum()) == 6  # no sentinel leaked

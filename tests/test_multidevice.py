@@ -186,21 +186,32 @@ def test_sharded_engine_matches_single_device(setup, aggregation,
         assert a.accuracy == pytest.approx(b.accuracy, abs=2e-3)
         assert a.update_norm == pytest.approx(b.update_norm, rel=1e-3,
                                               abs=1e-5)
+    # q8 on the (default) streaming channel: 1 row vs n shard rows
+    # reassociate the per-upload dequant-accumulate, so the quantization
+    # noise lands slightly differently — f32 stays at the seed tolerance
+    tol = 5e-3 if compress else 1e-4
     np.testing.assert_allclose(np.asarray(en._flat_params),
                                np.asarray(e1._flat_params),
-                               atol=1e-4, rtol=1e-4)
+                               atol=tol, rtol=tol)
 
 
 @multidevice
 def test_sharded_buffer_lives_on_the_mesh(setup):
     """The flat channel must actually be laid out across devices, not
-    replicated on one."""
+    replicated on one — the streaming accumulator bank (the semi-async
+    default since PR 6) and the buffered (K, D)/(K, Dq) parity-oracle
+    rows alike."""
     n = _mesh_n()
     _, eng = _run(setup, "fedsgd", n)
     assert eng._mesh is not None
-    devs = {d for d in eng._buf.sharding.device_set}
-    assert len(devs) == n, eng._buf.sharding
-    _, enq = _run(setup, "fedsgd", n, compress_updates=True)
+    assert eng._streaming and eng._buf is None  # auto -> streaming
+    assert len(eng._accum._bank.sharding.device_set) == n, \
+        eng._accum._bank.sharding
+    _, enb = _run(setup, "fedsgd", n, server_channel="buffered")
+    devs = {d for d in enb._buf.sharding.device_set}
+    assert len(devs) == n, enb._buf.sharding
+    _, enq = _run(setup, "fedsgd", n, compress_updates=True,
+                  server_channel="buffered")
     assert len(enq._qbuf.q.sharding.device_set) == n
 
 

@@ -1,0 +1,281 @@
+"""Streaming accumulate-on-arrival server channel (PR 6 tentpole).
+
+The streaming channel folds every upload into an O(D) running partial
+sum the moment it arrives (discount-at-ingest: the (1+tau)^-alpha
+discount, FedQS scores and fedasync mix rates are composed on host and
+applied at fold time), with the buffered (K, D)/(K, Dq) rows surviving
+as the bit-exact parity oracle.  These tests pin:
+
+  * streaming == buffered BITWISE final params for every aggregation
+    mode on the f32 channel (both engine paths), and within a small
+    relative bound on q8 (the buffered oracle dequantizes inside the
+    reduction with coefficient folding; the streaming path dequantizes
+    per upload — same math, different rounding order);
+  * discount-at-ingest for the reweighting paths (fedqs scores,
+    fedasync rates) — folded weights match the reduce-time oracle;
+  * queue / timeout / hybrid horizon triggers end-to-end, sequential
+    vs horizon-batched bitwise with identical staleness/byte accounting;
+  * FedBuff-style rate control: idled clients keep their local chain,
+    idle_requests are counted apart from rejections, and back-pressure
+    under a timeout horizon cannot livelock the pop loop;
+  * O(D) channel memory — the accumulator footprint is flat in K;
+  * the fold program compiles exactly once per run;
+  * a mesh leg (runs in the multidevice CI job).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import FLConfig
+from repro.core import FLEngine
+from repro.core.flatbuf import AccumBuffer
+from repro.data import build_client_shards, make_dataset, train_test_split
+from repro.models.vision_cnn import build_paper_model
+
+NDEV = jax.device_count()
+multidevice = pytest.mark.skipif(
+    NDEV < 2, reason="needs >1 jax device (set XLA_FLAGS="
+    "--xla_force_host_platform_device_count before importing jax)")
+
+MODES = ("fedsgd", "fedavg", "fedasync", "fedbuff", "fedopt", "sdga")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_dataset("cifar10", n=240, seed=0, hw=16)
+    tr, te = train_test_split(ds)
+    shards = build_client_shards(tr, "iid", n_clients=6, batch_size=16)
+    p0, s0, apply_fn = build_paper_model("cnn", jax.random.PRNGKey(0),
+                                         width=4, image_size=16)
+    return shards, te, p0, s0, apply_fn
+
+
+def _run(setup, aggregation="fedbuff", rounds=4, n_clients=6, k=3, **kw):
+    shards, te, p0, s0, apply_fn = setup
+    slr = kw.pop("server_lr", {"fedsgd": 0.05, "sdga": 0.05,
+                               "fedbuff": 0.05,
+                               "fedopt": 0.005}.get(aggregation, 1.0))
+    cfg = FLConfig(n_clients=n_clients, k=k, mode="semi_async",
+                   aggregation=aggregation, client_lr=0.05, server_lr=slr,
+                   target_accuracy=0.3, **kw)
+    eng = FLEngine(cfg, apply_fn, "image", p0, s0, shards,
+                   te.x[:100], te.y[:100])
+    return eng.run(rounds), eng
+
+
+def _params(eng) -> np.ndarray:
+    return np.asarray(eng._flat_params)
+
+
+def _bitwise(a: np.ndarray, b: np.ndarray) -> bool:
+    return np.array_equal(a.view(np.int32), b.view(np.int32))
+
+
+def _same_accounting(ra, rb) -> None:
+    assert ra.staleness_hist == rb.staleness_hist
+    assert ra.metrics.total_tx_bytes() == rb.metrics.total_tx_bytes()
+    assert ra.metrics.total_rx_bytes() == rb.metrics.total_rx_bytes()
+
+
+# ------------------- streaming vs buffered parity -------------------
+
+
+@pytest.mark.parametrize("aggregation", MODES)
+def test_streaming_matches_buffered_bitwise_f32(setup, aggregation):
+    """Fold-at-ingest == buffer-then-reduce, bit for bit, on the f32
+    channel: both channels consume identical host-composed np.float32
+    weights and XLA folds a (K,)x(K,D) weighted sum into the same
+    sequential FMA chain the accumulator runs."""
+    rs, es = _run(setup, aggregation, server_channel="streaming",
+                  batch_clients=False)
+    rb, eb = _run(setup, aggregation, server_channel="buffered",
+                  batch_clients=False)
+    rx, ex = _run(setup, aggregation, server_channel="streaming",
+                  batch_clients=True)
+    assert es._streaming and not eb._streaming
+    assert _bitwise(_params(es), _params(eb))
+    assert _bitwise(_params(es), _params(ex))
+    _same_accounting(rs, rb)
+    _same_accounting(rs, rx)
+    assert rs.metrics.best_accuracy() == rb.metrics.best_accuracy()
+
+
+@pytest.mark.parametrize("aggregation", ["fedsgd", "fedbuff", "fedasync"])
+def test_streaming_q8_matches_buffered_close(setup, aggregation):
+    """q8: the buffered oracle folds coefficients into the dequant
+    reduction, the streaming path dequantizes per upload — same math,
+    different rounding order, so parity is a tight relative bound."""
+    _, es = _run(setup, aggregation, server_channel="streaming",
+                 compress_updates=True)
+    _, eb = _run(setup, aggregation, server_channel="buffered",
+                 compress_updates=True)
+    ps, pb = _params(es), _params(eb)
+    rel = np.linalg.norm(ps - pb) / max(np.linalg.norm(pb), 1e-12)
+    assert rel < 2e-2, rel
+
+
+def test_fedqs_score_folded_at_ingest(setup):
+    """fedqs reweighting rides the discount-at-ingest path: the
+    bind-time-normalized score folded per upload must reproduce the
+    buffered oracle's reduce-time weighting bitwise."""
+    _, es = _run(setup, "fedbuff", server_channel="streaming",
+                 sched_policy="fedqs")
+    _, eb = _run(setup, "fedbuff", server_channel="buffered",
+                 sched_policy="fedqs")
+    assert _bitwise(_params(es), _params(eb))
+
+
+def test_fedasync_rates_folded_at_ingest(setup):
+    """fedasync's sequential mix — new = prod(1-a_i) p0 + sum-chain —
+    is exactly what the accumulator computes when each fold scales the
+    running sum by (1-a_i): bitwise vs the buffered fori oracle."""
+    _, es = _run(setup, "fedasync", server_channel="streaming")
+    _, eb = _run(setup, "fedasync", server_channel="buffered")
+    assert _bitwise(_params(es), _params(eb))
+
+
+def test_fold_program_compiles_once(setup):
+    """One fold program serves every upload of a run (all slots, all
+    staleness values) — per-upload recompiles would dwarf the fold."""
+    _, es = _run(setup, "fedbuff", server_channel="streaming",
+                 batch_clients=True)
+    assert es._server.fold_compile_count == 1
+    assert es._server.compile_count in (-1, 1)
+
+
+# -------------------------- O(D) memory ----------------------------
+
+
+def test_accumulator_memory_flat_in_k():
+    """The tentpole claim: server channel memory is O(D), independent
+    of how many uploads a horizon admits.  The accumulator is allocated
+    before any fold and never grows — fold K=1 or K=256 into it, the
+    footprint is the same double-buffered 2 x n_rows x D f32 bank."""
+    d = 1024
+
+    def fold(bank, vec, ridx, w, beta):
+        row = jax.lax.dynamic_slice(bank, (ridx, 0), (1, d))
+        return jax.lax.dynamic_update_slice(
+            bank, row * beta + w * vec[None], (ridx, 0))
+
+    acc = AccumBuffer(d, jax.jit(fold, donate_argnums=(0,)))
+    bytes0 = acc.channel_bytes
+    v = jnp.ones((d,), jnp.float32)
+    for i in range(256):
+        acc.fold((v,), w=np.float32(1.0), staleness=0)
+    assert acc.channel_bytes == bytes0 == 2 * d * 4
+    bank, wvec, stats = acc.seal()
+    assert bank.shape == (1, d) and stats["count"] == 256
+    assert wvec.shape == (256,)  # weights are host-side: K floats, not K*D
+
+
+# ------------------------ horizon triggers --------------------------
+
+
+def test_queue_horizon_end_to_end(setup):
+    """queue horizons close after horizon_queue uploads on both
+    channels and both engine paths, with identical accounting."""
+    runs = {}
+    for ch in ("streaming", "buffered"):
+        for batched in (False, True):
+            r, e = _run(setup, "fedsgd", server_channel=ch,
+                        batch_clients=batched, horizon="queue",
+                        horizon_queue=2)
+            runs[(ch, batched)] = (r, _params(e))
+    ref_r, ref_p = runs[("streaming", False)]
+    assert sum(ref_r.staleness_hist.values()) == 2 * 4  # 2 uploads/round
+    for (ch, batched), (r, p) in runs.items():
+        assert _bitwise(ref_p, p), (ch, batched)
+        _same_accounting(ref_r, r)
+
+
+@pytest.mark.parametrize("horizon,kw", [
+    ("timeout", dict(horizon_timeout_s=3.0)),
+    ("hybrid", dict(horizon_timeout_s=3.0, horizon_queue=4)),
+])
+def test_clock_horizons_seq_matches_batched(setup, horizon, kw):
+    """timeout/hybrid horizons admit a variable number of uploads per
+    aggregation; the sequential oracle and the horizon-batched path must
+    still pop the identical schedule, stamp the identical aggregation
+    clock, and agree bitwise."""
+    rs, es = _run(setup, "fedbuff", batch_clients=False, horizon=horizon,
+                  **kw)
+    rb, eb = _run(setup, "fedbuff", batch_clients=True, horizon=horizon,
+                  **kw)
+    assert es._streaming and eb._streaming  # auto -> streaming
+    assert _bitwise(_params(es), _params(eb))
+    _same_accounting(rs, rb)
+    if horizon == "timeout":
+        # the clock admits more than k uploads per round here — the very
+        # capacity-independence the streaming channel exists for
+        assert sum(rs.staleness_hist.values()) > 3 * 4
+
+
+def test_horizon_validation():
+    with pytest.raises(AssertionError):
+        FLConfig(mode="semi_async", horizon="timeout").validate()  # no s
+    with pytest.raises(AssertionError):
+        FLConfig(mode="sync", horizon="timeout",
+                 horizon_timeout_s=1.0).validate()
+    with pytest.raises(AssertionError):
+        FLConfig(mode="semi_async", horizon="timeout",
+                 horizon_timeout_s=1.0,
+                 server_channel="buffered").validate()
+    with pytest.raises(AssertionError):
+        FLConfig(mode="sync", server_channel="streaming").validate()
+
+
+# -------------------------- rate control ----------------------------
+
+
+def test_ratelimit_idle_accounting(setup):
+    """Back-pressure under a timeout horizon: over-limit uploads idle
+    (client keeps its local chain — NOT a discard-and-resync), the idle
+    count is reported apart from rejections, and the idled events'
+    clock still closes the horizon (no livelock)."""
+    rs, es = _run(setup, "fedbuff", batch_clients=False,
+                  horizon="timeout", horizon_timeout_s=3.0,
+                  sched_policy="ratelimit", sched_rate_limit=2)
+    rb, eb = _run(setup, "fedbuff", batch_clients=True,
+                  horizon="timeout", horizon_timeout_s=3.0,
+                  sched_policy="ratelimit", sched_rate_limit=2)
+    assert rs.sched_stats["idle_requests"] > 0
+    assert rs.sched_stats["rejected_uploads"] == 0
+    assert (rs.sched_stats["idle_requests"]
+            == rb.sched_stats["idle_requests"])
+    assert np.array_equal(np.asarray(rs.sched_stats["participation"]),
+                          np.asarray(rb.sched_stats["participation"]))
+    assert _bitwise(_params(es), _params(eb))
+    _same_accounting(rs, rb)
+
+
+def test_ratelimit_deadlock_guard():
+    """A rate limit below a count-triggered horizon's target can never
+    fill the buffer — validate() must refuse it."""
+    with pytest.raises(AssertionError):
+        FLConfig(mode="semi_async", k=4, sched_policy="ratelimit",
+                 sched_rate_limit=2).validate()
+    # clock-triggered horizons close on time: any limit is safe
+    FLConfig(mode="semi_async", k=4, sched_policy="ratelimit",
+             sched_rate_limit=2, horizon="timeout",
+             horizon_timeout_s=1.0).validate()
+
+
+# ---------------------------- mesh leg ------------------------------
+
+
+@multidevice
+@pytest.mark.parametrize("aggregation", ["fedbuff", "fedavg", "fedasync"])
+def test_streaming_mesh_matches_buffered(setup, aggregation):
+    """Mesh streaming: block-assigned fold shards reproduce the
+    buffered row sharding's per-pod partial sums bitwise, and the
+    accumulator bank actually lives across the pod axis."""
+    n = 4 if NDEV >= 4 else 2
+    slr = 1.0 if aggregation in ("fedavg", "fedasync") else 0.05
+    _, es = _run(setup, aggregation, server_channel="streaming",
+                 n_clients=6, k=n, devices=n, server_lr=slr)
+    _, eb = _run(setup, aggregation, server_channel="buffered",
+                 n_clients=6, k=n, devices=n, server_lr=slr)
+    assert _bitwise(_params(es), _params(eb))
+    assert len(es._accum._bank.sharding.device_set) == n
