@@ -22,10 +22,16 @@ buffered updates and D in {1M, 4M} parameters:
     then one O(D) finalize closes the horizon.  Server channel memory is
     the double-buffered 2 x D accumulator — flat in K — vs the buffered
     paths' K x D resident rows.
+  * ``q4``: the packed int4 wire (PR 7) — two lanes per byte, unpacked +
+    dequantized inside the fused reduction (8x fewer channel HBM bytes
+    than f32).
+  * ``topk``: the sparse wire (PR 7) — (indices, values) rows aggregated
+    by the fused gather-dequant-scatter program; the server never
+    materializes a dense row per upload.
 
-Writes machine-readable ``BENCH_agg.json`` (``schema_version`` 3: 2 +
-the streaming column — folds/sec, µs/aggregation and measured peak
-channel bytes per grid point, with the O(D)-flat-in-K claim asserted at
+Writes machine-readable ``BENCH_agg.json`` (``schema_version`` 4: 3 +
+the q4/topk wire columns — µs/aggregation, channel bytes and per-upload
+wire bytes per grid point, with the O(D)-flat-in-K claim asserted at
 report time) so the perf trajectory is tracked across PRs, and prints
 all numbers per point.
 
@@ -46,12 +52,14 @@ import numpy as np
 
 from repro.core import aggregation as agg
 from repro.core import flatbuf
+from repro.kernels.quantize import payload_nbytes
 
 KS = (8, 16, 64)
 DS = (1 << 20, 1 << 22)  # 1M, 4M
 SERVER_LR = 0.05
 OUT_PATH = "BENCH_agg.json"
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
+TOPK_FRAC = 0.1
 
 
 def _leaf_shapes(d: int, n_leaves: int = 48):
@@ -136,7 +144,7 @@ def bench_point(K: int, d: int) -> dict:
     seed_us = _time_rounds(seed_round, iters)
 
     # --- flat path: one jitted donating program over the (K, D) buffer ---
-    codec = flatbuf.PytreeCodec(params)
+    codec = flatbuf.PytreeCodec(params, topk_frac=TOPK_FRAC)
     srv = agg.FlatServer("fedsgd", codec.d, server_lr=SERVER_LR)
     buf = jnp.asarray(np.stack(
         [np.concatenate([np.ravel(np.asarray(l)) for l in
@@ -178,6 +186,36 @@ def bench_point(K: int, d: int) -> dict:
         tree = codec.unravel(state_q8["p"])
         _block(tree)
 
+    # --- q4 path: packed int4 buffer, unpack-dequant fused in-program ---
+    cids = jnp.arange(K, dtype=jnp.int32)
+    ctrs = jnp.zeros((K,), jnp.int32)
+    pbuf, s4buf = codec.quantize_rows_q4_nores(buf, 0, cids, ctrs)
+    pbuf.block_until_ready()
+    srv_q4 = agg.FlatServer("fedsgd", codec.d, server_lr=SERVER_LR,
+                            wire="q4", qblock=codec.qblock)
+    state_q4 = {"p": codec.ravel(params),
+                "opt": srv_q4.init_opt(codec.ravel(params))}
+
+    def q4_round():
+        state_q4["p"], state_q4["opt"], _ = srv_q4.step(
+            state_q4["p"], (pbuf, s4buf), w, state_q4["opt"])
+        tree = codec.unravel(state_q4["p"])
+        _block(tree)
+
+    # --- topk path: sparse rows, fused gather-dequant-scatter server ---
+    tidx, tqv, tsc = codec.quantize_rows_topk_nores(buf)
+    tidx.block_until_ready()
+    srv_tk = agg.FlatServer("fedsgd", codec.d, server_lr=SERVER_LR,
+                            wire="topk", qblock=codec.qblock)
+    state_tk = {"p": codec.ravel(params),
+                "opt": srv_tk.init_opt(codec.ravel(params))}
+
+    def topk_round():
+        state_tk["p"], state_tk["opt"], _ = srv_tk.step(
+            state_tk["p"], (tidx, tqv, tsc), w, state_tk["opt"])
+        tree = codec.unravel(state_tk["p"])
+        _block(tree)
+
     # --- streaming path: K accumulate-on-arrival folds + O(D) finalize ---
     # weights are host-composed at ingest (discount-at-ingest), so the
     # server runs with external_discount; fedsgd's final weight is 1.0
@@ -202,24 +240,36 @@ def bench_point(K: int, d: int) -> dict:
         _block(tree)
 
     # interleave the flat paths so host drift hits them equally
-    flat_us, q8_us, stream_us, ingest_us = _time_interleaved(
-        [flat_round, q8_round, stream_round, buffered_ingest], iters)
+    flat_us, q8_us, q4_us, topk_us, stream_us, ingest_us = \
+        _time_interleaved([flat_round, q8_round, q4_round, topk_round,
+                           stream_round, buffered_ingest], iters)
     # -1 = compile count unavailable on this jax version, not a recompile
     assert srv.compile_count in (1, -1), \
         "flat server recompiled during bench"
     assert srv_q8.compile_count in (1, -1), \
         "q8 server recompiled during bench"
+    assert srv_q4.compile_count in (1, -1), \
+        "q4 server recompiled during bench"
+    assert srv_tk.compile_count in (1, -1), \
+        "topk server recompiled during bench"
     assert srv_s.fold_compile_count in (1, -1), \
         "streaming fold recompiled during bench"
 
+    wire_kw = dict(d=codec.d, dq=codec.dq, n_qblocks=codec.n_qblocks,
+                   nk=codec.nk, nk_qblocks=codec.nk_qblocks)
+    wire_f32 = payload_nbytes("f32", **wire_kw)
     return {"K": K, "D": d, "n_leaves": len(shapes), "iters": iters,
             "seed_us_per_agg": round(seed_us, 1),
             "flat_us_per_agg": round(flat_us, 1),
             "q8_us_per_agg": round(q8_us, 1),
+            "q4_us_per_agg": round(q4_us, 1),
+            "topk_us_per_agg": round(topk_us, 1),
             "stream_us_per_agg": round(stream_us, 1),
             "seed_rounds_per_sec": round(1e6 / seed_us, 2),
             "flat_rounds_per_sec": round(1e6 / flat_us, 2),
             "q8_rounds_per_sec": round(1e6 / q8_us, 2),
+            "q4_rounds_per_sec": round(1e6 / q4_us, 2),
+            "topk_rounds_per_sec": round(1e6 / topk_us, 2),
             "stream_rounds_per_sec": round(1e6 / stream_us, 2),
             "stream_folds_per_sec": round(K * 1e6 / stream_us, 1),
             "buffered_ingest_us_per_row": round(ingest_us / K, 1),
@@ -235,25 +285,44 @@ def bench_point(K: int, d: int) -> dict:
             "stream_channel_bytes": acc.channel_bytes,
             "buffered_channel_bytes": K * codec.d * 4,
             "q8_channel_bytes": int(qbuf.nbytes + sbuf.nbytes),
+            "q4_channel_bytes": int(pbuf.nbytes + s4buf.nbytes),
+            "topk_channel_bytes": int(tidx.nbytes + tqv.nbytes
+                                      + tsc.nbytes),
+            # per-upload transmitted bytes (payload_nbytes wire accounting)
+            "wire_bytes_f32": wire_f32,
+            "wire_bytes_q8": payload_nbytes("q8", **wire_kw),
+            "wire_bytes_q4": payload_nbytes("q4", **wire_kw),
+            "wire_bytes_topk": payload_nbytes("topk", **wire_kw),
+            "wire_ratio_q4": round(
+                wire_f32 / payload_nbytes("q4", **wire_kw), 2),
+            "wire_ratio_topk": round(
+                wire_f32 / payload_nbytes("topk", **wire_kw), 2),
+            "topk_frac": TOPK_FRAC,
             "speedup": round(seed_us / flat_us, 2),
             "speedup_q8_vs_flat": round(flat_us / q8_us, 2),
-            "speedup_q8_vs_seed": round(seed_us / q8_us, 2)}
+            "speedup_q8_vs_seed": round(seed_us / q8_us, 2),
+            "speedup_q4_vs_flat": round(flat_us / q4_us, 2),
+            "speedup_topk_vs_flat": round(flat_us / topk_us, 2)}
 
 
 def main(ks=KS, ds=DS, out_path: str = OUT_PATH) -> dict:
     entries = []
     print("# Server aggregation: seed tree_map/stack vs flat f32 buffer vs "
-          "quantized int8 buffer vs streaming accumulator (same host)")
-    print("K,D,seed_us,flat_us,q8_us,stream_us,flat_speedup,q8_vs_flat,"
-          "stream_chan_bytes")
+          "q8/q4/topk wire buffers vs streaming accumulator (same host)")
+    print("K,D,seed_us,flat_us,q8_us,q4_us,topk_us,stream_us,flat_speedup,"
+          "q8_vs_flat,q4_vs_flat,topk_vs_flat,wire_ratio_q4,stream_chan_bytes")
     for d in ds:
         for K in ks:
             e = bench_point(K, d)
             entries.append(e)
             print(f"{e['K']},{e['D']},{e['seed_us_per_agg']},"
                   f"{e['flat_us_per_agg']},{e['q8_us_per_agg']},"
+                  f"{e['q4_us_per_agg']},{e['topk_us_per_agg']},"
                   f"{e['stream_us_per_agg']},"
                   f"{e['speedup']}x,{e['speedup_q8_vs_flat']}x,"
+                  f"{e['speedup_q4_vs_flat']}x,"
+                  f"{e['speedup_topk_vs_flat']}x,"
+                  f"{e['wire_ratio_q4']}x,"
                   f"{e['stream_channel_bytes']}",
                   flush=True)
     # the tentpole memory claim, asserted on the measured numbers: the

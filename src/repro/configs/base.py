@@ -182,18 +182,47 @@ class FLConfig:
     (``pallas_interpret`` routes the kernel bodies through the Pallas
     interpreter for validation).
 
-    Quantized channel (``compress_updates=True``): uploads travel and are
-    buffered as int8 rows with one f32 absmax scale per ``quant_block``
-    lanes, and the server round fuses the dequantize into the aggregation
-    (``repro.kernels.safl_agg.*_q8``).  Gradient-target uploads keep a
-    client-side error-feedback residual (``error_feedback``) so the
-    quantization noise telescopes across rounds instead of accumulating;
-    model-target uploads (fedavg / fedasync) quantize the weights
-    themselves (no residual — weights do not accumulate).  Transmitted
-    bytes are accounted at the quantized payload size (int8 values + f32
-    block scales + envelope) for every aggregation target, including the
-    fedavg/fedasync non-trainable BN-state payload (shipped through the
-    same ravel_q8 wire format as the weights).
+    Wire formats (``wire``; ``compress_updates=True`` is the legacy alias
+    for ``wire="q8"``): what one upload puts on the channel, per coord of
+    the ``quant_block``-padded flat dimension Dq (d raw coords):
+
+    ======  ==================  =============  ==========================
+    wire    bytes/upload        err. feedback  fused server entry points
+    ======  ==================  =============  ==========================
+    f32     4d                  none (exact)   ``safl_aggregate`` /
+                                               ``safl_fold``
+    q8      Dq + 4Dq/B          residual       ``safl_aggregate_q8`` /
+            (~4x)               (grad tgts)    ``safl_fold_q8``
+    q4      Dq/2 + 4Dq/B        residual +     ``safl_aggregate_q4`` /
+            (~8x)               stoch. round   ``safl_fold_q4``
+    topk    5nk + 4nk/B         residual incl. ``safl_aggregate_topk`` /
+            (~8x @ 10%)         dropped coords ``safl_fold_topk``
+    ======  ==================  =============  ==========================
+
+    (B = ``quant_block``; nk = ``ceil(topk_frac * d)`` rounded up to a
+    B multiple.)  ``q8``: int8 rows, one f32 absmax scale per B lanes,
+    server fuses the dequantize into the aggregation.  ``q4``: two int4
+    lanes per byte on the [-7, 7] grid with *stochastic rounding* — the
+    uniform draws are keyed per (client, upload counter) from the jax
+    PRNG (the ``sched.timing`` jitter rule), so the sequential and
+    batched engine paths quantize bit-identically; the rounding is
+    unbiased, so the error-feedback residual telescopes.  ``topk``: only
+    the nk largest-|coordinate| entries travel, as (int32 index, int8
+    value) pairs; the residual carries the dropped coordinates in full,
+    and the server aggregates through a fused
+    gather-dequant-scatter-accumulate without materializing dense rows.
+    ``topk`` is *gradient-only*: fedavg / fedasync upload weights, and a
+    sparse weight average would zero untransmitted coordinates.
+
+    Gradient-target uploads keep a client-side error-feedback residual
+    (``error_feedback``) so the quantization noise telescopes across
+    rounds instead of accumulating; model-target uploads (fedavg /
+    fedasync) quantize the weights themselves (no residual — weights do
+    not accumulate).  Transmitted bytes are accounted at the wire payload
+    size (:func:`repro.kernels.quantize.payload_nbytes` + envelope) for
+    every aggregation target, including the fedavg/fedasync non-trainable
+    BN-state payload (shipped through the ravel_q8 wire format on every
+    lossy wire).
 
     Multi-device / compilation policy: ``devices`` shards the flat channel
     and the batched waves over a mesh "pod" axis, ``wave_impl`` picks the
@@ -292,9 +321,12 @@ class FLConfig:
     # arrivals to idle (counted separately from rejections; 0 -> k)
     sched_rate_limit: int = 0
     sched_seed: int = 0  # PRNG seed for timing jitter + policy sampling
-    # beyond-paper: int8 quantized flat channel (repro.core.flatbuf /
-    # repro.kernels.safl_agg q8 kernels; repro.core.compression for the
-    # fedasync tree path)
+    # beyond-paper: lossy wire formats for the flat channel (see the
+    # class docstring table; repro.kernels.quantize is the quantizer
+    # home).  "f32" | "q8" | "q4" | "topk"; compress_updates=True is the
+    # legacy alias for wire="q8" (kept for older configs/sweeps).
+    wire: str = "f32"
+    topk_frac: float = 0.1  # topk wire: fraction of coords kept
     compress_updates: bool = False
     quant_block: int = 512  # lanes per f32 absmax scale (wire granule)
     error_feedback: bool = True  # client-side residual on gradient targets
@@ -350,6 +382,21 @@ class FLConfig:
         assert (8 <= self.quant_block <= 2048
                 and self.quant_block & (self.quant_block - 1) == 0), \
             "quant_block must be a power of two in [8, 2048]"
+        # wire-format ladder (see the class docstring table)
+        assert self.wire in ("f32", "q8", "q4", "topk"), self.wire
+        if self.compress_updates:
+            # legacy alias: only meaningful as "q8"; an explicit
+            # different wire contradicts it
+            assert self.wire in ("f32", "q8"), \
+                (f"compress_updates=True is the legacy alias for "
+                 f"wire='q8' — it conflicts with wire='{self.wire}'")
+        assert 0.0 < self.topk_frac <= 1.0, \
+            f"topk_frac={self.topk_frac} must be in (0, 1]"
+        if self.wire == "topk":
+            assert self.aggregation not in ("fedavg", "fedasync"), \
+                ("wire='topk' is gradient-only: fedavg/fedasync upload "
+                 "weights, and a sparse weight average would zero every "
+                 "untransmitted coordinate")
         # every eval_every-th round is evaluated; 0 would record nothing
         assert self.eval_every >= 1, "eval_every must be >= 1"
         # scheduling subsystem knobs (repro.sched)

@@ -249,6 +249,19 @@ class FlatServer:
     step / update-norm pass — 4x fewer HBM bytes for the K x D read that
     dominates memory-bound large-D rounds.
 
+    ``wire`` generalizes that flag to the full wire-format ladder
+    (:data:`repro.kernels.quantize.WIRES`): ``"f32"`` / ``"q8"`` keep the
+    two legacy channels (``None`` defers to ``quantized``), ``"q4"``
+    consumes the *packed* two-nibbles-per-byte buffer
+    (``QuantBuffer(packed=True)`` views — (K, Dq/2) bytes) through the
+    fused unpack-dequant kernels (:func:`safl_aggregate_q4` et al.), and
+    ``"topk"`` consumes the sparse ``(idx int32 (K, nk), qv int8 (K, nk),
+    scales (K, nk/qblock))`` triple (:class:`repro.core.flatbuf.TopkBuffer`
+    views) through a fused gather-dequant-scatter-accumulate — the server
+    never materializes a dense (K, D) buffer.  ``topk`` is gradient-only:
+    the weight-upload modes (fedavg, fedasync) are rejected because a
+    sparse weight average would zero every untransmitted coordinate.
+
     ``mesh`` (a 1-D "pod" mesh, :func:`repro.sharding.flat.make_pod_mesh`)
     makes the round multi-device: the buffer rows live sharded
     ``P("pod", None)`` and the reduction becomes a per-shard partial
@@ -290,9 +303,11 @@ class FlatServer:
                  donate: Optional[bool] = None,
                  mesh=None,
                  external_discount: bool = False,
-                 fedasync_rates: bool = False):
+                 fedasync_rates: bool = False,
+                 wire: Optional[str] = None):
         from repro.kernels import ref as _ref
         from repro.kernels import safl_agg as _k
+        from repro.kernels.quantize import WIRES
         from repro.sharding import flat as _shflat
 
         assert mode in self.MODES, mode
@@ -303,10 +318,24 @@ class FlatServer:
         use_pallas = self.backend != "xla"
         interpret = self.backend == "pallas_interpret"
         bd = block_d or _k.BLOCK_D
+        # ``wire`` generalizes the legacy quantized flag: None defers to
+        # it (q8 when True), an explicit name wins.
+        wire = wire or ("q8" if quantized else "f32")
+        assert wire in WIRES, wire
+        quantized = wire == "q8"
+        q4 = wire == "q4"
+        topk = wire == "topk"
+        self.wire = wire
         self.quantized = quantized
+        if topk:
+            # sparse uploads only make sense for *gradient-delta* targets:
+            # averaging sparse model weights would zero the untransmitted
+            # coordinates instead of leaving them at the server value
+            assert mode not in ("fedavg", "fedasync"), \
+                f"wire='topk' is gradient-only; mode={mode} uploads weights"
         qb = qblock or _k.QBLOCK
-        if quantized and use_pallas:
-            # the q8 Pallas kernels tile scales as (K, block_d/qblock);
+        if (quantized or q4) and use_pallas:
+            # the q8/q4 Pallas kernels tile scales as (K, block_d/qblock);
             # the xla streaming path has no tiling constraint
             assert bd % qb == 0, \
                 f"block_d={bd} must be a multiple of qblock={qb}"
@@ -345,10 +374,11 @@ class FlatServer:
                     g = _k.safl_aggregate_q8(
                         q, scales, w, mode="sum", qblock=qb, block_d=bd,
                         interpret=interpret)
-                elif q.shape[0] * n_pod >= _ref.INT8_DOT_MIN_K:
-                    # large-K int8-dot: quantize this shard's reduction
-                    # coefficients against the pod-wide absmax scale —
-                    # the same grid the single-device round uses
+                elif _ref.int8dot_auto(q.shape[0] * n_pod):
+                    # large-K int8-dot (platform-gated — XLA CPU emulates
+                    # int8 GEMM; see int8dot_auto): quantize this shard's
+                    # reduction coefficients against the pod-wide absmax
+                    # scale — the same grid the single-device round uses
                     cs = jax.lax.pmax(
                         _ref.int8dot_coeff_scale(scales, w),
                         _shflat.POD_AXIS)
@@ -357,6 +387,23 @@ class FlatServer:
                 else:
                     g = _ref.weighted_sum_q8_ref(q, scales, w, qb,
                                                  int8_dot=False)
+            elif q4:
+                qp, scales = buf_l
+                if use_pallas:
+                    g = _k.safl_aggregate_q4(
+                        qp, scales, w, mode="sum", qblock=qb, block_d=bd,
+                        interpret=interpret)
+                else:
+                    g = _ref.weighted_sum_q4_ref(qp, scales, w, qb)
+            elif topk:
+                idx, qv, scales = buf_l
+                if use_pallas:
+                    g = _k.safl_aggregate_topk(
+                        idx, qv, scales, w, d, qblock=qb, block_d=bd,
+                        interpret=interpret)
+                else:
+                    g = _ref.topk_weighted_sum_ref(idx, qv, scales, w, d,
+                                                   qb)
             elif use_pallas:
                 g = _k.safl_aggregate(buf_l, w, mode="sum", block_d=bd,
                                       interpret=interpret)
@@ -364,8 +411,9 @@ class FlatServer:
                 g = _ref.weighted_sum_ref(buf_l, w)
             return g, jnp.sum(w)
 
-        pod_reduce = (_shflat.podwise_sums(self.mesh, _partial_sums,
-                                           quantized)
+        pod_reduce = (_shflat.podwise_sums(
+            self.mesh, _partial_sums,
+            3 if topk else (2 if (quantized or q4) else 1))
                       if self.mesh is not None else None)
 
         def _adam_step(p0, g, opt, params_dtype):
@@ -427,6 +475,25 @@ class FlatServer:
             wsum = jnp.maximum(jnp.sum(w), 1e-12)
             return _ref.weighted_sum_q8_ref(q, scales, w / wsum, qb)[:d]
 
+        def q4_mean(buf, w):
+            """q8_mean's packed-int4 sibling: discount-weighted mean over
+            the packed buffer -> (d,) f32, normalization folded into the
+            per-row coefficients."""
+            qp, scales = buf
+            wsum = jnp.maximum(jnp.sum(w), 1e-12)
+            return _ref.weighted_sum_q4_ref(qp, scales, w / wsum, qb)[:d]
+
+        def topk_sum(buf, w):
+            """Unnormalized weighted scatter-sum of the sparse rows ->
+            (d,) f32 (the fused gather-dequant-scatter kernel on the
+            Pallas backends; the server never materializes a dense row)."""
+            idx, qv, scales = buf
+            if use_pallas:
+                return _k.safl_aggregate_topk(
+                    idx, qv, scales, w, d, qblock=qb, block_d=bd,
+                    interpret=interpret)
+            return _ref.topk_weighted_sum_ref(idx, qv, scales, w, d, qb)
+
         def _step(params, buf, wvec, opt):
             p0 = params.astype(jnp.float32)
             wmass = None
@@ -439,12 +506,22 @@ class FlatServer:
                     q, scales = buf
                     new, wmass = _ref.fedasync_rates_flat_q8_ref(
                         q, scales, wvec, params, qb)
+                elif q4:
+                    qp, scales = buf
+                    new, wmass = _ref.fedasync_rates_flat_q4_ref(
+                        qp, scales, wvec, params, qb)
                 else:
                     new, wmass = _ref.fedasync_rates_flat_ref(
                         buf, wvec, params)
                 new_opt = opt
             elif pod_reduce is not None:
                 new, new_opt = _mesh_step(params, buf, wvec, opt)
+            elif topk:
+                # every topk mode reduces through the one scatter-sum +
+                # the shared _from_sums step body (gradient targets only)
+                w = discounted(wvec)
+                gsum = topk_sum(buf, w)
+                new, new_opt = _from_sums(params, gsum, jnp.sum(w), opt)
             elif mode in ("fedsgd", "fedavg", "fedbuff", "fedasync"):
                 kmode = {"fedavg": "avg", "fedasync": "mix"}.get(mode,
                                                                  "fedsgd")
@@ -454,6 +531,16 @@ class FlatServer:
                     q, scales = buf
                     new = _k.safl_aggregate_q8(
                         q, scales, wvec,
+                        None if mode == "fedavg" else params,
+                        server_lr=server_lr, mode=kmode, qblock=qb,
+                        block_d=bd, interpret=interpret, alpha=alpha,
+                        discount=disc)
+                    if mode == "fedavg":
+                        new = new[:d]
+                elif use_pallas and q4:
+                    qp, scales = buf
+                    new = _k.safl_aggregate_q4(
+                        qp, scales, wvec,
                         None if mode == "fedavg" else params,
                         server_lr=server_lr, mode=kmode, qblock=qb,
                         block_d=bd, interpret=interpret, alpha=alpha,
@@ -480,6 +567,19 @@ class FlatServer:
                             new = g
                         else:
                             new = (p0 - server_lr * g).astype(params.dtype)
+                elif q4:
+                    if mode == "fedasync":
+                        qp, scales = buf
+                        g = _ref.weighted_sum_q4_ref(
+                            qp, scales, wvec.astype(jnp.float32), qb)[:d]
+                        new = ((1.0 - jnp.sum(wvec.astype(jnp.float32)))
+                               * p0 + g).astype(params.dtype)
+                    else:
+                        g = q4_mean(buf, discounted(wvec))
+                        if mode == "fedavg":
+                            new = g
+                        else:
+                            new = (p0 - server_lr * g).astype(params.dtype)
                 else:
                     w = discounted(wvec)
                     if mode == "fedasync":
@@ -498,6 +598,14 @@ class FlatServer:
                         momentum=momentum, ema_anchor=ema_anchor,
                         ema_decay=ema_decay, qblock=qb, block_d=bd,
                         interpret=interpret, discount=sdga_disc)
+                elif use_pallas and q4:
+                    qp, scales = buf
+                    new, m, e = _k.sdga_aggregate_q4(
+                        qp, scales, wvec, params, opt["momentum"],
+                        opt["ema"], server_lr=server_lr, alpha=alpha,
+                        momentum=momentum, ema_anchor=ema_anchor,
+                        ema_decay=ema_decay, qblock=qb, block_d=bd,
+                        interpret=interpret, discount=sdga_disc)
                 elif use_pallas:
                     new, m, e = _k.sdga_aggregate(
                         buf, wvec, params, opt["momentum"], opt["ema"],
@@ -505,9 +613,10 @@ class FlatServer:
                         ema_anchor=ema_anchor, ema_decay=ema_decay,
                         block_d=bd, interpret=interpret,
                         discount=sdga_disc)
-                elif quantized:
-                    # the shared SDGA step over the streaming q8 mean
-                    g = q8_mean(buf, discounted(wvec))
+                elif quantized or q4:
+                    # the shared SDGA step over the streaming q8/q4 mean
+                    g = (q8_mean if quantized else q4_mean)(
+                        buf, discounted(wvec))
                     new, m, e = _ref.sdga_step_from_mean(
                         g, params, opt["momentum"], opt["ema"],
                         server_lr=server_lr, momentum=momentum,
@@ -535,6 +644,8 @@ class FlatServer:
                 w = discounted(wvec)
                 if quantized:
                     g = q8_mean(buf, w)
+                elif q4:
+                    g = q4_mean(buf, w)
                 else:
                     wsum = jnp.maximum(jnp.sum(w), 1e-12)
                     g = jnp.einsum("k,kd->d", w,
@@ -581,6 +692,36 @@ class FlatServer:
                     folded = _ref.fold_q8_ref(row, q_row, s_row, w, qb)
                 return jax.lax.dynamic_update_slice(
                     bank, folded[None], (ridx, jnp.int32(0)))
+        elif q4:
+            def _fold(bank, p_row, s_row, ridx, w, beta):
+                row = jax.lax.dynamic_slice(
+                    bank, (ridx, jnp.int32(0)), (1, bank.shape[1]))[0]
+                if use_pallas:
+                    folded = _k.safl_fold_q4(
+                        row, p_row, s_row, w, beta if fold_beta else 1.0,
+                        qblock=qb, block_d=bd, interpret=interpret)
+                elif fold_beta:
+                    folded = _ref.fold_q4_ref(row, p_row, s_row, w, qb,
+                                              beta)
+                else:
+                    folded = _ref.fold_q4_ref(row, p_row, s_row, w, qb)
+                return jax.lax.dynamic_update_slice(
+                    bank, folded[None], (ridx, jnp.int32(0)))
+        elif topk:
+            # topk is gradient-only (no fedasync), so beta is always the
+            # constant 1.0 — the scatter-accumulate never decays the bank
+            def _fold(bank, idx_row, qv_row, s_row, ridx, w, beta):
+                row = jax.lax.dynamic_slice(
+                    bank, (ridx, jnp.int32(0)), (1, bank.shape[1]))[0]
+                if use_pallas:
+                    folded = _k.safl_fold_topk(
+                        row, idx_row, qv_row, s_row, w,
+                        qblock=qb, block_d=bd, interpret=interpret)
+                else:
+                    folded = _ref.fold_topk_ref(row, idx_row, qv_row,
+                                                s_row, w, qb)
+                return jax.lax.dynamic_update_slice(
+                    bank, folded[None], (ridx, jnp.int32(0)))
         else:
             def _fold(bank, vec, ridx, w, beta):
                 row = jax.lax.dynamic_slice(
@@ -600,8 +741,9 @@ class FlatServer:
         #: with bank[ridx] <- beta*bank[ridx] + w*payload, in place.  The
         #: row index and both scalars are traced, so every upload of a
         #: run reuses ONE compiled program (the one-compile guard —
-        #: :attr:`fold_compile_count`).  Payload is (vec,) f32 or
-        #: (q_row, s_row) on the quantized channel.
+        #: :attr:`fold_compile_count`).  Payload is (vec,) f32,
+        #: (q_row, s_row) on the q8/q4 channels, or the sparse
+        #: (idx_row, qv_row, s_row) triple on topk.
         self.fold_program = jax.jit(_fold, donate_argnums=(0,))
 
         pod_bank_reduce = (_shflat.podwise_bank_sums(self.mesh)

@@ -13,6 +13,14 @@ same local run:
 The per-client epoch is one jitted ``lax.scan`` over stacked batches with a
 validity mask (clients have heterogeneous shard sizes; shards are padded to a
 common batch count so one XLA program serves every client).
+
+Uploads leave this module as dense f32 rows (or pytrees on the sequential
+path); the engine's wire format (``FLConfig.wire``: f32 | q8 | q4 | topk)
+is applied downstream by the :class:`repro.core.flatbuf.PytreeCodec`
+quantizer programs, and transmitted-byte accounting for every format lives
+in :func:`repro.kernels.quantize.payload_nbytes` — client code is
+wire-agnostic by design (the error-feedback residual is engine state, not
+client state, so lossy wires never change the local SGD trajectory).
 """
 from __future__ import annotations
 

@@ -14,8 +14,8 @@ construction:
     buffer argument *donated*, so XLA updates the row in place — uploads
     never reallocate the K x D backing store.
 
-The *quantized* channel (``compress_updates``) makes int8 the native wire
-and buffer format instead of a lossy detour through f32:
+The *quantized* channels (``FLConfig.wire``) make the compressed payload
+the native wire and buffer format instead of a lossy detour through f32:
 
   * ``PytreeCodec.ravel_delta_q8`` emits a client upload as ONE fused XLA
     program — diff + ravel + error-feedback add + blockwise absmax int8
@@ -24,8 +24,23 @@ and buffer format instead of a lossy detour through f32:
     the next upload so the noise telescopes instead of accumulating).
     ``ravel_q8`` is the model-target variant (FedAvg weights), and
     ``quantize_rows`` the vmapped form for the batched SFL round.
-  * :class:`QuantBuffer` preallocates the int8 (K, Dq) rows plus the
+  * ``ravel_delta_q4`` is the packed-int4 variant: the same fused program
+    quantizes onto the symmetric [-7, 7] grid with *stochastic rounding*
+    and packs two lanes per byte.  The rounding draws come from a
+    counter-keyed PRNG — ``fold_in(fold_in(PRNGKey(seed), cid),
+    upload_counter)``, the :mod:`repro.sched.timing` jitter rule — built
+    INSIDE the jitted program from traced ints, so the sequential and
+    batched engine paths (vmap over lanes) reproduce the draws
+    bit-identically.
+  * ``ravel_delta_topk`` sparsifies instead: top-|x| ``topk_frac`` of
+    coordinates as (int32 index, int8 value) pairs with BLOCK-granule
+    scales over the *compacted* value array, error feedback carrying
+    both the dropped coordinates and the value-quantization error.
+  * :class:`QuantBuffer` preallocates the int8 (K, Dq) rows — or the
+    (K, Dq/2) packed-nibble rows with ``packed=True`` — plus the
     (K, Dq/qblock) f32 scales and writes slots with both arrays donated.
+    :class:`TopkBuffer` is the sparse counterpart (idx/values/scales
+    triple, padding slots carry idx == d so the scatter drops them).
 
 Everything downstream (:class:`repro.core.aggregation.FlatServer`, the
 fused dequant-aggregate Pallas kernels in :mod:`repro.kernels.safl_agg`)
@@ -34,6 +49,7 @@ operates on the (K, D) buffer — f32 or int8+scales — directly.
 from __future__ import annotations
 
 import functools
+import math
 from typing import Any, List, Tuple
 
 import jax
@@ -52,12 +68,16 @@ class PytreeCodec:
     (and their quantized ``*_q8`` variants) are jitted closures over the
     static layout, so every call after the first reuses one XLA program.
 
-    ``qblock`` is the int8 quantization granule (one f32 absmax scale per
-    ``qblock`` lanes); ``dq`` is D rounded up to a qblock multiple — the
-    padded length of a quantized row — and ``n_qblocks = dq / qblock``.
+    ``qblock`` is the quantization granule shared by every wire format
+    (one f32 absmax scale per ``qblock`` lanes); ``dq`` is D rounded up
+    to a qblock multiple — the padded length of a quantized row — and
+    ``n_qblocks = dq / qblock``.  ``topk_frac`` sizes the sparse wire:
+    ``nk = ceil(topk_frac * d)`` rounded up to a qblock multiple kept
+    coordinates per upload (``nk_qblocks`` value-scale blocks).
     """
 
-    def __init__(self, template: Pytree, qblock: int = QBLOCK):
+    def __init__(self, template: Pytree, qblock: int = QBLOCK,
+                 topk_frac: float = 0.1):
         leaves, treedef = jax.tree_util.tree_flatten(template)
         self.treedef = treedef
         self.shapes: List[Tuple[int, ...]] = [l.shape for l in leaves]
@@ -69,6 +89,11 @@ class PytreeCodec:
         self.qblock = qblock
         self.n_qblocks = -(-self.d // qblock)
         self.dq = self.n_qblocks * qblock
+        assert 0.0 < topk_frac <= 1.0, topk_frac
+        self.topk_frac = float(topk_frac)
+        nk_raw = max(1, math.ceil(self.topk_frac * self.d))
+        self.nk = min(-(-nk_raw // qblock) * qblock, self.dq)
+        self.nk_qblocks = self.nk // qblock
 
         def _ravel(tree: Pytree) -> jax.Array:
             ls = jax.tree_util.tree_leaves(tree)
@@ -158,6 +183,100 @@ class PytreeCodec:
         # K-stacked variant for the batched waves / SFL rounds
         self.roundtrip_q8_rows = jax.jit(jax.vmap(_roundtrip_q8))
 
+        # ---- packed int4 channel: stochastic rounding, counter-keyed ----
+
+        def _sr_draws(seed, cid, counter):
+            """(n_qblocks, qblock) uniform [0,1) stochastic-rounding draws
+            keyed per (seed, client, upload counter) — the sched/timing
+            jitter rule.  seed/cid/counter are TRACED ints folded into the
+            key inside the jitted program, so one compiled program serves
+            every upload, and vmapping over (cid, counter) lanes produces
+            bit-identical draws to the sequential per-upload calls
+            (threefry is counter-based)."""
+            key = jax.random.fold_in(jax.random.fold_in(
+                jax.random.PRNGKey(seed), cid), counter)
+            return jax.random.uniform(key, (self.n_qblocks, qblock))
+
+        def _quantize_q4(flat: jax.Array, residual: jax.Array,
+                         seed, cid, counter):
+            """Error-feedback q4: stochastic-round input + carried residual
+            onto the [-7, 7] grid, pack two nibbles per byte, and return
+            the exact quantization error as the new residual — zero-mean
+            under stochastic rounding, so the EF bias telescopes to 0."""
+            from repro.kernels import ref as _ref
+            x = jnp.pad(flat, (0, self.dq - self.d)) + residual
+            blocks = x.reshape(self.n_qblocks, qblock)
+            q, s = _ref.quantize_q4_ref(blocks, _sr_draws(seed, cid,
+                                                          counter))
+            new_res = blocks - q.astype(jnp.float32) * s[:, None]
+            return (_ref.pack_q4_ref(q.reshape(self.dq)), s,
+                    new_res.reshape(self.dq))
+
+        def _quantize_q4_nores(flat: jax.Array, seed, cid, counter):
+            from repro.kernels import ref as _ref
+            x = jnp.pad(flat, (0, self.dq - self.d))
+            blocks = x.reshape(self.n_qblocks, qblock)
+            q, s = _ref.quantize_q4_ref(blocks, _sr_draws(seed, cid,
+                                                          counter))
+            return _ref.pack_q4_ref(q.reshape(self.dq)), s
+
+        self.ravel_delta_q4 = jax.jit(
+            lambda start, end, scale, residual, seed, cid, counter:
+            _quantize_q4(_ravel_delta(start, end, scale), residual,
+                         seed, cid, counter))
+        self.ravel_q4 = jax.jit(
+            lambda tree, residual, seed, cid, counter:
+            _quantize_q4(_ravel(tree), residual, seed, cid, counter))
+        self.ravel_q4_nores = jax.jit(
+            lambda tree, seed, cid, counter:
+            _quantize_q4_nores(_ravel(tree), seed, cid, counter))
+        self.ravel_delta_q4_nores = jax.jit(
+            lambda start, end, scale, seed, cid, counter:
+            _quantize_q4_nores(_ravel_delta(start, end, scale), seed,
+                               cid, counter))
+        # batched rounds: per-lane (residual, cid, counter), shared seed
+        self.quantize_rows_q4 = jax.jit(
+            jax.vmap(_quantize_q4, in_axes=(0, 0, None, 0, 0)))
+        self.quantize_rows_q4_nores = jax.jit(
+            jax.vmap(_quantize_q4_nores, in_axes=(0, None, 0, 0)))
+
+        # ---- top-k sparse channel: compacted (idx, value) pairs ----
+
+        def _topk(flat: jax.Array, residual: jax.Array):
+            """(D,) f32 + (dq,) residual -> (idx int32 (nk,), qv int8
+            (nk,), scales (nk_qblocks,), new_res (dq,)).  Keeps the nk
+            largest-|x| coordinates of input + residual, int8-quantizes
+            the *compacted* values blockwise, and carries everything the
+            wire dropped — the untransmitted coordinates in full plus the
+            value-quantization error — in the residual."""
+            from repro.kernels import ref as _ref
+            x = jnp.pad(flat, (0, self.dq - self.d)) + residual
+            _, idx = jax.lax.top_k(jnp.abs(x), self.nk)
+            vals = x[idx]
+            q, s = _ref.quantize_ref(vals.reshape(self.nk_qblocks, qblock))
+            deq = (q.astype(jnp.float32) * s[:, None]).reshape(self.nk)
+            new_res = x.at[idx].add(-deq)
+            return idx.astype(jnp.int32), q.reshape(self.nk), s, new_res
+
+        def _topk_nores(flat: jax.Array):
+            from repro.kernels import ref as _ref
+            x = jnp.pad(flat, (0, self.dq - self.d))
+            _, idx = jax.lax.top_k(jnp.abs(x), self.nk)
+            q, s = _ref.quantize_ref(x[idx].reshape(self.nk_qblocks,
+                                                    qblock))
+            return idx.astype(jnp.int32), q.reshape(self.nk), s
+
+        self.ravel_delta_topk = jax.jit(
+            lambda start, end, scale, residual:
+            _topk(_ravel_delta(start, end, scale), residual))
+        self.ravel_topk = jax.jit(
+            lambda tree, residual: _topk(_ravel(tree), residual))
+        self.ravel_delta_topk_nores = jax.jit(
+            lambda start, end, scale:
+            _topk_nores(_ravel_delta(start, end, scale)))
+        self.quantize_rows_topk = jax.jit(jax.vmap(_topk))
+        self.quantize_rows_topk_nores = jax.jit(jax.vmap(_topk_nores))
+
         self._zero_res = None
 
     def zero_residual(self) -> jax.Array:
@@ -219,6 +338,31 @@ def _write_q_slot(q: jax.Array, scales: jax.Array, q_vec: jax.Array,
     scales = jax.lax.dynamic_update_slice(
         scales, s_vec.astype(scales.dtype)[None], (slot, jnp.int32(0)))
     return q, scales
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def _write_topk_slot(idx: jax.Array, qv: jax.Array, scales: jax.Array,
+                     idx_vec: jax.Array, qv_vec: jax.Array,
+                     s_vec: jax.Array, slot: jax.Array):
+    """Row ``slot`` of the (idx, qv, scales) triple <- one upload's
+    compacted payload; all three buffers donated."""
+    z = jnp.int32(0)
+    return (jax.lax.dynamic_update_slice(idx, idx_vec[None], (slot, z)),
+            jax.lax.dynamic_update_slice(qv, qv_vec[None], (slot, z)),
+            jax.lax.dynamic_update_slice(
+                scales, s_vec.astype(scales.dtype)[None], (slot, z)))
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+def _write_topk_rows(idx: jax.Array, qv: jax.Array, scales: jax.Array,
+                     idx_rows: jax.Array, qv_rows: jax.Array,
+                     s_rows: jax.Array, slots: jax.Array):
+    """One wave of top-k payload rows into their slots (all donated);
+    out-of-range slots (bucketed-wave padding lanes) are dropped."""
+    return (idx.at[slots].set(idx_rows, mode="drop"),
+            qv.at[slots].set(qv_rows, mode="drop"),
+            scales.at[slots].set(s_rows.astype(scales.dtype),
+                                 mode="drop"))
 
 
 class AccumBuffer:
@@ -311,17 +455,25 @@ class AccumBuffer:
 
 
 class QuantBuffer:
-    """Preallocated quantized (K, Dq) update buffer: int8 rows + per-block
-    f32 scales.  ``write`` donates both backing arrays, so steady-state
+    """Preallocated quantized update buffer: int8 rows + per-block f32
+    scales.  ``write`` donates both backing arrays, so steady-state
     uploads update the rows in place — the int8 payload is the *native*
-    buffer format, never inflated to f32 outside the aggregation kernel."""
+    buffer format, never inflated to f32 outside the aggregation kernel.
+
+    ``packed=False`` (q8 wire): rows are (K, Dq) int8.  ``packed=True``
+    (q4 wire): rows are (K, Dq // 2) bytes holding two int4 lanes each
+    (:func:`repro.kernels.ref.pack_q4_ref` layout); scales keep the same
+    (K, n_qblocks) shape, and the write/scatter programs are shape-
+    generic so both layouts share them."""
 
     def __init__(self, k: int, d: int, qblock: int = QBLOCK,
-                 sharding=None):
+                 sharding=None, packed: bool = False):
         self.qblock = qblock
         self.n_qblocks = -(-d // qblock)
         self.dq = self.n_qblocks * qblock
-        self.q = jnp.zeros((k, self.dq), jnp.int8)
+        self.packed = bool(packed)
+        row_bytes = self.dq // 2 if self.packed else self.dq
+        self.q = jnp.zeros((k, row_bytes), jnp.int8)
         self.scales = jnp.zeros((k, self.n_qblocks), jnp.float32)
         if sharding is not None:  # rows over the mesh "pod" axis
             self.q = jax.device_put(self.q, sharding)
@@ -349,3 +501,55 @@ class QuantBuffer:
     def views(self) -> Tuple[jax.Array, jax.Array]:
         """(q, scales) as consumed by the quantized FlatServer step."""
         return self.q, self.scales
+
+
+class TopkBuffer:
+    """Preallocated sparse (idx, qv, scales) channel buffer for the top-k
+    wire: per row the ``nk`` kept coordinate indices (int32), their int8-
+    quantized values, and one f32 scale per qblock of the *compacted*
+    value array.  Empty rows carry index ``d`` everywhere — past the live
+    range, so dense scatter-accumulates with ``mode="drop"`` (and the
+    Pallas kernels' in-tile bounds masks) treat them as zero contribution
+    without a separate validity mask.  All writes donate the backing
+    arrays (same in-place discipline as :class:`QuantBuffer`)."""
+
+    def __init__(self, k: int, d: int, nk: int, qblock: int = QBLOCK,
+                 sharding=None):
+        assert nk % qblock == 0, (nk, qblock)
+        self.d = int(d)
+        self.nk = int(nk)
+        self.qblock = qblock
+        self.nk_qblocks = nk // qblock
+        self.idx = jnp.full((k, nk), d, jnp.int32)
+        self.qv = jnp.zeros((k, nk), jnp.int8)
+        self.scales = jnp.zeros((k, self.nk_qblocks), jnp.float32)
+        if sharding is not None:  # rows over the mesh "pod" axis
+            self.idx = jax.device_put(self.idx, sharding)
+            self.qv = jax.device_put(self.qv, sharding)
+            self.scales = jax.device_put(self.scales, sharding)
+
+    def write(self, idx_vec: jax.Array, qv_vec: jax.Array,
+              s_vec: jax.Array, slot) -> None:
+        self.idx, self.qv, self.scales = _write_topk_slot(
+            self.idx, self.qv, self.scales, idx_vec, qv_vec, s_vec,
+            jnp.int32(slot))
+
+    def write_rows(self, idx_rows: jax.Array, qv_rows: jax.Array,
+                   s_rows: jax.Array, slots: jax.Array) -> None:
+        """Scatter one wave of sparse payload rows into their slots."""
+        self.idx, self.qv, self.scales = _write_topk_rows(
+            self.idx, self.qv, self.scales, idx_rows, qv_rows, s_rows,
+            jnp.asarray(slots, jnp.int32))
+
+    def set_rows(self, idx: jax.Array, qv: jax.Array,
+                 scales: jax.Array) -> None:
+        """Adopt a whole round's rows at once (batched SFL round)."""
+        assert idx.shape == self.idx.shape and idx.dtype == jnp.int32
+        assert qv.shape == self.qv.shape and qv.dtype == jnp.int8
+        assert scales.shape == self.scales.shape
+        self.idx, self.qv, self.scales = idx, qv, scales
+
+    @property
+    def views(self) -> Tuple[jax.Array, jax.Array, jax.Array]:
+        """(idx, qv, scales) as consumed by the top-k FlatServer step."""
+        return self.idx, self.qv, self.scales

@@ -39,17 +39,26 @@ device-resident metrics ring (metrics.DeviceMetricsRing) flushed once at
 run end.  ``batch_clients=False`` forces the sequential per-upload path —
 the parity oracle for the batched schedule.
 
-Quantized channel (``compress_updates=True``): int8 is the native wire and
-buffer format, not a detour through f32.  A gradient-target upload is ONE
-fused program (``PytreeCodec.ravel_delta_q8``: diff + ravel + blockwise
-absmax int8 quantize) that also returns the client-side error-feedback
-residual — what quantization dropped this round is re-added to the next
-upload, so the noise telescopes instead of accumulating.  Model-target
-uploads quantize the weights themselves (``ravel_q8``, no residual).  The
-rows live in a donated :class:`repro.core.flatbuf.QuantBuffer` (int8
-values + per-block f32 scales), batched waves quantize all their rows in
-one vmapped program (``quantize_rows``), and the server round fuses the
-dequantize into the aggregation pass.
+Lossy wire formats (``FLConfig.wire`` — q8 / q4 / topk;
+``compress_updates=True`` is the legacy q8 alias): the wire payload is
+the native buffer format, not a detour through f32.  A gradient-target
+upload is ONE fused program (``PytreeCodec.ravel_delta_q8`` /
+``ravel_delta_q4`` / ``ravel_delta_topk``: diff + ravel + EF add +
+quantize/sparsify) that also returns the client-side error-feedback
+residual — what the wire dropped this round is re-added to the next
+upload, so the noise telescopes instead of accumulating.  q4 rounds
+stochastically with draws keyed per (client, upload counter) — see
+``_next_counter`` — so the sequential and batched paths quantize
+bit-identically.  Model-target uploads quantize the weights themselves
+(``ravel_q8`` / ``ravel_q4_nores``, no residual; topk is
+gradient-only).  The rows live in a donated
+:class:`repro.core.flatbuf.QuantBuffer` (int8 values or packed int4
+nibble pairs + per-block f32 scales) or
+:class:`repro.core.flatbuf.TopkBuffer` (sparse index/value/scale
+triple), batched waves quantize all their rows in one vmapped program
+(``quantize_rows*``), and the server round fuses the dequantize — for
+topk, a gather-dequant-scatter-accumulate that never builds a dense
+(K, D) buffer — into the aggregation pass.
 
 The server round itself is ONE jitted program
 (:class:`repro.core.aggregation.FlatServer` — fused [dequantize +]
@@ -115,6 +124,7 @@ from repro.core.client import (ClientState, make_batched_hetero_train,
                                make_flat_eval_fn, make_local_train,
                                pytree_bytes, resolve_wave_impl, stack_rows)
 from repro.core.metrics import DeviceMetricsRing, MetricsLog
+from repro.kernels.quantize import payload_nbytes
 from repro.sharding import flat as shflat
 
 Pytree = Any
@@ -203,7 +213,8 @@ class FLEngine:
 
         # ---- flat-buffer server path (every mode, fedasync included) ----
         self.codec = flatbuf.PytreeCodec(init_params,
-                                         qblock=fl_cfg.quant_block)
+                                         qblock=fl_cfg.quant_block,
+                                         topk_frac=fl_cfg.topk_frac)
         self._flat_params = self.codec.ravel(init_params)
         assert fl_cfg.aggregation in agg.FlatServer.MODES
         # batched semi-async clients keep references to past flat global
@@ -211,9 +222,22 @@ class FLEngine:
         # not donate-invalidate its params buffer in that mode
         self._batched_async = (fl_cfg.mode == "semi_async"
                                and fl_cfg.batch_clients)
-        # int8 native channel: quantized rows + fused dequant-aggregate
-        self._quant = fl_cfg.compress_updates
+        # wire format of the upload channel (FLConfig docstring table);
+        # compress_updates is the legacy q8 alias
+        self._wire = fl_cfg.wire
+        if self._wire == "f32" and fl_cfg.compress_updates:
+            self._wire = "q8"
+        self._quant = self._wire == "q8"
+        self._q4 = self._wire == "q4"
+        self._topk = self._wire == "topk"
+        self._lossy = self._wire != "f32"
+        # q4 stochastic rounding: per-client upload counters — the PRNG
+        # key of upload n of client c is fold_in(fold_in(key(seed), c),
+        # n), drawn inside the jitted quantize program, so the
+        # sequential and batched paths reproduce the draws bit-exactly
+        self._sr_counter: Dict[int, int] = {}
         self._qbuf = None
+        self._tbuf = None
         self._buf = None
         # ---- server channel (tentpole PR 6): streaming vs buffered ----
         # streaming: each upload is folded into an O(D) running partial
@@ -268,7 +292,7 @@ class FLEngine:
             server_lr=fl_cfg.server_lr, alpha=fl_cfg.staleness_alpha,
             momentum=fl_cfg.server_momentum or 0.8,
             ema_anchor=fl_cfg.ema_anchor or 0.05,
-            quantized=self._quant, qblock=fl_cfg.quant_block,
+            wire=self._wire, qblock=fl_cfg.quant_block,
             donate=False if self._batched_async else None,
             mesh=self._mesh,
             external_discount=True, fedasync_rates=True)
@@ -277,26 +301,38 @@ class FLEngine:
         if self._streaming:
             # O(D) double-buffered accumulator: n_rows = mesh shards (the
             # streaming counterpart of the row-sharded (K, D) buffer) —
-            # ingestion of horizon r+1 overlaps the server step of r
+            # ingestion of horizon r+1 overlaps the server step of r.
+            # q8/q4 folds dequantize onto the padded (Dq,) grid; topk
+            # scatters into the raw (d,) range (pad coords contribute 0)
             self._accum = flatbuf.AccumBuffer(
-                self.codec.dq if self._quant else self.codec.d,
+                self.codec.dq if self._wire in ("q8", "q4")
+                else self.codec.d,
                 self._server.fold_program,
                 n_rows=fl_cfg.devices, sharding=row_sh)
-        elif self._quant:
+        elif self._quant or self._q4:
             self._qbuf = flatbuf.QuantBuffer(self._horizon_target,
                                              self.codec.d,
                                              fl_cfg.quant_block,
-                                             sharding=row_sh)
+                                             sharding=row_sh,
+                                             packed=self._q4)
+        elif self._topk:
+            self._tbuf = flatbuf.TopkBuffer(self._horizon_target,
+                                            self.codec.d, self.codec.nk,
+                                            fl_cfg.quant_block,
+                                            sharding=row_sh)
         else:
             self._buf = flatbuf.alloc_buffer(self._horizon_target,
                                              self.codec.d,
                                              sharding=row_sh)
-        # quantized channel, model targets: the non-trainable BN state
-        # ships through the same ravel_q8 wire format as the weights
-        # (server-side consumers see the quantize->dequantize roundtrip;
-        # clients keep their exact local state)
+        # lossy channel, model targets: the non-trainable BN state ships
+        # through the ravel_q8 wire format alongside the weights (q4
+        # included — the state is tiny next to D, so sub-byte packing of
+        # it buys nothing; topk is gradient-only and never lands here).
+        # Server-side consumers see the quantize->dequantize roundtrip;
+        # clients keep their exact local state.
         self._state_codec = None
-        if (self._quant and fl_cfg.aggregation in _MODEL_TARGETS
+        if (self._wire in ("q8", "q4")
+                and fl_cfg.aggregation in _MODEL_TARGETS
                 and jax.tree_util.tree_leaves(init_state)):
             self._state_codec = flatbuf.PytreeCodec(
                 init_state, qblock=fl_cfg.quant_block)
@@ -388,13 +424,18 @@ class FLEngine:
 
     # ------------------------------------------------------------------
     def _upload_nbytes(self) -> int:
-        """Channel cost of one upload, per target.  With the quantized
-        channel the payload is int8 values + one f32 scale per quant_block
-        lanes — for model targets that includes the non-trainable state
-        (BN running stats), which rides the same ravel_q8 wire format."""
+        """Channel cost of one upload, per target — the wire-format rule
+        of :func:`repro.kernels.quantize.payload_nbytes` (q8: int8 values
+        + block scales; q4: two lanes per byte; topk: index+value pairs
+        over the kept coords).  For model targets that includes the
+        non-trainable state (BN running stats), which rides the ravel_q8
+        wire format on every lossy wire."""
         model_target = self.cfg.aggregation in _MODEL_TARGETS
-        if self.cfg.compress_updates:
-            payload = self.codec.dq + self.codec.n_qblocks * 4
+        if self._lossy:
+            payload = payload_nbytes(
+                self._wire, d=self.codec.d, dq=self.codec.dq,
+                n_qblocks=self.codec.n_qblocks, nk=self.codec.nk,
+                nk_qblocks=self.codec.nk_qblocks)
         else:
             payload = self._params_bytes
         if model_target:
@@ -427,6 +468,16 @@ class FLEngine:
         res = self._residuals.get(cid)
         return res if res is not None else self.codec.zero_residual()
 
+    def _next_counter(self, cid: int) -> int:
+        """q4 stochastic-rounding upload counter for client ``cid``.
+        Strictly per-client, so the counter a given upload draws with
+        depends only on how many uploads that client made before — the
+        invariant that keeps the sequential and batched engine paths
+        (which consume counters in different global orders) bit-identical."""
+        n = self._sr_counter.get(cid, 0)
+        self._sr_counter[cid] = n + 1
+        return n
+
     def _enqueue_upload(self, buffer: List[Dict], c: ClientState,
                         w_end, s_end, staleness: int) -> None:
         """Serialize one client upload.  Buffered channel: ravel the
@@ -450,7 +501,12 @@ class FLEngine:
                 q, s = self.codec.ravel_q8_nores(w_end)
                 payload = (q, s)
                 s_end = self._state_q8(s_end)
-            else:
+            elif self._q4:
+                p, s = self.codec.ravel_q4_nores(
+                    w_end, cfg.seed, c.cid, self._next_counter(c.cid))
+                payload = (p, s)
+                s_end = self._state_q8(s_end)
+            else:  # topk is gradient-only (FLConfig.validate)
                 payload = (self.codec.ravel(w_end),)
         else:  # gradient targets: fedsgd, sdga, fedbuff, fedopt
             if self._quant:
@@ -465,6 +521,32 @@ class FLEngine:
                     q, s = self.codec.ravel_delta_q8_nores(
                         c.params, w_end, cfg.client_lr)
                 payload = (q, s)
+            elif self._q4:
+                # same fused shape, stochastic rounding keyed per
+                # (client, upload counter) — see _next_counter
+                ctr = self._next_counter(c.cid)
+                if cfg.error_feedback:
+                    p, s, new_res = self.codec.ravel_delta_q4(
+                        c.params, w_end, cfg.client_lr,
+                        self._residual(c.cid), cfg.seed, c.cid, ctr)
+                    self._residuals[c.cid] = new_res
+                else:
+                    p, s = self.codec.ravel_delta_q4_nores(
+                        c.params, w_end, cfg.client_lr, cfg.seed,
+                        c.cid, ctr)
+                payload = (p, s)
+            elif self._topk:
+                # sparse wire: the residual carries the dropped coords in
+                # full plus the value-quantization error
+                if cfg.error_feedback:
+                    idx, qv, s, new_res = self.codec.ravel_delta_topk(
+                        c.params, w_end, cfg.client_lr,
+                        self._residual(c.cid))
+                    self._residuals[c.cid] = new_res
+                else:
+                    idx, qv, s = self.codec.ravel_delta_topk_nores(
+                        c.params, w_end, cfg.client_lr)
+                payload = (idx, qv, s)
             else:
                 payload = (self.codec.ravel_delta(c.params, w_end,
                                                   cfg.client_lr),)
@@ -479,8 +561,10 @@ class FLEngine:
             self._accum.fold(payload, w=w, beta=beta,
                              shard=self._fold_shard(slot),
                              staleness=staleness)
-        elif self._quant:
+        elif self._quant or self._q4:
             self._qbuf.write(*payload, slot)
+        elif self._topk:
+            self._tbuf.write(*payload, slot)
         else:
             self._buf = flatbuf.write_slot(self._buf, payload[0],
                                            jnp.int32(slot))
@@ -544,10 +628,14 @@ class FLEngine:
         fetching them."""
         self._record_staleness(staleness)
         wvec = jnp.asarray(self._weight_vector(staleness, sizes))
+        if self._qbuf is not None:
+            buf = self._qbuf.views
+        elif self._tbuf is not None:
+            buf = self._tbuf.views
+        else:
+            buf = self._buf
         self._flat_params, self._opt, m = self._server.step(
-            self._flat_params,
-            self._qbuf.views if self._quant else self._buf,
-            wvec, self._opt)
+            self._flat_params, buf, wvec, self._opt)
         self.t_global += 1
         self._broadcast_bytes()
         return m
@@ -684,7 +772,7 @@ class FLEngine:
                     # the server sees the int8-shipped state roundtrip
                     # (identity on the f32 channel)
                     states_k = self._state_q8_rows(states_k)
-                if self._quant:
+                if self._lossy:
                     # quantize all K rows in one vmapped program; gradient
                     # targets thread their error-feedback residuals through
                     use_ef = (cfg.error_feedback
@@ -692,12 +780,38 @@ class FLEngine:
                     if use_ef:
                         res = jnp.stack([self._residual(int(cid))
                                          for cid in active])
-                        q, s, new_res = self.codec.quantize_rows(vecs, res)
+                    if self._quant:
+                        if use_ef:
+                            q, s, new_res = self.codec.quantize_rows(vecs,
+                                                                     res)
+                        else:
+                            q, s = self.codec.quantize_rows_nores(vecs)
+                        self._qbuf.set_rows(q, s)
+                    elif self._q4:
+                        # per-lane (cid, counter) keys — the same draws
+                        # the sequential path's per-upload calls make
+                        cids_v = jnp.asarray(active, jnp.int32)
+                        ctrs = jnp.asarray(
+                            [self._next_counter(int(cid))
+                             for cid in active], jnp.int32)
+                        if use_ef:
+                            q, s, new_res = self.codec.quantize_rows_q4(
+                                vecs, res, cfg.seed, cids_v, ctrs)
+                        else:
+                            q, s = self.codec.quantize_rows_q4_nores(
+                                vecs, cfg.seed, cids_v, ctrs)
+                        self._qbuf.set_rows(q, s)
+                    else:  # topk (gradient-only, so use_ef governs)
+                        if use_ef:
+                            ti, tq, ts, new_res = \
+                                self.codec.quantize_rows_topk(vecs, res)
+                        else:
+                            ti, tq, ts = \
+                                self.codec.quantize_rows_topk_nores(vecs)
+                        self._tbuf.set_rows(ti, tq, ts)
+                    if use_ef:
                         for row, cid in enumerate(active):
                             self._residuals[int(cid)] = new_res[row]
-                    else:
-                        q, s = self.codec.quantize_rows_nores(vecs)
-                    self._qbuf.set_rows(q, s)
                 else:
                     self._buf = vecs  # this round's (K, D) buffer
                 for cid in active:
@@ -813,7 +927,7 @@ class FLEngine:
             self.apply_fn, self.kind, target, cfg.local_epochs, self.codec,
             impl=self.wave_impl_resolved, mesh=self._mesh)
         eval_fn = make_flat_eval_fn(self.apply_fn, self.kind, self.codec)
-        use_ef = (self._quant and cfg.error_feedback and target == "grad")
+        use_ef = (self._lossy and cfg.error_feedback and target == "grad")
         # device-resident shard bank: one (n_clients, ...) stack built
         # once per engine, gathered per wave — no per-horizon restacking
         if self._shard_bank is None:
@@ -962,16 +1076,47 @@ class FLEngine:
                     jnp.asarray(cids), cfg.client_lr)
 
                 # ---- serialize the wave into the server channel ----
-                q = s = None
+                # prows: the wave's stacked wire-payload arrays ((vecs,)
+                # on f32, (q, s) on q8/q4, (idx, qv, s) on topk)
+                new_res = None
+                if use_ef:
+                    # padding lanes read member 0's pre-update residual
+                    # (their outputs are discarded below)
+                    res = jnp.stack([self._residual(cid) for cid in cids])
                 if self._quant:
                     if use_ef:
-                        res = jnp.stack([self._residual(cid)
-                                         for cid in cids])
                         q, s, new_res = self.codec.quantize_rows(vecs, res)
-                        for row, cid in enumerate(cids[:kw]):
-                            self._residuals[cid] = new_res[row]
                     else:
                         q, s = self.codec.quantize_rows_nores(vecs)
+                    prows = (q, s)
+                elif self._q4:
+                    # per-lane (cid, counter) PRNG keys; real lanes
+                    # consume their client's next counter, padding lanes
+                    # repeat lane 0's key (rows dropped either way)
+                    ctrs = [self._next_counter(cid) for cid in cids[:kw]]
+                    ctrs += [ctrs[0]] * npad
+                    cids_v = jnp.asarray(cids, jnp.int32)
+                    ctrs_v = jnp.asarray(ctrs, jnp.int32)
+                    if use_ef:
+                        q, s, new_res = self.codec.quantize_rows_q4(
+                            vecs, res, cfg.seed, cids_v, ctrs_v)
+                    else:
+                        q, s = self.codec.quantize_rows_q4_nores(
+                            vecs, cfg.seed, cids_v, ctrs_v)
+                    prows = (q, s)
+                elif self._topk:
+                    if use_ef:
+                        ti, tq, ts, new_res = \
+                            self.codec.quantize_rows_topk(vecs, res)
+                    else:
+                        ti, tq, ts = \
+                            self.codec.quantize_rows_topk_nores(vecs)
+                    prows = (ti, tq, ts)
+                else:
+                    prows = (vecs,)
+                if new_res is not None:
+                    for row, cid in enumerate(cids[:kw]):
+                        self._residuals[cid] = new_res[row]
                 if self._streaming:
                     # hold-and-release: waves surface rows out of arrival
                     # order (wave 0 spans the whole horizon), but the
@@ -981,8 +1126,7 @@ class FLEngine:
                     # one by construction (and keeps fedasync's
                     # non-commuting mix exact)
                     for row, (slot, _cid) in enumerate(members):
-                        pend[slot] = ((q[row], s[row]) if self._quant
-                                      else (vecs[row],))
+                        pend[slot] = tuple(a[row] for a in prows)
                     while next_fold in pend:
                         payload = pend.pop(next_fold)
                         self._accum.fold(
@@ -998,8 +1142,10 @@ class FLEngine:
                     slots = np.asarray(
                         [slot for slot, _ in members]
                         + [self._horizon_target] * npad, np.int32)
-                    if self._quant:
-                        self._qbuf.write_rows(q, s, slots)
+                    if self._quant or self._q4:
+                        self._qbuf.write_rows(*prows, slots)
+                    elif self._topk:
+                        self._tbuf.write_rows(*prows, slots)
                     else:
                         self._buf = flatbuf.write_rows(self._buf, vecs,
                                                        jnp.asarray(slots))

@@ -1,6 +1,8 @@
 """Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
 from __future__ import annotations
 
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -189,6 +191,26 @@ def dequant_flat_ref(q: jax.Array, scales: jax.Array,
 INT8_DOT_MIN_K = 32  # rows at which the int8-dot path beats the fusion
 
 
+def int8dot_auto(k: int) -> bool:
+    """Whether the int8-dot reduction should engage automatically for K rows.
+
+    The integer-GEMM form only pays where the backend has native int8
+    dot units (TPU / recent GPUs).  XLA **CPU emulates** the int8
+    einsum: at K=64, D=1M, qblock=512 the int8-dot path measures
+    ~272 ms/agg vs ~33 ms for the chunked float form (and ~35 ms for
+    the threaded f32 einsum) — the `speedup_q8_vs_flat: 0.15` K=64
+    regression in BENCH_agg.json.  Auto dispatch therefore requires
+    both ``k >= INT8_DOT_MIN_K`` *and* a non-CPU default backend.
+
+    ``REPRO_INT8_DOT=1`` / ``=0`` overrides the platform gate (but not
+    the K threshold) so tests can pin the dispatch boundary on CPU.
+    """
+    env = os.environ.get("REPRO_INT8_DOT", "").strip()
+    if env in ("0", "1"):
+        return env == "1" and k >= INT8_DOT_MIN_K
+    return k >= INT8_DOT_MIN_K and jax.default_backend() != "cpu"
+
+
 def int8dot_coeff_scale(scales: jax.Array, weights: jax.Array) -> jax.Array:
     """(nb,) per-block absmax scale of the reduction coefficients
     c_kb = w_k * s_kb — the quantization granule of the int8-dot path.
@@ -258,14 +280,18 @@ def weighted_sum_q8_ref(q: jax.Array, scales: jax.Array,
     extra (D,) f32 round-trip each — the small-K single fusion is the
     fast case).
 
-    ``int8_dot`` (default: auto, K >= INT8_DOT_MIN_K) dispatches to
+    ``int8_dot`` (default: auto via :func:`int8dot_auto` — K >=
+    INT8_DOT_MIN_K *on a non-CPU backend*, overridable with
+    ``REPRO_INT8_DOT``) dispatches to
     :func:`weighted_sum_q8_int8dot_ref` instead — per-block-quantized
     coefficients + int32-accumulated integer dot, the large-K regime
-    where the single fused loop stops scaling.
+    where the single fused loop stops scaling on hardware with native
+    int8 GEMM.  On XLA CPU the integer dot is emulated and ~8x slower
+    than this chunked form at K=64, so auto never picks it there.
     """
     K, Dq = q.shape
     if int8_dot is None:
-        int8_dot = K >= INT8_DOT_MIN_K
+        int8_dot = int8dot_auto(K)
     if int8_dot:
         return weighted_sum_q8_int8dot_ref(q, scales, weights, qblock)
     if chunk is None:
@@ -334,6 +360,210 @@ def quantize_ref(x: jax.Array):
 
 def dequantize_ref(q: jax.Array, scales: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scales[:, None]
+
+
+# ------------------------- packed int4 wire (q4) -------------------------
+
+Q4_LEVELS = 7  # symmetric int4 grid [-7, 7]; -8 stays unused
+
+
+def quantize_q4_ref(x: jax.Array, u: jax.Array):
+    """Blockwise int4 absmax quantization with stochastic rounding.
+
+    x (R, B) f32 and u (R, B) uniform [0, 1) draws -> (q int8 in
+    [-7, 7], scales (R,) f32) with scale = absmax/7 (floored at 1e-12).
+    q = floor(y) + Bernoulli(y - floor(y)) for y = clip(x/scale, ±7),
+    so E[q * scale] = x inside the clip range: the rounding error is
+    zero-mean and the client-side error-feedback residual telescopes
+    across rounds instead of accumulating round-to-nearest bias.  The
+    draws u must come from a counter-keyed PRNG (see
+    core.flatbuf.PytreeCodec.ravel_delta_q4) so every engine path
+    reproduces them bit-identically.
+    """
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1,
+                    keepdims=True) / Q4_LEVELS
+    scale = jnp.maximum(scale, 1e-12)
+    y = jnp.clip(x.astype(jnp.float32) / scale, -Q4_LEVELS, Q4_LEVELS)
+    f = jnp.floor(y)
+    q = f + (u < (y - f)).astype(jnp.float32)
+    q = jnp.clip(q, -Q4_LEVELS, Q4_LEVELS)
+    return q.astype(jnp.int8), scale[:, 0]
+
+
+def pack_q4_ref(q: jax.Array) -> jax.Array:
+    """(..., D) int8 nibbles in [-7, 7] -> (..., D//2) int8, two per byte.
+
+    Lane 2j lands in the low nibble of byte j, lane 2j+1 in the high
+    nibble (two's-complement uint8 arithmetic; the wire dtype stays
+    int8 so the packed buffer reuses the q8 storage path).
+    """
+    u = q.astype(jnp.uint8) & 0xF
+    lo, hi = u[..., 0::2], u[..., 1::2]
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_q4_ref(p: jax.Array) -> jax.Array:
+    """(..., D//2) packed int8 -> (..., D) int8 nibbles, sign-extended."""
+    u = p.astype(jnp.uint8)
+    lo = (u & 0xF).astype(jnp.int32)
+    hi = (u >> 4).astype(jnp.int32)
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1).reshape(*p.shape[:-1],
+                                               2 * p.shape[-1])
+    return out.astype(jnp.int8)
+
+
+def dequant_q4_flat_ref(p: jax.Array, scales: jax.Array,
+                        qblock: int) -> jax.Array:
+    """Unpack + blockwise-dequantize a packed q4 flat buffer.
+
+    p (K, Dq//2) int8, scales (K, Dq//qblock) f32 -> (K, Dq) f32.
+    Padding blocks carry scale 0 and dequantize to exact zeros.
+    """
+    q = unpack_q4_ref(p)
+    K, Dq = q.shape
+    return (q.astype(jnp.float32).reshape(K, Dq // qblock, qblock)
+            * scales[:, :, None]).reshape(K, Dq)
+
+
+def weighted_sum_q4_ref(p: jax.Array, scales: jax.Array,
+                        weights: jax.Array, qblock: int,
+                        chunk: int = 16) -> jax.Array:
+    """sum_k w_k * dequant(unpack(p_k)) -> (Dq,) f32, streaming.
+
+    Chunks of ``chunk`` rows are unpacked + dequantized and reduced per
+    chunk, so at most a (chunk, Dq) f32 temporary exists at once — the
+    CPU path of the q4 channel (the ``*_q4`` Pallas kernels fuse the
+    nibble unpack into the aggregation tiles on TPU).
+    """
+    K = p.shape[0]
+    Dq = 2 * p.shape[1]
+    w = weights.astype(jnp.float32)
+    out = jnp.zeros((Dq,), jnp.float32)
+    for k0 in range(0, K, chunk):
+        rows = dequant_q4_flat_ref(p[k0:k0 + chunk],
+                                   scales[k0:k0 + chunk], qblock)
+        out = out + jnp.einsum("k,kd->d", w[k0:k0 + chunk], rows)
+    return out
+
+
+def fold_q4_ref(acc: jax.Array, p_row: jax.Array, s_row: jax.Array,
+                w, qblock: int, beta=1.0) -> jax.Array:
+    """Streaming fold of one packed-q4 upload row: unpack + blockwise
+    dequantize p_row (Dq//2,) int8 with s_row scales, then
+    :func:`fold_ref` — the q4 accumulate-on-arrival oracle."""
+    u = dequant_q4_flat_ref(p_row[None], s_row[None], qblock)[0]
+    return fold_ref(acc, u, w, beta)
+
+
+def fedasync_rates_flat_q4_ref(p: jax.Array, scales: jax.Array,
+                               rates: jax.Array, params: jax.Array,
+                               qblock: int):
+    """Sequential (S, P) fedasync mix with per-row q4 dequantize in the
+    fold — the q4 buffered oracle for the streaming rates channel."""
+    a = rates.astype(jnp.float32)
+    d = params.shape[0]
+
+    def body(i, sp):
+        s, prod = sp
+        u = dequant_q4_flat_ref(p[i][None], scales[i][None], qblock)[0, :d]
+        return (1.0 - a[i]) * s + a[i] * u, prod * (1.0 - a[i])
+
+    s, prod = jax.lax.fori_loop(
+        0, a.shape[0], body,
+        (jnp.zeros(d, jnp.float32), jnp.float32(1.0)))
+    mixed = prod * params.astype(jnp.float32) + s
+    return mixed.astype(params.dtype), 1.0 - prod
+
+
+def safl_agg_q4_ref(p: jax.Array, scales: jax.Array, weights: jax.Array,
+                    params: jax.Array, server_lr: float,
+                    qblock: int) -> jax.Array:
+    """Fused unpack + dequantize + FedSGD server step oracle (q4 wire)."""
+    u = dequant_q4_flat_ref(p, scales, qblock)[:, :params.shape[0]]
+    return safl_agg_ref(u, weights, params, server_lr)
+
+
+def weighted_avg_q4_ref(p: jax.Array, scales: jax.Array,
+                        weights: jax.Array, qblock: int) -> jax.Array:
+    """Fused unpack + dequantize + FedAvg weighted mean oracle (q4)."""
+    return weighted_avg_ref(dequant_q4_flat_ref(p, scales, qblock), weights)
+
+
+def sdga_flat_q4_ref(p: jax.Array, scales: jax.Array, staleness: jax.Array,
+                     params: jax.Array, mom: jax.Array, ema: jax.Array, *,
+                     qblock: int, server_lr: float, alpha: float = 0.5,
+                     momentum: float = 0.8, ema_anchor: float = 0.05,
+                     ema_decay: float = 0.95):
+    """Fused unpack + dequantize + full SDGA round oracle (q4 wire)."""
+    u = dequant_q4_flat_ref(p, scales, qblock)[:, :params.shape[0]]
+    return sdga_flat_ref(u, staleness, params, mom, ema,
+                         server_lr=server_lr, alpha=alpha, momentum=momentum,
+                         ema_anchor=ema_anchor, ema_decay=ema_decay)
+
+
+# ------------------------- top-k sparse wire -------------------------
+
+
+def dequant_topk_ref(qv: jax.Array, scales: jax.Array,
+                     qblock: int) -> jax.Array:
+    """Blockwise-dequantize compacted top-k values.
+
+    qv (..., nk) int8, scales (..., nk//qblock) f32 -> (..., nk) f32.
+    The quantization granule runs over the *compacted* value array, not
+    the dense coordinate space.  Padding blocks carry scale 0.
+    """
+    shp = qv.shape
+    nk = shp[-1]
+    q = qv.astype(jnp.float32).reshape(shp[:-1] + (nk // qblock, qblock))
+    return (q * scales[..., :, None]).reshape(shp)
+
+
+def topk_weighted_sum_ref(idx: jax.Array, qv: jax.Array,
+                          scales: jax.Array, weights: jax.Array,
+                          d: int, qblock: int) -> jax.Array:
+    """sum_k w_k * scatter(dequant(qv_k), idx_k) -> (d,) f32.
+
+    idx (K, nk) int32 coordinates into the dense (d,) row; padding
+    coordinates carry idx == d and are dropped by the scatter
+    (mode="drop"), so short uploads cost nothing.  The sum runs as K
+    sequential row scatters so the floating-point accumulation order
+    matches the streaming channel's fold-at-ingest chain on the same
+    rows — the dense row is never materialized per upload.
+    """
+    w = weights.astype(jnp.float32)
+    vals = dequant_topk_ref(qv, scales, qblock)  # (K, nk)
+
+    def body(k, acc):
+        return acc.at[idx[k]].add(w[k] * vals[k], mode="drop")
+
+    return jax.lax.fori_loop(0, idx.shape[0], body,
+                             jnp.zeros((d,), jnp.float32))
+
+
+def fold_topk_ref(acc: jax.Array, idx: jax.Array, qv: jax.Array,
+                  s_row: jax.Array, w, qblock: int, beta=1.0) -> jax.Array:
+    """One streaming fold of a sparse upload: acc <- beta*acc +
+    w * scatter(dequant(qv), idx).  Oracle for
+    kernels.safl_agg.safl_fold_topk; padding coords (idx == d) drop."""
+    vals = dequant_topk_ref(qv, s_row, qblock)
+    base = jnp.asarray(beta, jnp.float32) * acc.astype(jnp.float32)
+    return base.at[idx].add(jnp.asarray(w, jnp.float32) * vals,
+                            mode="drop")
+
+
+def safl_agg_topk_ref(idx: jax.Array, qv: jax.Array, scales: jax.Array,
+                      weights: jax.Array, params: jax.Array,
+                      server_lr: float, qblock: int) -> jax.Array:
+    """Fused gather-dequant-scatter + FedSGD server step oracle (topk).
+    Gradient targets only: params - lr * gsum / wsum."""
+    w = weights.astype(jnp.float32)
+    wsum = jnp.maximum(jnp.sum(w), 1e-12)
+    gsum = topk_weighted_sum_ref(idx, qv, scales, weights,
+                                 params.shape[0], qblock)
+    return (params.astype(jnp.float32)
+            - server_lr * (gsum / wsum)).astype(params.dtype)
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,

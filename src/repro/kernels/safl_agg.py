@@ -497,3 +497,336 @@ def sdga_aggregate_q8(q: jax.Array, scales: jax.Array, staleness: jax.Array,
         interpret=interpret,
     )(staleness, q, scales, params, mom, ema)
     return tuple(o[:D] for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# packed int4 flat channel: fused unpack + dequantize + aggregate
+# ---------------------------------------------------------------------------
+
+
+def _unpack_q4_tile(qp, s, qblock: int):
+    """(K, BD/2) packed int8 tile + (K, BD/qblock) scales -> (K, BD) f32.
+
+    Two nibbles per byte (lane 2j low, lane 2j+1 high), sign-extended
+    from the symmetric [-7, 7] grid, then blockwise-dequantized — all in
+    VMEM, so the HBM read of the K x D tile is half the q8 bytes."""
+    K, half = qp.shape
+    u = qp.astype(jnp.uint8)
+    lo = (u & 0xF).astype(jnp.int32)
+    hi = (u >> 4).astype(jnp.int32)
+    lo = jnp.where(lo > 7, lo - 16, lo)
+    hi = jnp.where(hi > 7, hi - 16, hi)
+    q = jnp.stack([lo, hi], axis=-1).reshape(K, 2 * half)
+    return (q.astype(jnp.float32).reshape(K, (2 * half) // qblock, qblock)
+            * s[:, :, None]).reshape(K, 2 * half)
+
+
+def _pad_q4(qp, scales, block_d: int, qblock: int):
+    """Pad the packed buffer from Dq/2 to a block_d/2 multiple.  Padding
+    blocks get scale 0 so they dequantize to exact zeros."""
+    K, half = qp.shape
+    Dq = 2 * half
+    assert block_d % qblock == 0 and block_d % 2 == 0, (block_d, qblock)
+    assert Dq % qblock == 0, (Dq, qblock)
+    assert scales.shape == (K, Dq // qblock), (scales.shape, qp.shape)
+    pad = (-Dq) % block_d
+    if pad:
+        qp = jnp.pad(qp, ((0, 0), (0, pad // 2)))
+        scales = jnp.pad(scales, ((0, 0), (0, pad // qblock)))
+    return qp, scales, Dq + pad
+
+
+def _agg_q4_kernel(w_ref, qp_ref, s_ref, p_ref, o_ref, *, server_lr: float,
+                   mode: str, alpha: float, discount: str, qblock: int):
+    """One (K, BLOCK_D) logical tile read as (K, BLOCK_D/2) packed bytes:
+    unpack + blockwise dequantize in VMEM, then the same weighted
+    reduction / server step (or fedasync mix) as the f32 kernel."""
+    w = _weights(w_ref[...], alpha, discount)  # (K,)
+    u = _unpack_q4_tile(qp_ref[...], s_ref[...], qblock)  # (K, BLOCK_D)
+    p = p_ref[...].astype(jnp.float32)
+    if mode == "mix":
+        g = jnp.einsum("k,kd->d", w, u)
+        o_ref[...] = ((1.0 - jnp.sum(w)) * p + g).astype(o_ref.dtype)
+        return
+    wsum = jnp.maximum(jnp.sum(w), 1e-12)
+    g = jnp.einsum("k,kd->d", w, u) / wsum
+    o_ref[...] = (p - server_lr * g).astype(o_ref.dtype)
+
+
+def _avg_q4_kernel(w_ref, qp_ref, s_ref, o_ref, *, server_lr: float,
+                   mode: str, alpha: float, discount: str, qblock: int):
+    del server_lr
+    w = _weights(w_ref[...], alpha, discount)
+    u = _unpack_q4_tile(qp_ref[...], s_ref[...], qblock)
+    g = jnp.einsum("k,kd->d", w, u)
+    if mode != "sum":  # "avg" normalizes; "sum" is the per-shard partial
+        g = g / jnp.maximum(jnp.sum(w), 1e-12)
+    o_ref[...] = g.astype(o_ref.dtype)
+
+
+def safl_aggregate_q4(qp: jax.Array, scales: jax.Array, weights: jax.Array,
+                      params: jax.Array | None = None,
+                      server_lr: float = 1.0, mode: str = "fedsgd",
+                      qblock: int = QBLOCK, block_d: int = BLOCK_D,
+                      interpret: bool = True, alpha: float = 0.5,
+                      discount: str = "none") -> jax.Array:
+    """Packed-int4 ``safl_aggregate``: qp (K, Dq/2) int8 (two nibbles per
+    byte), scales (K, Dq/qblock) f32, weights (K,), params (D,) [fedsgd /
+    mix] -> (D,) (fedsgd / mix) or (Dq,) (avg / sum).  Nibble unpack,
+    blockwise dequantize, discount, reduction and server step run in one
+    pass over the packed buffer — the K x D HBM read is 8x fewer bytes
+    than the f32 channel.  Oracle: :func:`repro.kernels.ref.safl_agg_q4_ref`
+    and friends."""
+    assert discount in _DISCOUNTS
+    K, half = qp.shape
+    Dq = 2 * half
+    qp, scales, Dp = _pad_q4(qp, scales, block_d, qblock)
+    grid = (Dp // block_d,)
+    s_spec = pl.BlockSpec((K, block_d // qblock), lambda i: (0, i))
+    if mode in ("fedsgd", "mix"):
+        assert params is not None
+        D = params.shape[0]
+        assert D <= Dq, (D, Dq)
+        p = jnp.pad(params, (0, Dp - D)) if D < Dp else params
+        args = (weights, qp, scales, p)
+        in_specs = [
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K, block_d // 2), lambda i: (0, i)),
+            s_spec,
+            pl.BlockSpec((block_d,), lambda i: (i,)),
+        ]
+        kern, out_dtype, out_len = _agg_q4_kernel, params.dtype, D
+    else:
+        args = (weights, qp, scales)
+        in_specs = [
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K, block_d // 2), lambda i: (0, i)),
+            s_spec,
+        ]
+        kern, out_dtype, out_len = _avg_q4_kernel, jnp.float32, Dq
+    out = pl.pallas_call(
+        functools.partial(kern, server_lr=server_lr, mode=mode, alpha=alpha,
+                          discount=discount, qblock=qblock),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Dp,), out_dtype),
+        interpret=interpret,
+    )(*args)
+    return out[:out_len]
+
+
+def _fold_q4_kernel(s_ref, a_ref, qp_ref, sc_ref, o_ref, *, qblock: int):
+    """Streaming fold of one packed-q4 row tile: unpack + blockwise
+    dequantize the (BLOCK_D/2,) byte slice in VMEM, then o = beta*a + w*u."""
+    u = _unpack_q4_tile(qp_ref[...][None], sc_ref[...][None], qblock)[0]
+    o_ref[...] = s_ref[0] * a_ref[...].astype(jnp.float32) + s_ref[1] * u
+
+
+def safl_fold_q4(acc: jax.Array, qp_row: jax.Array, scales_row: jax.Array,
+                 w, beta=1.0, qblock: int = QBLOCK,
+                 block_d: int = BLOCK_D, interpret: bool = True) -> jax.Array:
+    """Packed-q4 streaming fold: acc (Dq,) f32, qp_row (Dq/2,) int8,
+    scales_row (Dq/qblock,) f32 -> beta*acc + w*dequant(unpack(qp_row)),
+    one fused pass (oracle :func:`repro.kernels.ref.fold_q4_ref`)."""
+    Dq = acc.shape[0]
+    assert qp_row.shape == (Dq // 2,) and block_d % qblock == 0
+    pad = (-Dq) % block_d
+    if pad:
+        acc = jnp.pad(acc, (0, pad))
+        qp_row = jnp.pad(qp_row, (0, pad // 2))
+        scales_row = jnp.pad(scales_row, (0, pad // qblock))
+    Dp = Dq + pad
+    sw = jnp.stack([jnp.asarray(beta, jnp.float32),
+                    jnp.asarray(w, jnp.float32)])
+    vec_spec = pl.BlockSpec((block_d,), lambda i: (i,))
+    out = pl.pallas_call(
+        functools.partial(_fold_q4_kernel, qblock=qblock),
+        grid=(Dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            vec_spec,
+            pl.BlockSpec((block_d // 2,), lambda i: (i,)),
+            pl.BlockSpec((block_d // qblock,), lambda i: (i,)),
+        ],
+        out_specs=vec_spec,
+        out_shape=jax.ShapeDtypeStruct((Dp,), jnp.float32),
+        interpret=interpret,
+    )(sw, acc, qp_row, scales_row)
+    return out[:Dq]
+
+
+def _sdga_q4_kernel(tau_ref, qp_ref, s_ref, p_ref, m_ref, e_ref,
+                    op_ref, om_ref, oe_ref, *, server_lr: float,
+                    alpha: float, momentum: float, ema_anchor: float,
+                    ema_decay: float, qblock: int, discount: str):
+    w = _weights(tau_ref[...], alpha, discount)
+    u = _unpack_q4_tile(qp_ref[...], s_ref[...], qblock)
+    wsum = jnp.maximum(jnp.sum(w), 1e-12)
+    g = jnp.einsum("k,kd->d", w, u) / wsum
+    m_new = momentum * m_ref[...].astype(jnp.float32) + g
+    p = p_ref[...].astype(jnp.float32)
+    e = e_ref[...].astype(jnp.float32)
+    p_new = p - server_lr * m_new + ema_anchor * (e - p)
+    e_new = ema_decay * e + (1.0 - ema_decay) * p_new
+    op_ref[...] = p_new.astype(op_ref.dtype)
+    om_ref[...] = m_new.astype(om_ref.dtype)
+    oe_ref[...] = e_new.astype(oe_ref.dtype)
+
+
+def sdga_aggregate_q4(qp: jax.Array, scales: jax.Array, staleness: jax.Array,
+                      params: jax.Array, mom: jax.Array, ema: jax.Array, *,
+                      server_lr: float, alpha: float = 0.5,
+                      momentum: float = 0.8, ema_anchor: float = 0.05,
+                      ema_decay: float = 0.95, qblock: int = QBLOCK,
+                      block_d: int = BLOCK_D, interpret: bool = True,
+                      discount: str = "poly"):
+    """Packed-q4 SDGA round: qp (K, Dq/2) int8, scales (K, Dq/qblock),
+    staleness (K,), params/mom/ema (D,) -> (new_params, new_mom, new_ema),
+    all (D,), with nibble unpack + blockwise dequantize fused into the
+    single pass.  ``discount`` as in :func:`sdga_aggregate`."""
+    assert discount in _DISCOUNTS
+    K, half = qp.shape
+    Dq = 2 * half
+    D = params.shape[0]
+    assert D <= Dq, (D, Dq)
+    qp, scales, Dp = _pad_q4(qp, scales, block_d, qblock)
+    pad = Dp - D
+    if pad:
+        params = jnp.pad(params, (0, pad))
+        mom = jnp.pad(mom, (0, pad))
+        ema = jnp.pad(ema, (0, pad))
+    vec_spec = pl.BlockSpec((block_d,), lambda i: (i,))
+    kern = functools.partial(
+        _sdga_q4_kernel, server_lr=server_lr, alpha=alpha, momentum=momentum,
+        ema_anchor=ema_anchor, ema_decay=ema_decay, qblock=qblock,
+        discount=discount)
+    outs = pl.pallas_call(
+        kern,
+        grid=(Dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K, block_d // 2), lambda i: (0, i)),
+            pl.BlockSpec((K, block_d // qblock), lambda i: (0, i)),
+            vec_spec, vec_spec, vec_spec,
+        ],
+        out_specs=[vec_spec, vec_spec, vec_spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((Dp,), params.dtype),
+            jax.ShapeDtypeStruct((Dp,), jnp.float32),
+            jax.ShapeDtypeStruct((Dp,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(staleness, qp, scales, params, mom, ema)
+    return tuple(o[:D] for o in outs)
+
+
+# ---------------------------------------------------------------------------
+# top-k sparse channel: fused gather-dequant-scatter-accumulate
+# ---------------------------------------------------------------------------
+
+
+def _topk_sum_kernel(w_ref, idx_ref, qv_ref, s_ref, o_ref, *, qblock: int,
+                     block_d: int):
+    """One (BLOCK_D,) output tile of sum_k w_k scatter(dequant(qv_k),
+    idx_k): the full compacted (K, nk) payload sits in VMEM each step;
+    coordinates are rebased to the tile and out-of-tile (and padding,
+    idx == d) lanes are clamped with zero contribution — no dense per-row
+    materialization, no data-dependent control flow."""
+    i = pl.program_id(0)
+    w = w_ref[...].astype(jnp.float32)  # (K,)
+    vals = _dequant_tile(qv_ref[...], s_ref[...], qblock)  # (K, nk) f32
+    c = (w[:, None] * vals).reshape(-1)
+    loc = idx_ref[...].reshape(-1) - i * block_d
+    inb = (loc >= 0) & (loc < block_d)
+    safe = jnp.where(inb, loc, 0)
+    o_ref[...] = jnp.zeros((block_d,), jnp.float32).at[safe].add(
+        jnp.where(inb, c, 0.0))
+
+
+def safl_aggregate_topk(idx: jax.Array, qv: jax.Array, scales: jax.Array,
+                        weights: jax.Array, d: int,
+                        qblock: int = QBLOCK, block_d: int = BLOCK_D,
+                        interpret: bool = True) -> jax.Array:
+    """Fused gather-dequant-scatter-accumulate over the sparse channel.
+
+    idx (K, nk) int32 dense coordinates (padding lanes carry idx == d),
+    qv (K, nk) int8 compacted values, scales (K, nk/qblock) f32,
+    weights (K,) FINAL reduction weights -> the unnormalized weighted
+    sum (d,) f32.  The dense row of an upload is never materialized:
+    each grid step scatters every upload's in-tile coordinates straight
+    into its (BLOCK_D,) accumulator tile.  Oracle:
+    :func:`repro.kernels.ref.topk_weighted_sum_ref` (the caller applies
+    the per-mode server step from the reduced sums).
+    """
+    K, nk = idx.shape
+    assert qv.shape == (K, nk) and nk % qblock == 0, (qv.shape, nk, qblock)
+    dp = d + ((-d) % block_d)
+    out = pl.pallas_call(
+        functools.partial(_topk_sum_kernel, qblock=qblock, block_d=block_d),
+        grid=(dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((K,), lambda i: (0,)),
+            pl.BlockSpec((K, nk), lambda i: (0, 0)),
+            pl.BlockSpec((K, nk), lambda i: (0, 0)),
+            pl.BlockSpec((K, nk // qblock), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_d,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=interpret,
+    )(weights, idx, qv, scales)
+    return out[:d]
+
+
+def _fold_topk_kernel(sw_ref, a_ref, idx_ref, qv_ref, s_ref, o_ref, *,
+                      qblock: int, block_d: int):
+    """One (BLOCK_D,) tile of the sparse streaming fold
+    o = beta*a + w * scatter(dequant(qv), idx), tile-rebased as in
+    :func:`_topk_sum_kernel`."""
+    i = pl.program_id(0)
+    nk = qv_ref.shape[0]
+    vals = (qv_ref[...].astype(jnp.float32).reshape(nk // qblock, qblock)
+            * s_ref[...][:, None]).reshape(nk)
+    loc = idx_ref[...] - i * block_d
+    inb = (loc >= 0) & (loc < block_d)
+    safe = jnp.where(inb, loc, 0)
+    upd = jnp.zeros((block_d,), jnp.float32).at[safe].add(
+        jnp.where(inb, sw_ref[1] * vals, 0.0))
+    o_ref[...] = sw_ref[0] * a_ref[...].astype(jnp.float32) + upd
+
+
+def safl_fold_topk(acc: jax.Array, idx: jax.Array, qv: jax.Array,
+                   scales: jax.Array, w, beta=1.0, qblock: int = QBLOCK,
+                   block_d: int = BLOCK_D, interpret: bool = True
+                   ) -> jax.Array:
+    """Sparse streaming fold: acc (d,) f32 running sum, idx (nk,) int32 +
+    qv (nk,) int8 + scales (nk/qblock,) f32 one arriving sparse upload ->
+    beta*acc + w*scatter(dequant(qv), idx), one fused pass (oracle
+    :func:`repro.kernels.ref.fold_topk_ref`).  Padding coordinates
+    (idx == d) fall past the live range — masked out or scattered into
+    the sliced-off pad zone — so they never touch the first d lanes."""
+    d = acc.shape[0]
+    nk = qv.shape[0]
+    assert idx.shape == (nk,) and nk % qblock == 0, (idx.shape, nk, qblock)
+    pad = (-d) % block_d
+    if pad:
+        acc = jnp.pad(acc, (0, pad))
+    dp = d + pad
+    sw = jnp.stack([jnp.asarray(beta, jnp.float32),
+                    jnp.asarray(w, jnp.float32)])
+    vec_spec = pl.BlockSpec((block_d,), lambda i: (i,))
+    out = pl.pallas_call(
+        functools.partial(_fold_topk_kernel, qblock=qblock, block_d=block_d),
+        grid=(dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((2,), lambda i: (0,)),
+            vec_spec,
+            pl.BlockSpec((nk,), lambda i: (0,)),
+            pl.BlockSpec((nk,), lambda i: (0,)),
+            pl.BlockSpec((nk // qblock,), lambda i: (0,)),
+        ],
+        out_specs=vec_spec,
+        out_shape=jax.ShapeDtypeStruct((dp,), jnp.float32),
+        interpret=interpret,
+    )(sw, acc, idx, qv, scales)
+    return out[:d]

@@ -40,7 +40,22 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--compress", action="store_true",
                     help="int8 quantized upload channel (error-feedback "
-                         "residuals on gradient targets)")
+                         "residuals on gradient targets); legacy alias "
+                         "for --wire q8")
+    ap.add_argument("--wire", default="f32",
+                    choices=["f32", "q8", "q4", "topk"],
+                    help="upload wire format: f32 (dense rows), q8 "
+                         "(per-block int8), q4 (packed two-lane int4 "
+                         "with stochastic rounding — the SR key is "
+                         "fold_in(fold_in(PRNGKey(seed), cid), per-"
+                         "client upload counter), so sequential and "
+                         "batched engines stay bit-identical), topk "
+                         "(sparse (indices, values) rows, gradient "
+                         "aggregations only; dropped coordinates feed "
+                         "the error-feedback residual)")
+    ap.add_argument("--topk-frac", type=float, default=0.1,
+                    help="--wire topk: fraction of coordinates kept per "
+                         "upload (rounded up to a whole quant block)")
     ap.add_argument("--eval-every", type=int, default=1,
                     help="evaluate every Nth aggregation round (the final "
                          "round is always evaluated); >1 thins the metric "
@@ -168,6 +183,7 @@ def main() -> None:
                    aggregation=args.aggregation, client_lr=0.05,
                    server_lr=slr, seed=args.seed, speed_sigma=0.8,
                    compress_updates=args.compress,
+                   wire=args.wire, topk_frac=args.topk_frac,
                    eval_every=args.eval_every,
                    batch_clients=not args.sequential,
                    devices=args.devices, wave_impl=args.wave_impl,

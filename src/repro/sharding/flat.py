@@ -90,7 +90,7 @@ def constrain_rows(tree, mesh: Optional[Mesh]):
 
 
 def podwise_sums(mesh: Mesh, partial_fn: Callable,
-                 quantized: bool) -> Callable:
+                 quantized: bool | int) -> Callable:
     """The server reduction as a collective: per-shard partials + one psum.
 
     ``partial_fn(buf_shard, wvec_shard) -> (gsum_local, wsum_local)``
@@ -100,9 +100,17 @@ def podwise_sums(mesh: Mesh, partial_fn: Callable,
     ``P("pod", None)`` — to the globally reduced ``(gsum (D,), wsum ())``,
     replicated on every device.  Callable from inside a jitted program
     (FlatServer's one-program server round keeps being one program).
+
+    ``quantized`` names the buffer payload arity: ``False`` for a single
+    (K, D) array, ``True`` for the (q, scales) pair of the q8/q4 wire
+    formats, or an int n for an n-tuple payload — 3 for the top-k
+    (idx, qv, scales) triple.  Every part is row-sharded ``P("pod",
+    None)`` the same way.
     """
-    buf_spec = ((P(POD_AXIS, None), P(POD_AXIS, None)) if quantized
-                else P(POD_AXIS, None))
+    parts = (2 if quantized else 1) if isinstance(quantized, bool) \
+        else int(quantized)
+    buf_spec = (P(POD_AXIS, None) if parts == 1
+                else tuple(P(POD_AXIS, None) for _ in range(parts)))
 
     def local(buf, wvec):
         gsum, wsum = partial_fn(buf, wvec)

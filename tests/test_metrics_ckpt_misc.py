@@ -8,8 +8,8 @@ import numpy as np
 import pytest
 
 from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
-from repro.core import compression
 from repro.core.metrics import MetricsLog
+from repro.kernels import quantize as compression
 
 
 def _log_from_curve(acc, target=0.5):

@@ -8,9 +8,11 @@ as the bit-exact parity oracle.  These tests pin:
 
   * streaming == buffered BITWISE final params for every aggregation
     mode on the f32 channel (both engine paths), and within a small
-    relative bound on q8 (the buffered oracle dequantizes inside the
+    relative bound on q8/q4 (the buffered oracle dequantizes inside the
     reduction with coefficient folding; the streaming path dequantizes
-    per upload — same math, different rounding order);
+    per upload — same math, different rounding order); the sparse topk
+    wire IS channel-bitwise (both channels run the same sequential
+    scatter-fold chain);
   * discount-at-ingest for the reweighting paths (fedqs scores,
     fedasync rates) — folded weights match the reduce-time oracle;
   * queue / timeout / hybrid horizon triggers end-to-end, sequential
@@ -113,6 +115,35 @@ def test_streaming_q8_matches_buffered_close(setup, aggregation):
     ps, pb = _params(es), _params(eb)
     rel = np.linalg.norm(ps - pb) / max(np.linalg.norm(pb), 1e-12)
     assert rel < 2e-2, rel
+
+
+@pytest.mark.parametrize("aggregation", ["fedsgd", "fedbuff", "fedasync"])
+def test_streaming_q4_matches_buffered_close(setup, aggregation):
+    """q4 mirrors the q8 parity character: the buffered oracle folds
+    1/wsum into the dequant-reduction coefficients, the streaming path
+    divides after the fold chain — same math, different rounding order,
+    so a tight relative bound rather than bitwise."""
+    _, es = _run(setup, aggregation, server_channel="streaming",
+                 wire="q4")
+    _, eb = _run(setup, aggregation, server_channel="buffered",
+                 wire="q4")
+    ps, pb = _params(es), _params(eb)
+    rel = np.linalg.norm(ps - pb) / max(np.linalg.norm(pb), 1e-12)
+    assert rel < 2e-2, rel
+
+
+@pytest.mark.parametrize("batched", [False, True])
+def test_streaming_topk_matches_buffered_bitwise(setup, batched):
+    """topk IS bitwise across channels: both the buffered oracle and the
+    streaming channel run the same sequential scatter-fold chain over
+    the sparse rows (the dense row is never materialized), feeding the
+    identical _from_sums finalize."""
+    rs, es = _run(setup, "fedbuff", server_channel="streaming",
+                  wire="topk", batch_clients=batched)
+    rb, eb = _run(setup, "fedbuff", server_channel="buffered",
+                  wire="topk", batch_clients=batched)
+    assert _bitwise(_params(es), _params(eb))
+    _same_accounting(rs, rb)
 
 
 def test_fedqs_score_folded_at_ingest(setup):
@@ -263,6 +294,26 @@ def test_ratelimit_deadlock_guard():
 
 
 # ---------------------------- mesh leg ------------------------------
+
+
+@multidevice
+@pytest.mark.parametrize("wire", ["q4", "topk"])
+def test_mesh_wire_seq_matches_batched(setup, wire):
+    """Sub-byte/sparse wires on a pod mesh: the horizon-batched engine
+    reproduces the sequential oracle bitwise at the same device count
+    (the SR counter keying is per-client, so sharding the waves cannot
+    reorder the draws), and topk stays channel-bitwise too."""
+    n = 4 if NDEV >= 4 else 2
+    rs, es = _run(setup, "fedbuff", k=n, devices=n, wire=wire,
+                  batch_clients=False)
+    rb, eb = _run(setup, "fedbuff", k=n, devices=n, wire=wire,
+                  batch_clients=True)
+    assert _bitwise(_params(es), _params(eb))
+    _same_accounting(rs, rb)
+    if wire == "topk":
+        _, ec = _run(setup, "fedbuff", k=n, devices=n, wire=wire,
+                     server_channel="buffered")
+        assert _bitwise(_params(eb), _params(ec))
 
 
 @multidevice
