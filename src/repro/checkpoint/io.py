@@ -42,11 +42,13 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree,
             "treedef": str(treedef),
             "dtypes": [str(np.asarray(l).dtype) for l in flat]}
     path = os.path.join(ckpt_dir, f"ckpt_{step:08d}")
-    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".npz.tmp")
+    # the tmp name ends in ".npz" so np.savez writes THIS file instead of
+    # appending a second suffix (which used to leave the zero-byte
+    # mkstemp file behind) — one deterministic atomic rename
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp.npz")
     os.close(fd)
     np.savez(tmp, **arrays)
-    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp,
-               path + ".npz")
+    os.replace(tmp, path + ".npz")
     with open(path + ".json", "w") as f:
         json.dump(meta, f)
     _gc(ckpt_dir, keep)
@@ -56,10 +58,32 @@ def save_checkpoint(ckpt_dir: str, step: int, tree: Pytree,
 def _gc(ckpt_dir: str, keep: int) -> None:
     steps = sorted(latest_steps(ckpt_dir))
     for s in steps[:-keep]:
-        for ext in (".npz", ".json"):
-            p = os.path.join(ckpt_dir, f"ckpt_{s:08d}{ext}")
+        for name in (f"ckpt_{s:08d}.npz", f"ckpt_{s:08d}.json",
+                     f"engine_{s:08d}.json"):
+            p = os.path.join(ckpt_dir, name)
             if os.path.exists(p):
                 os.remove(p)
+
+
+def save_state_json(ckpt_dir: str, step: int, state: Any) -> str:
+    """Atomically write the host-side engine state sidecar
+    (``engine_{step:08d}.json``) next to the step's array checkpoint.
+    Python's json round-trips floats exactly (repr-based), so simulated
+    clocks and heap times survive bit-exactly.  Retention is driven by
+    :func:`save_checkpoint`'s ``_gc`` — the sidecar of a dropped step is
+    removed with its arrays."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    path = os.path.join(ckpt_dir, f"engine_{step:08d}.json")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp.json")
+    with os.fdopen(fd, "w") as f:
+        json.dump(state, f)
+    os.replace(tmp, path)
+    return path
+
+
+def load_state_json(ckpt_dir: str, step: int) -> Any:
+    with open(os.path.join(ckpt_dir, f"engine_{step:08d}.json")) as f:
+        return json.load(f)
 
 
 def latest_steps(ckpt_dir: str):

@@ -262,6 +262,44 @@ class FLConfig:
     (no buffer slot, no tx bytes) and retrain from the current global
     model; the run summary counts ``idle_requests`` next to the
     rejected/no-show counters.
+
+    Fault injection + server defense (``fault_*`` / ``defense``,
+    tentpole PR 8): a :class:`repro.faults.FaultPlan` draws one fault
+    per (client, upload attempt), keyed per (cid, upload counter) from
+    the jax PRNG exactly like the q4 stochastic rounding, so the
+    sequential and batched engines replay bit-identical chaos:
+
+    ==========  ============================  =========================
+    knob        fault                         defense that catches it
+    ==========  ============================  =========================
+    fault_      upload lost + client reboot:  none needed — the sched
+    crash_p     progress discarded, WAKE      re-enqueues with backoff
+                re-enqueued after
+                ``fault_retry_backoff_s *
+                2^min(streak,cap)-1``
+    fault_      next compute period runs      staleness discount /
+    straggler_p ``fault_straggler_mult`` x    seafl cap (existing)
+                slower
+    fault_      NaN/Inf lanes (f32), XOR      ``defense=screen``:
+    corrupt_p   bit-flips + Inf scale block   non-finite row sums get
+                (q8/q4/topk)                  weight 0
+    fault_      row (f32) or scales (quant)   ``defense=screen|clip``
+    byzantine_p x ``-fault_byzantine_         with ``defense_norm_cap``
+                rescale``                     > 0 (norm screen / clip)
+    ==========  ============================  =========================
+
+    ``defense`` runs a fused per-row screening pass (sum of squares of
+    the dequantized row — Pallas kernel on TPU, jnp oracle on CPU) on
+    every upload; verdicts ride the ``external_discount`` weight path:
+    ``screen`` zeroes a screened row's aggregation weight (the buffered
+    channel also zeroes its payload; the streaming channel skips the
+    fold — a folded row cannot be un-folded), ``clip`` down-weights
+    finite rows to ``defense_norm_cap / norm`` influence.  Screened /
+    clipped counts land in the device metrics ring and the run summary.
+    Engine snapshots (``FLEngine.save_snapshot`` / ``load_snapshot``,
+    ``fl_sim --ckpt-dir/--ckpt-every/--resume``) capture the full
+    engine + sched + fault state between aggregation rounds;
+    kill-and-resume replays the uninterrupted run bit-exactly.
     """
 
     n_clients: int = 50
@@ -362,6 +400,30 @@ class FLConfig:
     # aggregation round; the final round is always evaluated.  1 = every
     # round (the paper's per-round curves).
     eval_every: int = 1
+    # ---- fault injection + server defense (tentpole PR 8) ----
+    # per-upload fault probabilities (priority: crash > straggler >
+    # corrupt > byzantine; the first that fires wins the draw).  All
+    # zero -> no FaultPlan is built and the engine is bit-identical to
+    # a faultless build.  Semi-async only (faults ride the event heap).
+    fault_crash_p: float = 0.0
+    fault_straggler_p: float = 0.0
+    fault_straggler_mult: float = 8.0  # compute spike on the next period
+    fault_corrupt_p: float = 0.0
+    fault_byzantine_p: float = 0.0
+    fault_byzantine_rescale: float = 10.0  # row/scales x -rescale
+    fault_seed: int = 7  # offsets the fault stream from SR/timing draws
+    # crash retry: WAKE re-enqueued after backoff_s * 2^(streak-1),
+    # exponent capped at fault_retry_cap (bounded backoff, so the
+    # one-pending-event-per-client heap invariant always holds)
+    fault_retry_backoff_s: float = 1.0
+    fault_retry_cap: int = 5
+    # server-side defense: "none" | "screen" (zero the aggregation
+    # weight of rows whose screening sum is non-finite, or whose L2
+    # norm exceeds defense_norm_cap when > 0) | "clip" (drop non-finite
+    # rows, down-weight finite rows to defense_norm_cap/norm influence
+    # — requires defense_norm_cap > 0)
+    defense: str = "none"
+    defense_norm_cap: float = 0.0  # 0 -> isfinite screening only
     # metrics
     target_accuracy: float = 0.5  # Acc_t for T_f / T_s
     oscillation_thresholds: Tuple[float, ...] = (0.02, 0.05, 0.10, 0.15)
@@ -449,6 +511,29 @@ class FLConfig:
         assert isinstance(self.batch_clients, bool)
         assert self.wave_impl in ("vmap", "map", "auto"), self.wave_impl
         assert isinstance(self.wave_buckets, bool)
+        # fault injection + defense (tentpole PR 8)
+        for p in (self.fault_crash_p, self.fault_straggler_p,
+                  self.fault_corrupt_p, self.fault_byzantine_p):
+            assert 0.0 <= p <= 1.0, f"fault probability {p} not in [0, 1]"
+        if (self.fault_crash_p or self.fault_straggler_p
+                or self.fault_corrupt_p or self.fault_byzantine_p):
+            assert self.mode == "semi_async", \
+                ("fault injection rides the semi-async event heap; the "
+                 "sync round has no per-upload schedule to perturb")
+        assert self.fault_straggler_mult >= 1.0, \
+            "fault_straggler_mult must be >= 1 (a spike, not a speedup)"
+        assert self.fault_byzantine_rescale > 0.0
+        assert self.fault_retry_backoff_s > 0.0
+        assert self.fault_retry_cap >= 1, \
+            "fault_retry_cap must be >= 1 (caps the backoff exponent)"
+        assert self.defense in ("none", "screen", "clip"), self.defense
+        if self.defense != "none":
+            assert self.mode == "semi_async", \
+                "defense screening guards the semi-async upload channel"
+        if self.defense == "clip":
+            assert self.defense_norm_cap > 0.0, \
+                "defense='clip' needs defense_norm_cap > 0 (the norm cap)"
+        assert self.defense_norm_cap >= 0.0
         # the podwise server reduction shard_maps the K buffer rows over
         # the pod axis, which requires an even split
         assert self.devices >= 1, "devices must be >= 1"

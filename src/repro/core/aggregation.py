@@ -781,6 +781,49 @@ class FlatServer:
             _finalize,
             donate_argnums=(1,) + ((0, 3) if donate else ()))
 
+        # ---- defense screening: fused per-row isfinite + L2 (PR 8) ----
+        # One sum of squares per row of the wire payload (dequantized for
+        # the lossy wires, computed blockwise without materializing the
+        # dense row).  NaN/Inf lanes — or a corrupted scale — poison the
+        # sum, so isfinite(sumsq) is the integrity verdict and
+        # sqrt(sumsq) the L2 norm for cap checks.  Row-independent
+        # reductions, so the single-upload (K=1) and wave-stacked calls
+        # agree bitwise — the channel-parity invariant.
+        if quantized or q4:
+            def _screen(qrows, scales):
+                if use_pallas:
+                    fn = (_k.screen_rows_q8 if quantized
+                          else _k.screen_rows_q4)
+                    return fn(qrows, scales, qblock=qb, block_d=bd,
+                              interpret=interpret)
+                fn = (_ref.screen_sumsq_q8_ref if quantized
+                      else _ref.screen_sumsq_q4_ref)
+                return fn(qrows, scales, qb)
+        elif topk:
+            def _screen(idx, qv, scales):
+                del idx  # integrity lives in the value/scale lanes
+                if use_pallas:
+                    return _k.screen_rows_q8(qv, scales, qblock=qb,
+                                             block_d=bd,
+                                             interpret=interpret)
+                return _ref.screen_sumsq_q8_ref(qv, scales, qb)
+        else:
+            def _screen(rows):
+                if use_pallas:
+                    return _k.screen_rows(rows, block_d=bd,
+                                          interpret=interpret)
+                return _ref.screen_sumsq_ref(rows)
+        self._screen_fn = jax.jit(_screen)
+
+    def screen(self, payload) -> jax.Array:
+        """(K,) f32 sums of squares of the K payload rows, on the wire's
+        native format (``payload`` = the same tuple the step/fold
+        consume: ``(rows,)`` f32, ``(q, scales)`` q8/q4, ``(idx, qv,
+        scales)`` topk).  Per-row reductions are K-independent, so the
+        sequential engine's K=1 call and the batched wave call return
+        bitwise-identical values for the same row."""
+        return self._screen_fn(*payload)
+
     def init_opt(self, params_flat: jax.Array):
         """Mode-matched slow state (flat f32 vectors, donated each round)."""
         z = lambda: jnp.zeros((self.d,), jnp.float32)

@@ -420,6 +420,20 @@ class AccumBuffer:
         self.stal_sum += int(staleness)
         self.stal_max = max(self.stal_max, int(staleness))
 
+    def skip(self, *, shard: int = 0, staleness: int = 0) -> None:
+        """Record a *screened* upload without touching the bank: appends
+        an exact 0.0 to the shard's ingest-weight list (keeping ``wvec``
+        the same natural length as the buffered channel's weight vector,
+        so the finalize reduction trees match bitwise — adding 0.0 to a
+        sum is exact) and counts the arrival in the horizon stats.  Used
+        by the defense layer when a row's payload must not be folded at
+        all: 0 x NaN is NaN, so a zero *weight* alone would still poison
+        the sums."""
+        self._w[shard].append(np.float32(0.0))
+        self.count += 1
+        self.stal_sum += int(staleness)
+        self.stal_max = max(self.stal_max, int(staleness))
+
     def seal(self):
         """Close the horizon: returns ``(bank, wvec, stats)`` and swaps
         the spare bank in so the next horizon's folds can start while the

@@ -176,6 +176,10 @@ class RoundRecord:
     # L2 norm of the applied global-model delta (computed inside the fused
     # server program; 0.0 for paths that don't report it)
     update_norm: float = 0.0
+    # CUMULATIVE defense-layer counts at this round (like tx/rx bytes):
+    # uploads dropped by the screen and influence-clipped by the norm cap
+    screened_uploads: int = 0
+    clipped_uploads: int = 0
 
 
 class MetricsLog:
@@ -240,6 +244,18 @@ class MetricsLog:
     def nan_rounds(self) -> int:
         return sum(1 for r in self.records if r.nan_event)
 
+    def first_nan_round(self) -> Optional[int]:
+        for r in self.records:
+            if r.nan_event:
+                return r.round
+        return None
+
+    def screened_uploads(self) -> int:
+        return self.records[-1].screened_uploads if self.records else 0
+
+    def clipped_uploads(self) -> int:
+        return self.records[-1].clipped_uploads if self.records else 0
+
     def accuracy_curve(self) -> np.ndarray:
         return np.array([(r.round, r.accuracy) for r in self.records])
 
@@ -253,6 +269,8 @@ class MetricsLog:
             "stability": self.stability(),
             "oscillations": self.oscillations(),
             "nan_rounds": self.nan_rounds(),
+            "screened_uploads": self.screened_uploads(),
+            "clipped_uploads": self.clipped_uploads(),
             "duration_s": self.duration(),
             "tx_GB": self.total_tx_bytes() / 1e9,
             "rx_GB": self.total_rx_bytes() / 1e9,

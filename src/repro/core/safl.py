@@ -116,14 +116,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import faults as faultsmod
 from repro import sched as schedmod
+from repro.checkpoint import io as ckptio
 from repro.core import aggregation as agg
 from repro.core import flatbuf
 from repro.core.client import (ClientState, make_batched_hetero_train,
                                make_batched_local_train, make_eval_fn,
                                make_flat_eval_fn, make_local_train,
                                pytree_bytes, resolve_wave_impl, stack_rows)
-from repro.core.metrics import DeviceMetricsRing, MetricsLog
+from repro.core.metrics import DeviceMetricsRing, MetricsLog, RoundRecord
 from repro.kernels.quantize import payload_nbytes
 from repro.sharding import flat as shflat
 
@@ -236,6 +238,20 @@ class FLEngine:
         # n), drawn inside the jitted quantize program, so the
         # sequential and batched paths reproduce the draws bit-exactly
         self._sr_counter: Dict[int, int] = {}
+        # ---- fault injection + server-side defense (PR 8) ----
+        # corrupt/byzantine draws ride the scheduler's SchedEvents into
+        # the payload appliers (repro.faults.payload); crash/straggler
+        # live entirely in the scheduler.  The defense screen runs a
+        # fused per-row isfinite+L2 pass (FlatServer.screen) whose
+        # verdicts zero or clip a row's aggregation weight through the
+        # external_discount path — and, for screened rows, zero the
+        # payload (buffered) or skip the fold (streaming): 0 x NaN is
+        # NaN, so a zero weight alone cannot contain a poisoned row.
+        self._defense = fl_cfg.defense
+        self.screened_uploads = 0
+        self.clipped_uploads = 0
+        self.corrupted_uploads = 0
+        self.byzantine_uploads = 0
         self._qbuf = None
         self._tbuf = None
         self._buf = None
@@ -478,8 +494,63 @@ class FLEngine:
         self._sr_counter[cid] = n + 1
         return n
 
+    # ---------------- fault injection + defense (PR 8) ----------------
+
+    def _apply_payload_faults(self, payload: tuple, faults: List) -> tuple:
+        """Apply corrupt/byzantine draws to one K-stacked wave of wire
+        payload rows (K=1 on the sequential path) — AFTER the
+        error-feedback residual update, so the client believes it sent a
+        clean row (a wire-level fault).  The appliers are shared
+        elementwise jnp programs whose untouched lanes come back bitwise
+        identical, which keeps the no-fault lanes (and both engine
+        paths) exact.  No-op without any fault in the wave."""
+        if not any(f is not None for f in faults):
+            return payload
+        corrupt = [f is not None and f.kind == "corrupt" for f in faults]
+        byz = [f is not None and f.kind == "byzantine" for f in faults]
+        locs = [f.loc if f is not None else 0.0 for f in faults]
+        self.corrupted_uploads += sum(corrupt)
+        self.byzantine_uploads += sum(byz)
+        resc = self.cfg.fault_byzantine_rescale
+        if self._wire == "f32":
+            return (faultsmod.apply_faults_flat(payload[0], corrupt, byz,
+                                                locs, resc),)
+        if self._topk:
+            idx, qv, s = payload
+            qv, s = faultsmod.apply_faults_q(qv, s, corrupt, byz, locs,
+                                             resc)
+            return (idx, qv, s)
+        q, s = payload
+        return faultsmod.apply_faults_q(q, s, corrupt, byz, locs, resc)
+
+    def _screen_factors(self, payload: tuple, kreal: int) -> np.ndarray:
+        """Defense verdicts for ``kreal`` payload rows (extra rows are
+        bucketed-wave padding lanes — screened but never counted or
+        applied): the fused per-row sum-of-squares pass, then the host
+        screen/clip factor composition (repro.faults.defense).  Returns
+        the (kreal,) np.float32 weight factors."""
+        sumsq = np.asarray(self._server.screen(payload))
+        fac, ns, ncl = faultsmod.defense_factors(
+            sumsq[:kreal], self._defense, self.cfg.defense_norm_cap)
+        self.screened_uploads += ns
+        self.clipped_uploads += ncl
+        return fac
+
+    def _zero_screened_rows(self, payload: tuple, mask) -> tuple:
+        """Zero the PAYLOAD of screened rows before the buffered scatter
+        (the streaming channel skips the fold instead): the f32 row
+        itself, or — on every lossy wire — the per-block scales, since
+        dequantizing any int payload against scale 0 is exactly 0.
+        ``jnp.where`` returns unmasked lanes bitwise untouched."""
+        mask = jnp.asarray(mask)[:, None]
+        if self._wire == "f32":
+            return (jnp.where(mask, jnp.float32(0.0), payload[0]),)
+        return payload[:-1] + (jnp.where(mask, jnp.float32(0.0),
+                                         payload[-1]),)
+
     def _enqueue_upload(self, buffer: List[Dict], c: ClientState,
-                        w_end, s_end, staleness: int) -> None:
+                        w_end, s_end, staleness: int,
+                        fault=None) -> None:
         """Serialize one client upload.  Buffered channel: ravel the
         update and write it into the row for the next free slot (the
         buffer is donated — an in-place device write).  Streaming
@@ -489,7 +560,9 @@ class FLEngine:
         fused program either way, and the error-feedback residual stays
         client-side.  Must be called before ``c.params`` is refreshed
         (gradient targets diff against the client's round-start
-        weights)."""
+        weights).  ``fault`` is an optional corrupt/byzantine FaultDraw
+        applied to the serialized payload; with a defense configured the
+        row is screened before it can touch the channel."""
         cfg = self.cfg
         entry: Dict = {"staleness": staleness, "cid": c.cid,
                        "n": c.n_samples}
@@ -550,24 +623,48 @@ class FLEngine:
             else:
                 payload = (self.codec.ravel_delta(c.params, w_end,
                                                   cfg.client_lr),)
+        if fault is not None:
+            # the appliers are row-stacked (shared with the batched
+            # wave); lift the single upload to K=1 and back
+            payload = tuple(a[0] for a in self._apply_payload_faults(
+                tuple(a[None] for a in payload), [fault]))
+        fac = None
+        if self._defense != "none":
+            fac = self._screen_factors(tuple(a[None] for a in payload),
+                                       1)[0]
+            entry["fac"] = fac
         slot = len(buffer)
         if self._streaming:
             # accumulate-on-arrival: the upload's final weight (and, for
             # fedasync, the 1-a survival factor) fold NOW — the horizon's
-            # server round is just a finalize over the partial sums
-            w = self._weight_vector([staleness], [c.n_samples])[0]
-            beta = (np.float32(1.0) - w
-                    if cfg.aggregation == "fedasync" else 1.0)
-            self._accum.fold(payload, w=w, beta=beta,
-                             shard=self._fold_shard(slot),
-                             staleness=staleness)
-        elif self._quant or self._q4:
-            self._qbuf.write(*payload, slot)
-        elif self._topk:
-            self._tbuf.write(*payload, slot)
+            # server round is just a finalize over the partial sums.  A
+            # screened row (factor 0) never folds at all: skip() records
+            # the arrival with an exact 0.0 weight, keeping the finalize
+            # reduction tree identical to the buffered oracle's
+            if fac is not None and fac == np.float32(0.0):
+                self._accum.skip(shard=self._fold_shard(slot),
+                                 staleness=staleness)
+            else:
+                w = self._weight_vector([staleness], [c.n_samples])[0]
+                if fac is not None:
+                    w = np.float32(w * fac)
+                beta = (np.float32(1.0) - w
+                        if cfg.aggregation == "fedasync" else 1.0)
+                self._accum.fold(payload, w=w, beta=beta,
+                                 shard=self._fold_shard(slot),
+                                 staleness=staleness)
         else:
-            self._buf = flatbuf.write_slot(self._buf, payload[0],
-                                           jnp.int32(slot))
+            if fac is not None and fac == np.float32(0.0):
+                payload = self._zero_screened_rows(
+                    tuple(a[None] for a in payload), np.ones(1, bool))
+                payload = tuple(a[0] for a in payload)
+            if self._quant or self._q4:
+                self._qbuf.write(*payload, slot)
+            elif self._topk:
+                self._tbuf.write(*payload, slot)
+            else:
+                self._buf = flatbuf.write_slot(self._buf, payload[0],
+                                               jnp.int32(slot))
         entry["state"] = s_end
         self.tx_bytes += self._upload_nbytes()
         buffer.append(entry)
@@ -621,13 +718,22 @@ class FLEngine:
                              * len(self.clients))
 
     def _server_round(self, staleness: Sequence[int],
-                      sizes: Sequence[int]) -> Dict[str, jax.Array]:
+                      sizes: Sequence[int],
+                      facs: Optional[Sequence[np.float32]] = None
+                      ) -> Dict[str, jax.Array]:
         """Buffered-channel server round: ONE jitted flat program + host
         bookkeeping, shared by the sequential and horizon-batched paths.
         Returns the round's device metric scalars (update_norm) without
-        fetching them."""
+        fetching them.  ``facs`` are the defense layer's per-row weight
+        factors (screen zeros / clip ratios), composed into the weight
+        vector with the same elementwise np.float32 multiply the
+        streaming channel applies per upload — bitwise the same final
+        weights."""
         self._record_staleness(staleness)
-        wvec = jnp.asarray(self._weight_vector(staleness, sizes))
+        w = self._weight_vector(staleness, sizes)
+        if facs is not None:
+            w = w * np.asarray(facs, np.float32)
+        wvec = jnp.asarray(w)
         if self._qbuf is not None:
             buf = self._qbuf.views
         elif self._tbuf is not None:
@@ -666,7 +772,9 @@ class FLEngine:
         if self._streaming:
             m = self._server_round_streaming(stal)
         else:
-            m = self._server_round(stal, [b["n"] for b in buffer])
+            facs = ([b["fac"] for b in buffer]
+                    if self._defense != "none" else None)
+            m = self._server_round(stal, [b["n"] for b in buffer], facs)
         self.global_params = self.codec.unravel(self._flat_params)
         self._last_update_norm = m["update_norm"]
 
@@ -719,7 +827,9 @@ class FLEngine:
             mean_staleness=float(np.mean(stale_vals)) if stale_vals else 0.0,
             max_staleness=int(max(stale_vals)) if stale_vals else 0,
             nan_event=nan_event,
-            update_norm=float(self._last_update_norm))
+            update_norm=float(self._last_update_norm),
+            screened_uploads=self.screened_uploads,
+            clipped_uploads=self.clipped_uploads)
 
     # ------------------------------------------------------------------
     def run(self, n_rounds: int, log_every: int = 0) -> FLResult:
@@ -735,6 +845,12 @@ class FLEngine:
             self._global_stale = False
         stats = self.sched.stats()
         stats["staleness_bins"] = self._dev_stale_hist.copy()
+        # fault/defense accounting (engine side; crashed_uploads comes
+        # from the scheduler's own stats above)
+        stats["screened_uploads"] = self.screened_uploads
+        stats["clipped_uploads"] = self.clipped_uploads
+        stats["corrupted_uploads"] = self.corrupted_uploads
+        stats["byzantine_uploads"] = self.byzantine_uploads
         return FLResult(self.metrics, self.global_params,
                         self.staleness_hist, self.idle_time,
                         participation=self.sched.participation.copy(),
@@ -864,15 +980,18 @@ class FLEngine:
             c = self.clients[cid]
             if not ev.admitted:
                 # "reject" discards local progress + resyncs (selective
-                # training); "idle" is pure back-pressure — the client
-                # keeps its local chain and retries from where it is
+                # training); "crash" is the same reset via the fault
+                # layer (the rebooted client re-enqueues after backoff);
+                # "idle" is pure back-pressure — the client keeps its
+                # local chain and retries from where it is
                 if ev.verdict != "idle":
                     c.params, c.model_state = (self.global_params,
                                                self.global_state)
                     c.version = self.t_global
             else:
                 w_end, s_end, _ = self._run_local(c)
-                self._enqueue_upload(buffer, c, w_end, s_end, ev.staleness)
+                self._enqueue_upload(buffer, c, w_end, s_end, ev.staleness,
+                                     fault=ev.fault)
 
                 # client-side model refresh (paper §2.2.2): adopt newest
                 # global if one arrived since this client's version, else
@@ -944,7 +1063,10 @@ class FLEngine:
         if self._client_flats is None:
             self._client_flats = [self._flat_params] * len(self.clients)
         flats = self._client_flats
-        ring = DeviceMetricsRing(n_rounds + 1, channels=3,
+        # channels: acc, loss, update_norm + the defense layer's
+        # cumulative screened/clipped upload counts (f32 scalars — exact
+        # for any realistic count)
+        ring = DeviceMetricsRing(n_rounds + 1, channels=5,
                                  stale_bins=_STALE_BINS,
                                  n_clients=len(self.clients))
         pending: List[Dict] = []  # host-side fields per recorded round
@@ -963,6 +1085,19 @@ class FLEngine:
             # client this horizon train from the adopted weights. ----
             events: List[Tuple[float, int]] = []
             stal: List[int] = []
+            evfaults: List = []  # per admitted slot: FaultDraw or None
+            n_adm: Dict[int, int] = {}  # admitted events per cid so far
+            # discard-and-resync decisions (reject / crash) landing AFTER
+            # a client's admitted event of this horizon cannot reset the
+            # client inline — its earlier training still has to run.  The
+            # reset lands between its wave lanes instead: the client's
+            # next admitted lane restarts from the round-r global row
+            # (force_global), and a reset with no later admitted event
+            # leaves the client on the global model when the horizon
+            # closes (resync_after) — exactly where the sequential
+            # oracle's inline reset puts it.
+            force_global: set = set()  # (cid, wave) lanes
+            resync_after: set = set()  # cids reset after their last lane
             # the horizon clock advances on EVERY popped event, admitted
             # or not — under rate control the deadline of a timeout
             # horizon is typically crossed by an idled upload, and the
@@ -981,18 +1116,23 @@ class FLEngine:
                         # its wave chain (and version) stay intact, only
                         # the horizon clock advanced
                         continue
-                    # rejection after admission cannot happen under the
-                    # built-in policies (admission resets projected
-                    # staleness to 0); the wave decomposition below
-                    # relies on it, so keep the invariant explicit
-                    assert all(cid != ev.cid for _, cid in events), \
-                        "policy rejected a client it admitted this horizon"
-                    flats[ev.cid] = self._flat_params
-                    c = self.clients[ev.cid]
-                    c.model_state = self.global_state
-                    c.version = r
+                    # "reject" (selective training) and "crash" (fault
+                    # layer) both discard the client's local progress and
+                    # resync it to the round-r global model
+                    k_adm = n_adm.get(ev.cid, 0)
+                    if k_adm == 0:
+                        flats[ev.cid] = self._flat_params
+                        c = self.clients[ev.cid]
+                        c.model_state = self.global_state
+                        c.version = r
+                    else:
+                        force_global.add((ev.cid, k_adm))
+                        resync_after.add(ev.cid)
                     continue
+                n_adm[ev.cid] = n_adm.get(ev.cid, 0) + 1
+                resync_after.discard(ev.cid)
                 stal.append(ev.staleness)
+                evfaults.append(ev.fault)
                 events.append((ev.time, ev.cid))
             if not events:
                 break
@@ -1002,6 +1142,11 @@ class FLEngine:
             wh = betah = None
             pend: Dict[int, tuple] = {}
             next_fold = 0
+            # defense factors per horizon slot (np.float32), filled as
+            # each wave is screened; consumed by the in-order streaming
+            # fold loop and the buffered server round alike
+            hfac: Optional[Dict[int, np.float32]] = (
+                {} if self._defense != "none" else None)
             if self._streaming:
                 # discount-at-ingest weights for the whole horizon,
                 # slot-ordered (identical np kernels to the sequential
@@ -1048,7 +1193,12 @@ class FLEngine:
                         lambda *xs: jnp.stack(xs),
                         *[self.clients[cid].model_state for cid in cids])
                 else:
-                    rows = [carry[cid] for cid in cids]
+                    # a force_global lane restarts from the round-r
+                    # global model (a reject/crash landed between this
+                    # client's admitted events) — same row/state source
+                    # as an adopting lane, so it reuses the None path
+                    rows = [None if (cid, w) in force_global
+                            else carry.get(cid) for cid in cids]
                     if all(rv is None for rv in rows):
                         # common case: every wave-0 member adopted the
                         # round-r global model
@@ -1061,8 +1211,9 @@ class FLEngine:
                         ridx = jnp.asarray(rows)
                         starts = prev_new_flat[ridx]
                         states = tree_stack(lambda l: l[ridx], prev_states)
-                    else:  # mixed (cannot occur under the refresh rule,
-                        # but stay correct if the schedule ever changes)
+                    else:  # mixed: force_global lanes next to continuing
+                        # local chains (mid-horizon crashes), or a future
+                        # schedule the refresh rule doesn't cover
                         starts = stack_rows(
                             [g_flat if rv is None else prev_new_flat[rv]
                              for rv in rows])
@@ -1117,6 +1268,28 @@ class FLEngine:
                 if new_res is not None:
                     for row, cid in enumerate(cids[:kw]):
                         self._residuals[cid] = new_res[row]
+                # wire-level faults land on the serialized rows (the
+                # residuals above were already updated against the clean
+                # payload — the client believes it sent a good row);
+                # padding lanes carry no fault, and the appliers leave
+                # unfaulted lanes bitwise untouched
+                wfaults = [evfaults[slot] for slot, _ in members] \
+                    + [None] * npad
+                prows = self._apply_payload_faults(prows, wfaults)
+                if hfac is not None:
+                    # defense screen: one fused per-row pass over the
+                    # wave (padding lanes screened but never counted);
+                    # verdicts are keyed by horizon slot so the
+                    # streaming fold below consumes them in arrival
+                    # order, exactly like the sequential path
+                    fac = self._screen_factors(prows, kw)
+                    for row, (slot, _cid) in enumerate(members):
+                        hfac[slot] = fac[row]
+                    if not self._streaming \
+                            and bool((fac == np.float32(0.0)).any()):
+                        mask = np.zeros(kb, bool)
+                        mask[:kw] = fac == np.float32(0.0)
+                        prows = self._zero_screened_rows(prows, mask)
                 if self._streaming:
                     # hold-and-release: waves surface rows out of arrival
                     # order (wave 0 spans the whole horizon), but the
@@ -1129,10 +1302,23 @@ class FLEngine:
                         pend[slot] = tuple(a[row] for a in prows)
                     while next_fold in pend:
                         payload = pend.pop(next_fold)
+                        fw = wh[next_fold]
+                        if hfac is not None:
+                            fv = hfac[next_fold]
+                            if fv == np.float32(0.0):
+                                # screened: the fold is skipped outright
+                                # (0 x NaN is NaN) — skip() records the
+                                # arrival with an exact 0.0 weight
+                                self._accum.skip(
+                                    shard=self._fold_shard(next_fold),
+                                    staleness=stal[next_fold])
+                                next_fold += 1
+                                continue
+                            fw = np.float32(fw * fv)
                         self._accum.fold(
-                            payload, w=wh[next_fold],
-                            beta=(betah[next_fold] if betah is not None
-                                  else 1.0),
+                            payload, w=fw,
+                            beta=(np.float32(1.0) - fw
+                                  if betah is not None else 1.0),
                             shard=self._fold_shard(next_fold),
                             staleness=stal[next_fold])
                         next_fold += 1
@@ -1147,8 +1333,8 @@ class FLEngine:
                     elif self._topk:
                         self._tbuf.write_rows(*prows, slots)
                     else:
-                        self._buf = flatbuf.write_rows(self._buf, vecs,
-                                                       jnp.asarray(slots))
+                        self._buf = flatbuf.write_rows(
+                            self._buf, prows[0], jnp.asarray(slots))
 
                 # ---- host bookkeeping + client refresh ----
                 # model targets on the quantized channel: the server-side
@@ -1185,12 +1371,23 @@ class FLEngine:
                             lambda l, row=row: l[row], new_states)
                 prev_new_flat, prev_states = new_flat, new_states
 
+            # reject/crash resets that landed after a client's last
+            # admitted lane: the client ends the horizon on the round-r
+            # global model, like the sequential oracle's inline reset
+            for cid in resync_after:
+                flats[cid] = g_flat
+                c = self.clients[cid]
+                c.model_state = g_state
+                c.version = r
+
             # ---- fused server round (no host sync) ----
             if self._streaming:
                 assert next_fold == kh, (next_fold, kh)
                 m = self._server_round_streaming(stal)
             else:
-                m = self._server_round(stal, sizes)
+                facs = ([hfac[i] for i in range(kh)]
+                        if hfac is not None else None)
+                m = self._server_round(stal, sizes, facs)
             self._last_agg_time = now
             self._global_stale = True
             # device-resident sched stats: scatter-add this round's
@@ -1215,7 +1412,9 @@ class FLEngine:
             if self._eval_due(rnd, n_rounds):
                 acc, loss = eval_fn(self._flat_params, self.global_state,
                                     self.test_x, self.test_y)
-                ring.append(acc, loss, m["update_norm"])
+                ring.append(acc, loss, m["update_norm"],
+                            np.float32(self.screened_uploads),
+                            np.float32(self.clipped_uploads))
                 pending.append(dict(
                     round=rnd, sim_time=now + self._agg_overhead(),
                     tx_bytes=self.tx_bytes, rx_bytes=self.rx_bytes,
@@ -1228,11 +1427,154 @@ class FLEngine:
                           f"stale={np.mean(stal):.2f}")
 
         # ---- the ONE device->host metrics transfer of the run ----
-        for fields, (acc, loss, unorm) in zip(pending, ring.flush()):
+        for fields, (acc, loss, unorm, nscr, nclip) in zip(pending,
+                                                           ring.flush()):
             self.metrics.record(
                 accuracy=float(acc), loss=float(loss),
                 nan_event=not np.isfinite(loss),
-                update_norm=float(unorm), **fields)
+                update_norm=float(unorm),
+                screened_uploads=int(nscr), clipped_uploads=int(nclip),
+                **fields)
         hist, part = ring.flush_sched()
         self._dev_stale_hist += hist.astype(np.int64)
         self._dev_participation += part.astype(np.int64)
+
+    # ---------- crash-consistent engine snapshots (PR 8) ----------
+
+    def _snapshot_tree(self) -> Dict:
+        """The snapshot's array pytree: the global flat row, server opt
+        state, the non-trainable global state, per-client EF residuals
+        and each client's carried model (flat rows on the batched path,
+        param pytrees on the sequential one).  Dict keys are strings so
+        the flatten order is reproducible at load time."""
+        tree: Dict[str, Any] = {
+            "flat_params": self._flat_params,
+            "opt": self._opt,
+            "global_state": self.global_state,
+            "residuals": {str(k): v for k, v in self._residuals.items()},
+            "client_state": {str(c.cid): c.model_state
+                             for c in self.clients},
+        }
+        if self.cfg.batch_clients:
+            flats = (self._client_flats
+                     or [self._flat_params] * len(self.clients))
+            tree["client_rows"] = {str(c.cid): flats[c.cid]
+                                   for c in self.clients}
+        else:
+            tree["client_params"] = {str(c.cid): c.params
+                                     for c in self.clients}
+        return tree
+
+    def save_snapshot(self, ckpt_dir: str, keep: int = 3) -> int:
+        """Crash-consistent snapshot of the SAFL engine at a run()
+        boundary (between incremental ``run()`` calls the event heap,
+        client chains and channel are all quiescent — the channel buffer
+        is empty and the streaming accumulator sealed).  Arrays go
+        through :func:`repro.checkpoint.io.save_checkpoint`; the host
+        state (simulated clocks, PRNG/fault counters, the event heap,
+        accounting and metric records) lands in an atomically-renamed
+        ``engine_{step}.json`` sidecar.  The sidecar is written FIRST and
+        the checkpoint's own json last — the commit record
+        ``latest_step`` keys on — so a kill between the two leaves no
+        resumable-looking step behind.  Resuming from the snapshot
+        replays the uninterrupted run bit-exactly."""
+        assert self.cfg.mode == "semi_async", \
+            "snapshots cover the SAFL engines"
+        step = int(self.t_global)
+        state = {
+            "t_global": step,
+            "batched": bool(self.cfg.batch_clients),
+            "last_agg_time": float(self._last_agg_time),
+            "tx_bytes": int(self.tx_bytes),
+            "rx_bytes": int(self.rx_bytes),
+            "idle_time": float(self.idle_time),
+            "last_update_norm": float(self._last_update_norm),
+            "staleness_hist": {str(k): int(v)
+                               for k, v in self.staleness_hist.items()},
+            "sr_counter": {str(k): int(v)
+                           for k, v in self._sr_counter.items()},
+            "residual_cids": sorted(self._residuals),
+            "client_versions": [int(c.version) for c in self.clients],
+            "screened_uploads": self.screened_uploads,
+            "clipped_uploads": self.clipped_uploads,
+            "corrupted_uploads": self.corrupted_uploads,
+            "byzantine_uploads": self.byzantine_uploads,
+            "dev_stale_hist": self._dev_stale_hist.tolist(),
+            "dev_participation": self._dev_participation.tolist(),
+            "sched": self.sched.state(),
+            "metrics": [dataclasses.asdict(rec)
+                        for rec in self.metrics.records],
+        }
+        ckptio.save_state_json(ckpt_dir, step, state)
+        ckptio.save_checkpoint(ckpt_dir, step, self._snapshot_tree(),
+                               keep=keep)
+        return step
+
+    def load_snapshot(self, ckpt_dir: str,
+                      step: Optional[int] = None) -> int:
+        """Restore a :meth:`save_snapshot` state into this (freshly
+        constructed, identically configured) engine.  The array template
+        is rebuilt from the engine's own structures plus the sidecar's
+        key sets (which clients own EF residuals), so shapes and dtypes
+        are validated leaf by leaf."""
+        if step is None:
+            step = ckptio.latest_step(ckpt_dir)
+            if step is None:
+                raise FileNotFoundError(f"no snapshots in {ckpt_dir}")
+        state = ckptio.load_state_json(ckpt_dir, step)
+        assert state["batched"] == bool(self.cfg.batch_clients), \
+            "snapshot was taken on the other engine path"
+        tpl: Dict[str, Any] = {
+            "flat_params": self._flat_params,
+            "opt": self._opt,
+            "global_state": self.global_state,
+            "residuals": {str(cid): self.codec.zero_residual()
+                          for cid in state["residual_cids"]},
+            "client_state": {str(c.cid): c.model_state
+                             for c in self.clients},
+        }
+        if state["batched"]:
+            tpl["client_rows"] = {str(c.cid): self._flat_params
+                                  for c in self.clients}
+        else:
+            tpl["client_params"] = {str(c.cid): c.params
+                                    for c in self.clients}
+        tree, _ = ckptio.load_checkpoint(ckpt_dir, tpl, step=step)
+        self._flat_params = tree["flat_params"]
+        self._opt = tree["opt"]
+        self.global_state = tree["global_state"]
+        self.global_params = self.codec.unravel(self._flat_params)
+        self._global_stale = False
+        self._residuals = {int(k): v
+                           for k, v in tree["residuals"].items()}
+        for c in self.clients:
+            c.model_state = tree["client_state"][str(c.cid)]
+            c.version = int(state["client_versions"][c.cid])
+        if state["batched"]:
+            self._client_flats = [tree["client_rows"][str(c.cid)]
+                                  for c in self.clients]
+        else:
+            for c in self.clients:
+                c.params = tree["client_params"][str(c.cid)]
+        self.t_global = int(state["t_global"])
+        self._last_agg_time = float(state["last_agg_time"])
+        self.tx_bytes = int(state["tx_bytes"])
+        self.rx_bytes = int(state["rx_bytes"])
+        self.idle_time = float(state["idle_time"])
+        self._last_update_norm = float(state["last_update_norm"])
+        self.staleness_hist = {
+            int(k): int(v) for k, v in state["staleness_hist"].items()}
+        self._sr_counter = {
+            int(k): int(v) for k, v in state["sr_counter"].items()}
+        self.screened_uploads = int(state["screened_uploads"])
+        self.clipped_uploads = int(state["clipped_uploads"])
+        self.corrupted_uploads = int(state["corrupted_uploads"])
+        self.byzantine_uploads = int(state["byzantine_uploads"])
+        self._dev_stale_hist = np.asarray(state["dev_stale_hist"],
+                                          np.int64)
+        self._dev_participation = np.asarray(state["dev_participation"],
+                                             np.int64)
+        self.sched.load_state(state["sched"])
+        self.metrics.records = [RoundRecord(**rec)
+                                for rec in state["metrics"]]
+        return step

@@ -1,0 +1,137 @@
+"""Deterministic fault injection for the SAFL engine (PR 8 tentpole).
+
+A :class:`FaultPlan` draws one :class:`FaultDraw` per (client, upload
+attempt), keyed by the same counter discipline as PR 7's stochastic
+rounding::
+
+    key = fold_in(fold_in(PRNGKey(fault_seed*1_000_003 + seed), cid),
+                  upload_counter)
+
+The counter is the client's *upload-attempt* index (every UPLOAD event
+the scheduler pops advances it, admitted or not), so the draw depends
+only on (seed, cid, counter) — never on event interleaving — and the
+sequential and horizon-batched engines consume bit-identical fault
+schedules.  The seed is offset from the SR/timing streams so enabling
+faults never perturbs the quantizer's or the device-time model's draws.
+
+Fault kinds (priority ladder — the first that fires wins the draw):
+
+  ``crash``      the upload is lost in transit and the client process
+                 dies: local progress is discarded, the client resyncs
+                 to the current global model and re-enqueues a WAKE
+                 after an exponential backoff (see ``Scheduler.pop``).
+  ``straggler``  a compute-time spike: the client's *next* training
+                 period is ``fault_straggler_mult`` x slower.
+  ``corrupt``    payload corruption on the wire: NaN/Inf lanes in the
+                 f32 row; bit-flipped bytes plus an Inf-blown scale
+                 block in the q8/q4/topk rows (see :mod:`.payload`).
+  ``byzantine``  sign-flip + rescale: the f32 row (resp. the quantizer
+                 scales) is multiplied by ``-fault_byzantine_rescale``.
+
+Crash/straggler faults live entirely in ``sched`` (event-heap effects);
+corrupt/byzantine draws ride the :class:`repro.sched.SchedEvent` into
+the engine, which applies them to the serialized payload *after* the
+error-feedback residual update — the client believes it sent a clean
+row, exactly like a wire-level fault.  Server-side defenses live in
+:mod:`.defense`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .payload import apply_faults_flat, apply_faults_q  # noqa: F401
+from .defense import defense_factors  # noqa: F401
+
+KINDS = ("crash", "straggler", "corrupt", "byzantine")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultDraw:
+    """One per-(client, upload) fault decision.
+
+    ``mult`` is the compute multiplier for the client's next training
+    period (straggler spikes); ``loc`` is a uniform in [0, 1) placing
+    the corruption inside the payload row."""
+
+    kind: Optional[str] = None
+    mult: float = 1.0
+    loc: float = 0.0
+
+
+_NO_FAULT = FaultDraw()
+
+
+@functools.lru_cache(maxsize=None)
+def _draw_fn():
+    @jax.jit
+    def draw(seed, cid, counter):
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(seed), cid), counter)
+        return jax.random.uniform(key, (5,), jnp.float32)
+
+    return draw
+
+
+class FaultPlan:
+    """Counter-keyed per-(client, upload) fault schedule.
+
+    One uniform 5-vector is drawn per upload attempt; lanes 0-3 gate
+    crash/straggler/corrupt/byzantine against their probabilities in
+    priority order, lane 4 is the corruption placement.  The per-client
+    counters are part of the engine snapshot (crash-consistent resume
+    replays the identical schedule)."""
+
+    def __init__(self, seed: int, *, crash_p: float, straggler_p: float,
+                 straggler_mult: float, corrupt_p: float,
+                 byzantine_p: float):
+        self.seed = int(seed)
+        self.crash_p = float(crash_p)
+        self.straggler_p = float(straggler_p)
+        self.straggler_mult = float(straggler_mult)
+        self.corrupt_p = float(corrupt_p)
+        self.byzantine_p = float(byzantine_p)
+        self._counters: Dict[int, int] = {}
+
+    @staticmethod
+    def from_config(cfg) -> Optional["FaultPlan"]:
+        """None when every fault probability is zero — the engine and
+        scheduler then skip the draw entirely (bit-identical to a build
+        without the fault layer)."""
+        if not (cfg.fault_crash_p or cfg.fault_straggler_p
+                or cfg.fault_corrupt_p or cfg.fault_byzantine_p):
+            return None
+        return FaultPlan(
+            cfg.fault_seed * 1_000_003 + cfg.seed,
+            crash_p=cfg.fault_crash_p,
+            straggler_p=cfg.fault_straggler_p,
+            straggler_mult=cfg.fault_straggler_mult,
+            corrupt_p=cfg.fault_corrupt_p,
+            byzantine_p=cfg.fault_byzantine_p)
+
+    def draw(self, cid: int) -> FaultDraw:
+        n = self._counters.get(cid, 0)
+        self._counters[cid] = n + 1
+        u = np.asarray(_draw_fn()(self.seed, cid, n))
+        if u[0] < self.crash_p:
+            return FaultDraw("crash")
+        if u[1] < self.straggler_p:
+            return FaultDraw("straggler", mult=self.straggler_mult)
+        if u[2] < self.corrupt_p:
+            return FaultDraw("corrupt", loc=float(u[4]))
+        if u[3] < self.byzantine_p:
+            return FaultDraw("byzantine")
+        return _NO_FAULT
+
+    # ------------------------ snapshot state ------------------------
+
+    def state(self) -> Dict[str, int]:
+        return {str(k): int(v) for k, v in self._counters.items()}
+
+    def load_state(self, state: Dict[str, int]) -> None:
+        self._counters = {int(k): int(v) for k, v in state.items()}

@@ -1,0 +1,46 @@
+"""Host-side composition of the server's screening verdicts.
+
+The fused screening pass (``FlatServer.screen``) returns one f32 sum of
+squares per buffered/streamed row — NaN/Inf payload lanes surface as a
+non-finite sum, so a single ``isfinite`` on it is the whole integrity
+check.  This module turns those sums into per-row *weight factors* that
+ride the existing ``external_discount`` path:
+
+  ``screen``  non-finite rows (and rows over ``norm_cap``, if set) get
+              factor 0 — zero aggregation weight, payload zeroed on the
+              buffered channel, fold skipped on the streaming channel.
+  ``clip``    non-finite rows are still dropped (a NaN row cannot be
+              clipped); finite rows over the cap are influence-clipped,
+              factor = cap / norm — FedBuff/DP-style down-weighting
+              through the same weight vector.
+
+Factors are np.float32 and every op is elementwise, so the scalar
+(sequential/streaming, K=1) and vector (buffered horizon) paths agree
+bitwise — the invariant the channel-parity tests pin.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+
+def defense_factors(sumsq, mode: str,
+                    norm_cap: float) -> Tuple[np.ndarray, int, int]:
+    """(K,) row sums of squares -> ((K,) f32 weight factors,
+    n_screened, n_clipped)."""
+    sumsq = np.asarray(sumsq, np.float32)
+    fac = np.ones_like(sumsq)
+    bad = ~np.isfinite(sumsq)
+    fac[bad] = np.float32(0.0)
+    clipped = 0
+    if norm_cap > 0.0:
+        norm = np.sqrt(sumsq)
+        over = np.isfinite(sumsq) & (norm > np.float32(norm_cap))
+        if mode == "screen":
+            fac[over] = np.float32(0.0)
+            bad |= over
+        else:  # clip
+            fac[over] = np.float32(norm_cap) / norm[over]
+            clipped = int(over.sum())
+    return fac, int(bad.sum()), clipped

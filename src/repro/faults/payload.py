@@ -1,0 +1,91 @@
+"""Wire-level payload faults: corruption and Byzantine rows.
+
+Both engine paths call the same row-stacked appliers — the sequential
+path with K=1, the batched path with a whole wave — so a faulted row is
+bitwise identical however it was produced: `jnp.where` returns untouched
+lanes exactly, and the poison/rescale ops are elementwise.
+
+Corruption models a wire-level bit storm *after* the client serialized
+(the error-feedback residual was already updated against the clean row):
+
+  * f32 row: a 16-lane span starting at ``floor(loc * (D - 16))`` turns
+    NaN, with the first lane +Inf — exactly what the server-side screen
+    (sum of squares -> non-finite) is built to catch.
+  * q8/q4/topk rows: a 64-byte span of the int8 payload is XOR-flipped
+    with 0x55 (silently survivable — screening is norm-based, not a
+    checksum) AND one quantizer scale block is blown to +Inf (the
+    exponent-bit flip that *is* catchable).
+
+Byzantine rows are sign-flipped and rescaled: the f32 row (resp. the
+f32 scales of the quantized wires) is multiplied by ``-rescale`` —
+finite but adversarial, caught only by a norm cap (defense=screen/clip
+with ``defense_norm_cap > 0``).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+_NAN_SPAN = 16   # f32 lanes poisoned per corrupt row
+_FLIP_SPAN = 64  # int8 bytes XOR-flipped per corrupt row
+
+
+@functools.lru_cache(maxsize=None)
+def _flat_fn():
+    @jax.jit
+    def apply(rows, corrupt, byz, loc, rescale):
+        k, d = rows.shape
+        span = min(_NAN_SPAN, d)
+        start = (loc * jnp.float32(max(d - span, 1))).astype(jnp.int32)
+        lane = jnp.arange(d, dtype=jnp.int32)[None, :]
+        in_span = ((lane >= start[:, None])
+                   & (lane < start[:, None] + span))
+        poison = jnp.where(lane == start[:, None],
+                           jnp.float32(jnp.inf), jnp.float32(jnp.nan))
+        rows = jnp.where(corrupt[:, None] & in_span, poison, rows)
+        rows = jnp.where(byz[:, None], rows * -rescale, rows)
+        return rows
+
+    return apply
+
+
+@functools.lru_cache(maxsize=None)
+def _q_fn():
+    @jax.jit
+    def apply(q, scales, corrupt, byz, loc, rescale):
+        nq = q.shape[1]
+        span = min(_FLIP_SPAN, nq)
+        qs = (loc * jnp.float32(max(nq - span, 1))).astype(jnp.int32)
+        qcol = jnp.arange(nq, dtype=jnp.int32)[None, :]
+        qmask = (corrupt[:, None] & (qcol >= qs[:, None])
+                 & (qcol < qs[:, None] + span))
+        q = jnp.where(qmask, jnp.bitwise_xor(q, jnp.int8(0x55)), q)
+        nb = scales.shape[1]
+        blk = (loc * jnp.float32(nb)).astype(jnp.int32)
+        col = jnp.arange(nb, dtype=jnp.int32)[None, :]
+        scales = jnp.where(corrupt[:, None] & (col == blk[:, None]),
+                           jnp.float32(jnp.inf), scales)
+        scales = jnp.where(byz[:, None], scales * -rescale, scales)
+        return q, scales
+
+    return apply
+
+
+def apply_faults_flat(rows, corrupt, byz, loc, rescale):
+    """(K, D) f32 rows under per-row corrupt/byzantine masks."""
+    return _flat_fn()(rows, jnp.asarray(corrupt, bool),
+                      jnp.asarray(byz, bool),
+                      jnp.asarray(loc, jnp.float32),
+                      jnp.float32(rescale))
+
+
+def apply_faults_q(q, scales, corrupt, byz, loc, rescale):
+    """(K, nq) int8 payload + (K, nb) f32 scales — q8, packed q4 and
+    the topk value lanes all route here (packed bytes flip two nibbles
+    at once, which is exactly what a wire fault does)."""
+    return _q_fn()(q, scales, jnp.asarray(corrupt, bool),
+                   jnp.asarray(byz, bool),
+                   jnp.asarray(loc, jnp.float32),
+                   jnp.float32(rescale))

@@ -582,3 +582,40 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
     probs = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+# ------------------- defense screening oracles (PR 8) -------------------
+
+
+def screen_sumsq_ref(rows: jax.Array) -> jax.Array:
+    """Fused per-row screening pass, f32 wire: (K, D) rows -> (K,) f32
+    sum of squares.  NaN/Inf payload lanes surface as a non-finite sum
+    (NaN^2 = NaN, Inf^2 = Inf), so ``isfinite(sumsq)`` is the whole
+    integrity verdict and ``sqrt(sumsq)`` the L2 norm for cap checks —
+    one reduction serves both."""
+    r = rows.astype(jnp.float32)
+    return jnp.sum(r * r, axis=1)
+
+
+def screen_sumsq_q8_ref(q: jax.Array, scales: jax.Array,
+                        qblock: int) -> jax.Array:
+    """q8/topk screening: (K, Nq) int8 payload + (K, NB) f32 scales ->
+    (K,) sum of squares of the dequantized row, computed blockwise
+    (sum_b s_b^2 * sum_j q_j^2) without materializing the dense row.
+    A ragged tail (topk's nk need not divide qblock) is zero-padded;
+    an Inf/NaN scale — the catchable wire corruption — poisons the sum."""
+    K, nq = q.shape
+    nb = scales.shape[1]
+    qf = q.astype(jnp.float32)
+    pad = nb * qblock - nq
+    if pad:
+        qf = jnp.pad(qf, ((0, 0), (0, pad)))
+    q2 = jnp.sum(qf.reshape(K, nb, qblock) ** 2, axis=2)
+    s = scales.astype(jnp.float32)
+    return jnp.sum(q2 * s * s, axis=1)
+
+
+def screen_sumsq_q4_ref(p: jax.Array, scales: jax.Array,
+                        qblock: int) -> jax.Array:
+    """Packed-q4 screening: unpack the nibbles, then the q8 rule."""
+    return screen_sumsq_q8_ref(unpack_q4_ref(p), scales, qblock)

@@ -830,3 +830,109 @@ def safl_fold_topk(acc: jax.Array, idx: jax.Array, qv: jax.Array,
         interpret=interpret,
     )(sw, acc, idx, qv, scales)
     return out[:d]
+
+
+# ---------------------------------------------------------------------------
+# defense screening: fused per-row isfinite + L2 pass (PR 8)
+# ---------------------------------------------------------------------------
+
+
+def _screen_kernel(u_ref, o_ref):
+    """One (K, BLOCK_D) tile of the screening reduction: the (K,) output
+    block is revisited every grid step and accumulates the per-row sum
+    of squares — NaN/Inf payload lanes poison the sum, so the caller's
+    ``isfinite(sumsq)`` is the integrity verdict and ``sqrt`` the norm."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    u = u_ref[...].astype(jnp.float32)
+    o_ref[...] += jnp.sum(u * u, axis=1)
+
+
+def screen_rows(rows: jax.Array, block_d: int = BLOCK_D,
+                interpret: bool = True) -> jax.Array:
+    """f32-wire screening pass: rows (K, D) -> (K,) f32 sum of squares,
+    one streaming pass (oracle :func:`repro.kernels.ref.screen_sumsq_ref`).
+    Zero padding to the block size contributes exact zeros."""
+    K, D = rows.shape
+    pad = (-D) % block_d
+    if pad:
+        rows = jnp.pad(rows, ((0, 0), (0, pad)))
+    Dp = D + pad
+    return pl.pallas_call(
+        _screen_kernel,
+        grid=(Dp // block_d,),
+        in_specs=[pl.BlockSpec((K, block_d), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((K,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((K,), jnp.float32),
+        interpret=interpret,
+    )(rows)
+
+
+def _screen_q8_kernel(q_ref, s_ref, o_ref, *, qblock: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    u = _dequant_tile(q_ref[...], s_ref[...], qblock)
+    o_ref[...] += jnp.sum(u * u, axis=1)
+
+
+def screen_rows_q8(q: jax.Array, scales: jax.Array, qblock: int = QBLOCK,
+                   block_d: int = BLOCK_D, interpret: bool = True
+                   ) -> jax.Array:
+    """q8/topk screening pass: q (K, Nq) int8 + scales (K, Nq/qblock) ->
+    (K,) sum of squares of the dequantized rows, dequant fused into the
+    reduction tiles (oracle :func:`repro.kernels.ref.screen_sumsq_q8_ref`;
+    the topk wire screens its compacted value lanes through this same
+    grid — padding coordinates carry scale 0 and contribute nothing)."""
+    K = q.shape[0]
+    q, scales, Dp = _pad_q8(q, scales, block_d, qblock)
+    return pl.pallas_call(
+        functools.partial(_screen_q8_kernel, qblock=qblock),
+        grid=(Dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((K, block_d), lambda i: (0, i)),
+            pl.BlockSpec((K, block_d // qblock), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((K,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((K,), jnp.float32),
+        interpret=interpret,
+    )(q, scales)
+
+
+def _screen_q4_kernel(qp_ref, s_ref, o_ref, *, qblock: int):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    u = _unpack_q4_tile(qp_ref[...], s_ref[...], qblock)
+    o_ref[...] += jnp.sum(u * u, axis=1)
+
+
+def screen_rows_q4(qp: jax.Array, scales: jax.Array, qblock: int = QBLOCK,
+                   block_d: int = BLOCK_D, interpret: bool = True
+                   ) -> jax.Array:
+    """Packed-q4 screening pass: qp (K, Dq/2) int8 + scales -> (K,) sum
+    of squares with the nibble unpack + dequantize fused into the tiles
+    (oracle :func:`repro.kernels.ref.screen_sumsq_q4_ref`)."""
+    K = qp.shape[0]
+    qp, scales, Dp = _pad_q4(qp, scales, block_d, qblock)
+    return pl.pallas_call(
+        functools.partial(_screen_q4_kernel, qblock=qblock),
+        grid=(Dp // block_d,),
+        in_specs=[
+            pl.BlockSpec((K, block_d // 2), lambda i: (0, i)),
+            pl.BlockSpec((K, block_d // qblock), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((K,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((K,), jnp.float32),
+        interpret=interpret,
+    )(qp, scales)

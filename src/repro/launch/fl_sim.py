@@ -142,6 +142,46 @@ def main() -> None:
                     help="markov: P(go offline) after each upload")
     ap.add_argument("--sched-seed", type=int, default=0,
                     help="PRNG seed for timing jitter + policy sampling")
+    ap.add_argument("--fault-crash-p", type=float, default=0.0,
+                    help="fault layer (repro.faults): P(client crashes "
+                         "mid-round) per upload attempt; crashed clients "
+                         "resync to the global model and retry after "
+                         "exponential backoff")
+    ap.add_argument("--fault-straggler-p", type=float, default=0.0,
+                    help="P(transient straggler spike) per upload — the "
+                         "upload's compute time is multiplied by the "
+                         "config's fault_straggler_mult")
+    ap.add_argument("--fault-corrupt-p", type=float, default=0.0,
+                    help="P(payload corruption) per upload: NaN/Inf lanes "
+                         "on the f32 wire, bit flips + a poisoned scale "
+                         "block on q8/q4/topk")
+    ap.add_argument("--fault-byzantine-p", type=float, default=0.0,
+                    help="P(Byzantine upload): sign-flipped and rescaled "
+                         "by fault_byzantine_rescale")
+    ap.add_argument("--fault-seed", type=int, default=7,
+                    help="fault-schedule PRNG seed (counter-keyed per "
+                         "(client, upload attempt) — identical schedules "
+                         "on the sequential and batched engines)")
+    ap.add_argument("--defense", default="none",
+                    choices=["none", "screen", "clip"],
+                    help="server-side defense: screen drops non-finite / "
+                         "over-norm uploads before they touch the "
+                         "aggregate, clip rescales over-norm uploads to "
+                         "the cap (non-finite still dropped)")
+    ap.add_argument("--defense-norm-cap", type=float, default=0.0,
+                    help="per-upload L2 norm threshold for screen/clip "
+                         "(0 with --defense screen = integrity-only: "
+                         "drop non-finite payloads)")
+    ap.add_argument("--ckpt-dir", default="",
+                    help="engine snapshot directory; with --ckpt-every "
+                         "the run is segmented and snapshotted so a "
+                         "killed run resumes bit-exactly via --resume")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="snapshot every N aggregation rounds (0 = only "
+                         "at run end when --ckpt-dir is set)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the latest snapshot from --ckpt-dir "
+                         "before running (no-op if none exists)")
     ap.add_argument("--json-out", default="")
     args = ap.parse_args()
 
@@ -197,9 +237,36 @@ def main() -> None:
                    sched_stale_cap=args.sched_stale_cap,
                    sched_jitter_sigma=args.sched_jitter_sigma,
                    sched_drop_p=args.sched_drop_p,
-                   sched_seed=args.sched_seed)
+                   sched_seed=args.sched_seed,
+                   fault_crash_p=args.fault_crash_p,
+                   fault_straggler_p=args.fault_straggler_p,
+                   fault_corrupt_p=args.fault_corrupt_p,
+                   fault_byzantine_p=args.fault_byzantine_p,
+                   fault_seed=args.fault_seed,
+                   defense=args.defense,
+                   defense_norm_cap=args.defense_norm_cap)
     eng = FLEngine(cfg, fn, ds.kind, p0, s0, shards, te.x[:400], te.y[:400])
-    res = eng.run(args.rounds, log_every=max(args.rounds // 10, 1))
+    log_every = max(args.rounds // 10, 1)
+    if args.resume and args.ckpt_dir:
+        try:
+            start = eng.load_snapshot(args.ckpt_dir)
+            print(f"# resumed from snapshot at round {start}")
+        except FileNotFoundError:
+            pass
+    if args.ckpt_dir and args.ckpt_every > 0:
+        # segmented run: run() stops at each snapshot boundary (the
+        # channel is quiescent between aggregations), so a kill at any
+        # point loses at most ckpt_every rounds and --resume replays
+        # the rest bit-exactly
+        res = None
+        while eng.t_global < args.rounds:
+            upto = min(eng.t_global + args.ckpt_every, args.rounds)
+            res = eng.run(upto, log_every=log_every)
+            eng.save_snapshot(args.ckpt_dir)
+    else:
+        res = eng.run(args.rounds, log_every=log_every)
+        if args.ckpt_dir:
+            eng.save_snapshot(args.ckpt_dir)
     summary = res.metrics.summary()
     # scheduling surface: per-client staleness/participation — the
     # device-resident histogram (batched path, one host transfer at run
@@ -216,9 +283,22 @@ def main() -> None:
           f"idle requests: {ss['idle_requests']}  "
           f"no-shows: {ss['no_shows']}  staleness hist: "
           f"{ss['staleness_hist']}")
+    print(f"# faults: crashed {ss['crashed_uploads']}  corrupted "
+          f"{ss['corrupted_uploads']}  byzantine "
+          f"{ss['byzantine_uploads']}  defense[{args.defense}]: "
+          f"screened {ss['screened_uploads']}  clipped "
+          f"{ss['clipped_uploads']}")
     if args.json_out:
         with open(args.json_out, "w") as f:
             json.dump(summary, f, default=str)
+    if summary["nan_rounds"]:
+        # a diverged run must not look like success to the caller
+        # (CI, sweep harnesses): name the first poisoned round and
+        # exit non-zero
+        print(f"# FAILED: non-finite eval from round "
+              f"{res.metrics.first_nan_round()} "
+              f"({summary['nan_rounds']} nan rounds)")
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -99,7 +99,12 @@ def main() -> None:
             print(f"step {step:5d} loss {loss:.4f} "
                   f"({(time.time()-t0)/max(step-start+1,1)*1e3:.0f} ms/step)",
                   flush=True)
-            assert np.isfinite(loss), "training diverged"
+            if not np.isfinite(loss):
+                # a plain assert disappears under python -O and names no
+                # step; fail loudly with the divergence point instead
+                raise FloatingPointError(
+                    f"training diverged: non-finite loss {loss} at step "
+                    f"{step} (arch={cfg.name}, lr={args.lr})")
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
             save_checkpoint(args.ckpt_dir, step + 1, (params, ostate))
     if args.ckpt_dir:

@@ -65,6 +65,7 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.faults import FaultDraw, FaultPlan
 from repro.sched.events import UPLOAD, WAKE, EventQueue
 from repro.sched.policy import POLICIES, Policy, make_policy
 from repro.sched.timing import TIMING_MODELS, make_timing
@@ -80,10 +81,16 @@ class SchedEvent:
     cid: int
     staleness: int  # projected staleness at pop time (== engine's value)
     admitted: bool  # False: the upload was refused (see ``verdict``)
-    #: "admit" | "reject" | "idle".  Rejection discards the client's local
-    #: progress and resyncs it (selective training); idle is rate-control
-    #: back-pressure — the client keeps its local chain and retries later.
+    #: "admit" | "reject" | "idle" | "crash".  Rejection discards the
+    #: client's local progress and resyncs it (selective training); idle
+    #: is rate-control back-pressure — the client keeps its local chain
+    #: and retries later; crash is an injected fault — the upload is lost,
+    #: the client reboots (discard + resync, like reject) and re-enqueues
+    #: after an exponential backoff.
     verdict: str = "admit"
+    #: payload fault riding an ADMITTED upload (kind "corrupt" or
+    #: "byzantine"); the engine applies it to the serialized row.
+    fault: Optional[FaultDraw] = None
 
 
 class Scheduler:
@@ -117,11 +124,17 @@ class Scheduler:
         self.policy.bind(clients)
         self.queue = EventQueue()
         self._version: Dict[int, int] = {}
+        # fault layer: one counter-keyed draw per popped UPLOAD event
+        # (admitted or not), shared by both engine paths — see
+        # repro.faults.FaultPlan.  None when every probability is zero.
+        self.faults = FaultPlan.from_config(cfg)
+        self._crash_streak: Dict[int, int] = {}
         # host-side accounting (the device-resident counterparts live in
         # the batched engine's DeviceMetricsRing)
         self.participation = np.zeros(len(clients), np.int64)
         self.rejected = np.zeros(len(clients), np.int64)
         self.idle = np.zeros(len(clients), np.int64)
+        self.crashed = np.zeros(len(clients), np.int64)
         self.no_shows = 0
 
     def resume(self) -> None:
@@ -138,9 +151,40 @@ class Scheduler:
                 nt, nkind, ncomp = self.timing.after_wake(c, t)
                 self.queue.push(nt, cid, nkind, ncomp)
                 continue
+            # one fault draw per popped UPLOAD event, BEFORE the policy:
+            # a crash preempts the verdict (the upload never reaches the
+            # server), and the draw's counter keying makes the schedule
+            # independent of event interleaving
+            fault = self.faults.draw(cid) if self.faults else None
+            if fault is not None and fault.kind == "crash":
+                # the client process dies: its local progress is lost, it
+                # resyncs to the global model (the engine treats a crash
+                # like a reject) and re-enqueues a WAKE after a capped
+                # exponential backoff — replacing the normal post-upload
+                # successor, so the one-pending-event-per-client heap
+                # invariant holds.  after_wake then schedules the rebooted
+                # client's next training period.
+                streak = self._crash_streak.get(cid, 0) + 1
+                self._crash_streak[cid] = streak
+                backoff = (self.cfg.fault_retry_backoff_s
+                           * 2.0 ** (min(streak, self.cfg.fault_retry_cap)
+                                     - 1))
+                self.queue.push(t + backoff, cid, WAKE, 0.0)
+                self.crashed[cid] += 1
+                stal = rnd - self._version.get(cid, 0)
+                self._version[cid] = rnd  # mirrors the engine's resync
+                return SchedEvent(t, cid, stal, False, "crash")
+            self._crash_streak.pop(cid, None)  # streak ends on delivery
             # schedule the client's next event first: the heap evolves on
             # schedule data only, exactly like the pre-sched engine paths
             nt, nkind, ncomp = self.timing.after_upload(c, t)
+            if fault is not None and fault.kind == "straggler" \
+                    and nkind == UPLOAD:
+                # compute-time spike: the NEXT training period runs
+                # fault_straggler_mult x slower (the compute portion of
+                # the successor stretches; comm/jitter stay put)
+                nt += ncomp * (fault.mult - 1.0)
+                ncomp *= fault.mult
             if nkind == WAKE:
                 self.no_shows += 1
             self.queue.push(nt, cid, nkind, ncomp)
@@ -156,7 +200,9 @@ class Scheduler:
                 self._version[cid] = rnd
             if v == "admit":
                 self.participation[cid] += 1
-                return SchedEvent(t, cid, stal, True)
+                payload_fault = (fault if fault is not None and fault.kind
+                                 in ("corrupt", "byzantine") else None)
+                return SchedEvent(t, cid, stal, True, fault=payload_fault)
             if v == "idle":
                 self.idle[cid] += 1
             else:
@@ -173,7 +219,71 @@ class Scheduler:
             "rejected_uploads": int(self.rejected.sum()),
             "idle_requests": int(self.idle.sum()),
             "no_shows": int(self.no_shows),
+            "crashed_uploads": int(self.crashed.sum()),
         }
+
+    # -------------------- crash-consistent snapshots --------------------
+
+    def state(self) -> Dict:
+        """JSON-serializable scheduler state: the event heap, the
+        projected-version map, accounting counters, and every PRNG
+        counter (fault plan + stochastic timing stream) — everything
+        needed so a resumed run replays the identical schedule.  Python's
+        json round-trips floats exactly, so heap times survive
+        bit-exactly; the heap list is stored as-is (any list order that
+        heapifies back is fine — we keep the exact order)."""
+        st: Dict = {
+            "version": {str(k): int(v) for k, v in self._version.items()},
+            "participation": self.participation.tolist(),
+            "rejected": self.rejected.tolist(),
+            "idle": self.idle.tolist(),
+            "crashed": self.crashed.tolist(),
+            "no_shows": int(self.no_shows),
+            "crash_streak": {str(k): int(v)
+                             for k, v in self._crash_streak.items()},
+            "heap": ([list(e) for e in self.queue._heap]
+                     if self.queue.started else None),
+            "speeds": self.queue._speeds,
+        }
+        if self.faults is not None:
+            st["faults"] = self.faults.state()
+        stream = getattr(self.timing, "_stream", None)
+        if stream is not None:
+            st["timing_counters"] = {
+                str(k): int(v) for k, v in stream._counters.items()}
+        # RateControl is the one policy with mutable per-round state; the
+        # sampling policies regenerate their sets from (seed, round)
+        if hasattr(self.policy, "_rnd"):
+            st["policy_state"] = {"rnd": int(self.policy._rnd),
+                                  "admitted": int(self.policy._admitted)}
+        return st
+
+    def load_state(self, st: Dict) -> None:
+        self._version = {int(k): int(v)
+                         for k, v in st["version"].items()}
+        self.participation = np.asarray(st["participation"], np.int64)
+        self.rejected = np.asarray(st["rejected"], np.int64)
+        self.idle = np.asarray(st["idle"], np.int64)
+        self.crashed = np.asarray(st["crashed"], np.int64)
+        self.no_shows = int(st["no_shows"])
+        self._crash_streak = {int(k): int(v)
+                              for k, v in st["crash_streak"].items()}
+        if st["heap"] is not None:
+            self.queue._heap = [
+                (float(t), int(cid), int(kind), float(comp))
+                for (t, cid, kind, comp) in st["heap"]]
+            self.queue._speeds = [float(s) for s in st["speeds"]]
+        if self.faults is not None and "faults" in st:
+            self.faults.load_state(st["faults"])
+        stream = getattr(self.timing, "_stream", None)
+        if stream is not None and "timing_counters" in st:
+            stream._counters = {
+                int(k): int(v)
+                for k, v in st["timing_counters"].items()}
+            stream._blocks = {}
+        if hasattr(self.policy, "_rnd") and "policy_state" in st:
+            self.policy._rnd = int(st["policy_state"]["rnd"])
+            self.policy._admitted = int(st["policy_state"]["admitted"])
 
 
 def build_scheduler(cfg, clients, base_compute) -> Scheduler:
