@@ -29,21 +29,36 @@ buffered updates and D in {1M, 4M} parameters:
     by the fused gather-dequant-scatter program; the server never
     materializes a dense row per upload.
 
-Writes machine-readable ``BENCH_agg.json`` (``schema_version`` 4: 3 +
-the q4/topk wire columns — µs/aggregation, channel bytes and per-upload
-wire bytes per grid point, with the O(D)-flat-in-K claim asserted at
-report time) so the perf trajectory is tracked across PRs, and prints
-all numbers per point.
+  * ``hier``: the hierarchical (edge, pod) 2-D mesh topology (PR 9) —
+    per-shard partials tree-reduce within each edge group, one cross-edge
+    psum of E edge partials reaches the server step.  Every grid point
+    carries the cross-edge traffic model for ``--mesh E P``
+    (:func:`repro.sharding.flat.edge_traffic`: measured bytes crossing
+    the edge boundary vs the flat global psum, asserted to shrink by
+    exactly P), and the 2-D round is timed for real whenever the host
+    has E*P devices (``hier_measured``).
+
+Writes machine-readable ``BENCH_agg.json`` (``schema_version`` 5: 4 +
+the hierarchy columns and the jax/env provenance header —
+µs/aggregation, channel bytes, per-upload wire bytes and cross-edge
+bytes per grid point, with the O(D)-flat-in-K and ~P x cross-edge
+claims asserted at report time) so the perf trajectory is tracked
+across PRs, and prints all numbers per point.
 
     PYTHONPATH=src python -m benchmarks.agg_bench
     # tiny CI smoke grid:
     PYTHONPATH=src python -m benchmarks.agg_bench --ks 4 --ds 65536
+    # 2-D mesh timing on an 8-device host:
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+        PYTHONPATH=src python -m benchmarks.agg_bench --mesh 2 4 \
+        --ks 8 --ds 65536
 """
 from __future__ import annotations
 
 import argparse
 import json
 import multiprocessing
+import os
 import time
 
 import jax
@@ -53,13 +68,15 @@ import numpy as np
 from repro.core import aggregation as agg
 from repro.core import flatbuf
 from repro.kernels.quantize import payload_nbytes
+from repro.sharding import flat as shflat
 
 KS = (8, 16, 64)
 DS = (1 << 20, 1 << 22)  # 1M, 4M
 SERVER_LR = 0.05
 OUT_PATH = "BENCH_agg.json"
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 TOPK_FRAC = 0.1
+MESH = (2, 4)  # modeled (edge, pod) topology; timed when devices allow
 
 
 def _leaf_shapes(d: int, n_leaves: int = 48):
@@ -125,7 +142,7 @@ def _time_interleaved(fns, iters, reps=8):
     return [b * 1e6 for b in best]
 
 
-def bench_point(K: int, d: int) -> dict:
+def bench_point(K: int, d: int, mesh_ep=MESH) -> dict:
     shapes = _leaf_shapes(d)
     d = int(sum(int(np.prod(s)) for s in shapes))
     params = _make_tree(shapes, jax.random.PRNGKey(0))
@@ -239,6 +256,37 @@ def bench_point(K: int, d: int) -> dict:
         tree = codec.unravel(state_s["p"])
         _block(tree)
 
+    # --- hierarchical (edge, pod) topology: traffic model + 2-D round ---
+    # the byte model holds on any host; the 2-D round itself is timed
+    # whenever the pool has E*P devices and the rows split evenly
+    E, Pods = mesh_ep
+    hier = shflat.edge_traffic((E, Pods), codec.d * 4)
+    hier_us = None
+    n_mesh = E * Pods
+    if E > 1 and jax.device_count() >= n_mesh and K % n_mesh == 0:
+        mesh = shflat.make_hier_mesh(E, Pods)
+        srv_h = agg.FlatServer("fedsgd", codec.d, server_lr=SERVER_LR,
+                               mesh=mesh)
+        # the model and the live server agree on the measured bytes
+        assert srv_h.traffic["cross_edge_bytes"] == \
+            hier["cross_edge_bytes"], (srv_h.traffic, hier)
+        hbuf = shflat.shard_rows(buf, mesh)
+        # params enter replicated-on-mesh, like the engine's resident
+        # state — otherwise round 2's (now committed) output sharding
+        # would recompile the program
+        p_h = jax.device_put(codec.ravel(params), shflat.replicated(mesh))
+        state_h = {"p": p_h, "opt": srv_h.init_opt(p_h)}
+
+        def hier_round():
+            state_h["p"], state_h["opt"], _ = srv_h.step(
+                state_h["p"], hbuf, w, state_h["opt"])
+            tree = codec.unravel(state_h["p"])
+            _block(tree)
+
+        hier_us = _time_rounds(hier_round, iters)
+        assert srv_h.compile_count in (1, -1), \
+            "hier server recompiled during bench"
+
     # interleave the flat paths so host drift hits them equally
     flat_us, q8_us, q4_us, topk_us, stream_us, ingest_us = \
         _time_interleaved([flat_round, q8_round, q4_round, topk_round,
@@ -298,6 +346,17 @@ def bench_point(K: int, d: int) -> dict:
             "wire_ratio_topk": round(
                 wire_f32 / payload_nbytes("topk", **wire_kw), 2),
             "topk_frac": TOPK_FRAC,
+            # hierarchical (edge, pod) topology: bytes crossing the edge
+            # boundary per aggregation (one f32 partial per edge + its
+            # weight scalar) vs the flat global psum over E*P shards
+            "hier_mesh": [E, Pods],
+            "cross_edge_partials": hier["cross_edge_partials"],
+            "cross_edge_bytes": hier["cross_edge_bytes"],
+            "flat_cross_bytes": hier["flat_cross_bytes"],
+            "cross_edge_reduction": hier["cross_edge_reduction"],
+            "hier_us_per_agg": (round(hier_us, 1)
+                                if hier_us is not None else None),
+            "hier_measured": hier_us is not None,
             "speedup": round(seed_us / flat_us, 2),
             "speedup_q8_vs_flat": round(flat_us / q8_us, 2),
             "speedup_q8_vs_seed": round(seed_us / q8_us, 2),
@@ -305,15 +364,16 @@ def bench_point(K: int, d: int) -> dict:
             "speedup_topk_vs_flat": round(flat_us / topk_us, 2)}
 
 
-def main(ks=KS, ds=DS, out_path: str = OUT_PATH) -> dict:
+def main(ks=KS, ds=DS, out_path: str = OUT_PATH, mesh_ep=MESH) -> dict:
     entries = []
     print("# Server aggregation: seed tree_map/stack vs flat f32 buffer vs "
           "q8/q4/topk wire buffers vs streaming accumulator (same host)")
     print("K,D,seed_us,flat_us,q8_us,q4_us,topk_us,stream_us,flat_speedup,"
-          "q8_vs_flat,q4_vs_flat,topk_vs_flat,wire_ratio_q4,stream_chan_bytes")
+          "q8_vs_flat,q4_vs_flat,topk_vs_flat,wire_ratio_q4,"
+          "stream_chan_bytes,xedge_bytes,xedge_reduction")
     for d in ds:
         for K in ks:
-            e = bench_point(K, d)
+            e = bench_point(K, d, mesh_ep)
             entries.append(e)
             print(f"{e['K']},{e['D']},{e['seed_us_per_agg']},"
                   f"{e['flat_us_per_agg']},{e['q8_us_per_agg']},"
@@ -323,7 +383,9 @@ def main(ks=KS, ds=DS, out_path: str = OUT_PATH) -> dict:
                   f"{e['speedup_q4_vs_flat']}x,"
                   f"{e['speedup_topk_vs_flat']}x,"
                   f"{e['wire_ratio_q4']}x,"
-                  f"{e['stream_channel_bytes']}",
+                  f"{e['stream_channel_bytes']},"
+                  f"{e['cross_edge_bytes']},"
+                  f"{e['cross_edge_reduction']}x",
                   flush=True)
     # the tentpole memory claim, asserted on the measured numbers: the
     # streaming channel's footprint depends on D only — flat in K — while
@@ -340,12 +402,28 @@ def main(ks=KS, ds=DS, out_path: str = OUT_PATH) -> dict:
             if e["K"] > 2:  # buffered rows already dominate 2 banks
                 assert (e["stream_channel_bytes"]
                         < e["buffered_channel_bytes"]), e
+    # the hierarchy claim, asserted on every grid point: only E of the
+    # E*P shard partials cross the edge boundary, so cross-edge bytes
+    # shrink by exactly P vs the flat global psum
+    for e in entries:
+        E, Pods = e["hier_mesh"]
+        if E > 1:
+            assert e["cross_edge_reduction"] == float(Pods), e
+            assert e["flat_cross_bytes"] == \
+                Pods * e["cross_edge_bytes"], e
     report = {
         "benchmark": "server_aggregation",
         "schema_version": SCHEMA_VERSION,
         "backend": jax.default_backend(),
         "cpu_count": multiprocessing.cpu_count(),
+        "device_count": jax.device_count(),
+        # environment provenance: the knobs that change which kernel /
+        # reduction path the numbers describe
+        "jax_version": jax.__version__,
+        "agg_backend_env": os.environ.get("REPRO_AGG_BACKEND", ""),
+        "int8_dot_env": os.environ.get("REPRO_INT8_DOT", ""),
         "server_lr": SERVER_LR,
+        "mesh": list(mesh_ep),
         "entries": entries,
     }
     with open(out_path, "w") as f:
@@ -362,5 +440,12 @@ if __name__ == "__main__":
                     help="model sizes D to sweep")
     ap.add_argument("--out", default=OUT_PATH,
                     help="output JSON path")
+    ap.add_argument("--mesh", type=int, nargs=2, default=list(MESH),
+                    metavar=("E", "P"),
+                    help="hierarchical (edge, pod) topology for the "
+                         "cross-edge traffic columns; the 2-D round is "
+                         "also timed when the host has E*P devices "
+                         "(XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N) and K %% (E*P) == 0")
     a = ap.parse_args()
-    main(tuple(a.ks), tuple(a.ds), a.out)
+    main(tuple(a.ks), tuple(a.ds), a.out, tuple(a.mesh))

@@ -42,6 +42,19 @@ grouped-convolution lowering penalty):
     selection policies shift the staleness distribution, which is the
     effect they exist for.
 
+  * ``--mesh E P``: the hierarchical topology column (PR 9 tentpole) —
+    the batched engine re-timed on the 2-D (edge, pod) mesh
+    (``FLConfig.mesh_shape``), interleaved against the flat 1-D mesh
+    over the same E*P devices.  Per-shard partials tree-reduce within
+    their edge group (log2(P) ppermute rounds) and ONE cross-edge psum
+    of E edge partials reaches the server step; the entry records the
+    measured cross-edge bytes per aggregation and the ~P x reduction vs
+    the flat global psum (``FlatServer.traffic``), with schedule parity
+    asserted against the flat mesh.
+
+        XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+            PYTHONPATH=src python -m benchmarks.engine_bench --mesh 2 4
+
 Every full-vs-batched pairing runs identical simulated schedules (same
 seed => same event heap; staleness histogram and byte accounting asserted
 equal — the batched-vs-sequential parity oracle) at the default
@@ -52,10 +65,11 @@ reps interleaved between the two columns of each pair, so shared-host
 throughput drift hits both paths equally (the same discipline as
 benchmarks.agg_bench).
 
-Writes machine-readable ``BENCH_engine.json`` (schema 3: one entry per
-(K, model, devices) — plus one per scheduling policy — with rounds/sec,
-the resolved wave impl, mean staleness and speedups) so the perf
-trajectory is tracked across PRs.
+Writes machine-readable ``BENCH_engine.json`` (schema 4: one entry per
+(K, model, devices) — plus one per scheduling policy and one per
+hierarchical mesh — with rounds/sec, the resolved wave impl, mean
+staleness, speedups, cross-edge bytes and the jax/env provenance
+header) so the perf trajectory is tracked across PRs.
 
     PYTHONPATH=src python -m benchmarks.engine_bench
     # tiny CI smoke grid:
@@ -67,6 +81,7 @@ from __future__ import annotations
 import argparse
 import json
 import multiprocessing
+import os
 import time
 
 import jax
@@ -88,7 +103,7 @@ WARMUP_ROUNDS = 3
 REPS = 7
 ROUNDS_PER_REP = 5
 OUT_PATH = "BENCH_engine.json"
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 # per-policy FLConfig overrides for the --sched column (lognormal timing
 # exercises the stochastic draw path; selection knobs sized so policies
 # actually reject under the bench's 8-clients-per-slot population)
@@ -173,19 +188,20 @@ def _assert_same_schedule(a: FLEngine, b: FLEngine, what: str) -> None:
 
 
 def bench_point(K: int, model: str, reps: int, rounds_per_rep: int,
-                devices=(1,), sched=()) -> list:
+                devices=(1,), sched=(), mesh=None) -> list:
     # 8x clients per buffer slot keeps most horizons single-wave (few
     # repeat uploads), the schedule regime SAFL targets at scale
     n_clients = max(8 * K, 32)
     shards, te = _data(model, n_clients)
     p0, s0, apply_fn, kind = _model(model)
 
-    def mk(batched: bool, dev: int = 1, **sched_kw) -> FLEngine:
+    def mk(batched: bool, dev: int = 1, mesh_shape=None,
+           **sched_kw) -> FLEngine:
         cfg = FLConfig(n_clients=n_clients, k=K, mode="semi_async",
                        aggregation="fedsgd", client_lr=0.05,
                        server_lr=0.05, speed_sigma=0.3,
                        target_accuracy=0.99, batch_clients=batched,
-                       devices=dev, **sched_kw)
+                       devices=dev, mesh_shape=mesh_shape, **sched_kw)
         return FLEngine(cfg, apply_fn, kind, p0, s0, shards,
                         te.x[:48], te.y[:48])
 
@@ -239,6 +255,52 @@ def bench_point(K: int, model: str, reps: int, rounds_per_rep: int,
                             speedup_vs_1dev=round(ratio, 2),
                             speedup_vs_seq=round(speedup * ratio, 2)))
 
+    # ---- hierarchical-mesh column: batched engine on the 2-D (edge,
+    # pod) mesh, interleaved against the flat 1-D mesh over the SAME
+    # E*P devices — what the hierarchy costs/saves at equal parallelism,
+    # plus the measured cross-edge traffic from FlatServer.traffic ----
+    if mesh is not None:
+        E, Pods = mesh
+        n_mesh = E * Pods
+        if n_mesh > jax.device_count():
+            print(f"# skip mesh={E}x{Pods}: only {jax.device_count()} "
+                  "jax devices (set XLA_FLAGS="
+                  "--xla_force_host_platform_device_count)")
+        elif K % n_mesh != 0:
+            print(f"# skip mesh={E}x{Pods}: K={K} rows don't split over "
+                  f"{n_mesh} shards")
+        else:
+            mk(True, mesh_shape=(E, Pods)).run(total_rounds)
+            mk(True, n_mesh).run(total_rounds)  # pre-compile both
+            e_flat, e_hier = (mk(True, n_mesh),
+                              mk(True, mesh_shape=(E, Pods)))
+            e_flat.run(WARMUP_ROUNDS)
+            e_hier.run(WARMUP_ROUNDS)
+            b_flat, b_hier, ratio = _timed_pair(e_flat, e_hier, reps,
+                                                rounds_per_rep,
+                                                WARMUP_ROUNDS)
+            _assert_same_schedule(e_hier, e_flat,
+                                  f"{E}x{Pods} mesh vs flat")
+            # the hierarchy must not add programs: the sharded streaming
+            # finalize legitimately compiles once per distinct padded
+            # horizon length (same schedule => same lengths), so equal
+            # counts — NOT per-round growth — is the guard
+            assert e_hier._server.compile_count in (
+                e_flat._server.compile_count, -1), \
+                (e_hier._server.compile_count,
+                 e_flat._server.compile_count)
+            tr = e_hier._server.traffic
+            assert tr["cross_edge_reduction"] == float(Pods), tr
+            entries.append(dict(
+                base, devices=n_mesh, mesh_shape=[E, Pods],
+                batched_ms_per_round=round(b_hier * 1e3, 2),
+                batched_rounds_per_sec=round(1.0 / b_hier, 2),
+                # flat/hier per-round time ratio over the same devices
+                speedup_vs_flat_mesh=round(ratio, 2),
+                cross_edge_bytes=tr["cross_edge_bytes"],
+                flat_cross_bytes=tr["flat_cross_bytes"],
+                cross_edge_reduction=tr["cross_edge_reduction"]))
+
     # ---- scheduling-policy column: batched engine under a policy +
     # lognormal device time, interleaved vs a full-participation engine
     # on the SAME lognormal timing — overhead_vs_full is drift-robust
@@ -273,25 +335,32 @@ def bench_point(K: int, model: str, reps: int, rounds_per_rep: int,
 
 def main(ks=KS, models=tuple(MODELS), reps: int = REPS,
          rounds_per_rep: int = ROUNDS_PER_REP,
-         out_path: str = OUT_PATH, devices=(1,), sched=()) -> dict:
+         out_path: str = OUT_PATH, devices=(1,), sched=(),
+         mesh=None) -> dict:
     entries = []
     print("# SAFL engine: sequential vs horizon-batched vs multi-device "
-          "vs scheduling-policy rounds/sec (same host)")
-    print("K,model,D,devices,sched,impl,seq_rps,batched_rps,speedup,"
-          "mean_stale")
+          "vs scheduling-policy vs hierarchical-mesh rounds/sec "
+          "(same host)")
+    print("K,model,D,devices,sched,mesh,impl,seq_rps,batched_rps,speedup,"
+          "mean_stale,xedge_bytes")
     for model in models:
         for K in ks:
             for e in bench_point(K, model, reps, rounds_per_rep, devices,
-                                 sched):
+                                 sched, mesh):
                 entries.append(e)
-                sp = e.get("speedup", e.get("speedup_vs_1dev",
-                                            e.get("overhead_vs_full")))
+                sp = e.get("speedup",
+                           e.get("speedup_vs_1dev",
+                                 e.get("speedup_vs_flat_mesh",
+                                       e.get("overhead_vs_full"))))
+                ms = e.get("mesh_shape")
                 print(f"{e['K']},{e['model']},{e['D']},{e['devices']},"
                       f"{e.get('sched_policy', 'full')},"
+                      f"{f'{ms[0]}x{ms[1]}' if ms else 'flat'},"
                       f"{e['wave_impl']},"
                       f"{e.get('seq_rounds_per_sec', '-')},"
                       f"{e['batched_rounds_per_sec']},{sp}x,"
-                      f"{e.get('mean_staleness', '-')}",
+                      f"{e.get('mean_staleness', '-')},"
+                      f"{e.get('cross_edge_bytes', '-')}",
                       flush=True)
     report = {
         "benchmark": "safl_engine",
@@ -299,6 +368,11 @@ def main(ks=KS, models=tuple(MODELS), reps: int = REPS,
         "backend": jax.default_backend(),
         "cpu_count": multiprocessing.cpu_count(),
         "device_count": jax.device_count(),
+        # environment provenance: the knobs that change which kernel /
+        # reduction path the numbers describe
+        "jax_version": jax.__version__,
+        "agg_backend_env": os.environ.get("REPRO_AGG_BACKEND", ""),
+        "int8_dot_env": os.environ.get("REPRO_INT8_DOT", ""),
         "aggregation": "fedsgd",
         "eval_every": 1,
         "notes": (
@@ -314,7 +388,12 @@ def main(ks=KS, models=tuple(MODELS), reps: int = REPS,
             "(repro.sched); overhead_vs_full is the full-participation/"
             "policy per-round time ratio and mean_staleness the run's "
             "mean buffered staleness (selection shifts it — the policy "
-            "effect)."),
+            "effect). mesh_shape entries re-time the batched engine on "
+            "the hierarchical 2-D (edge, pod) mesh vs the flat 1-D mesh "
+            "over the same E*P devices; cross_edge_bytes is the "
+            "measured per-aggregation traffic crossing the edge "
+            "boundary (one f32 partial per edge), a factor-of-P "
+            "reduction vs flat_cross_bytes."),
         "entries": entries,
     }
     with open(out_path, "w") as f:
@@ -343,6 +422,14 @@ if __name__ == "__main__":
                     help="scheduling policies to add as extra batched "
                          "columns (lognormal device time): rounds/sec + "
                          "mean staleness per policy")
+    ap.add_argument("--mesh", type=int, nargs=2, default=None,
+                    metavar=("E", "P"),
+                    help="add the hierarchical 2-D (edge, pod) mesh "
+                         "column: batched engine on mesh_shape=(E, P) "
+                         "vs the flat mesh over the same E*P devices, "
+                         "with measured cross-edge bytes (needs E*P jax "
+                         "devices and K %% (E*P) == 0)")
     a = ap.parse_args()
     main(tuple(a.ks), tuple(a.models), a.reps, a.rounds_per_rep, a.out,
-         tuple(a.devices), tuple(a.sched))
+         tuple(a.devices), tuple(a.sched),
+         tuple(a.mesh) if a.mesh else None)

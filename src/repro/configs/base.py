@@ -224,11 +224,38 @@ class FLConfig:
     BN-state payload (shipped through the ravel_q8 wire format on every
     lossy wire).
 
-    Multi-device / compilation policy: ``devices`` shards the flat channel
-    and the batched waves over a mesh "pod" axis, ``wave_impl`` picks the
-    wave lane execution (vmap / lax.map / auto), and ``wave_buckets``
-    power-of-two-buckets wave sizes with masked rows so high-churn
-    schedules compile O(log k) wave programs.
+    Multi-device mesh / topology knobs (tentpole PR 9 adds the 2-D
+    hierarchical mesh — clients -> edge aggregators -> server):
+
+    ============  =====================================================
+    knob          effect
+    ============  =====================================================
+    devices       1-D mesh: flat channel rows + wave lanes over P "pod"
+                  shards; server reduce = per-shard partials + ONE
+                  global psum.  Alias for ``mesh_shape=(1, P)``.
+    mesh_shape    (E, P) 2-D (edge, pod) mesh: rows/lanes lay over the
+                  *flattened* E*P axis, per-shard partials tree-reduce
+                  within their edge group (log2(P) ppermute rounds,
+                  f32 partials — q8/q4 dequantize first), then ONE
+                  cross-edge psum of E edge partials reaches the server
+                  step.  Cross-edge traffic drops ~P x vs the flat
+                  psum.  P must be a power of two; K (and a queue
+                  horizon) must divide E*P.  (1, P) is bit-exact vs
+                  ``devices=P``; set at most one of the two knobs to
+                  > 1 device.
+    wave_impl     wave lane execution: vmap / lax.map / auto (per
+                  model+backend) — orthogonal to the mesh; lanes pin to
+                  the flattened row axis either way.
+    wave_buckets  pow2-bucket wave sizes (masked lanes) so high-churn
+                  schedules compile O(log k) wave programs per mesh —
+                  one program per (mode, wire, wave bucket), guarded by
+                  the engine's compile-count diagnostics.
+    server_.....  ``server_channel="streaming"`` composes with both
+    channel       meshes: the accumulator bank keeps one row per mesh
+                  shard (per-edge partial sums on the 2-D mesh —
+                  fold-at-edge; finalize = intra-edge tree reduce +
+                  cross-edge psum).
+    ============  =====================================================
 
     Streaming server channel (``server_channel``, tentpole PR 6): the
     semi-async engine defaults to accumulate-on-arrival aggregation —
@@ -384,6 +411,12 @@ class FLConfig:
     # before the first jax import) and k % devices == 0 (shard_map splits
     # the K rows evenly).
     devices: int = 1
+    # hierarchical 2-D (edge, pod) mesh (tentpole PR 9): (E, P) lays the
+    # flat channel rows and wave lanes over the flattened E*P axis;
+    # per-shard partials tree-reduce within their edge group before ONE
+    # cross-edge psum (see the knob table above).  None -> the 1-D
+    # ``devices`` mesh; (1, P) is the bit-exact ``devices=P`` alias.
+    mesh_shape: Optional[Tuple[int, int]] = None
     # wave lane execution: "vmap" (one vectorized program — the parallel
     # hardware fast path), "map" (lax.map: one dispatch, lanes serial —
     # identical numerics, sidesteps the grouped-convolution lowering that
@@ -427,6 +460,14 @@ class FLConfig:
     # metrics
     target_accuracy: float = 0.5  # Acc_t for T_f / T_s
     oscillation_thresholds: Tuple[float, ...] = (0.02, 0.05, 0.10, 0.15)
+
+    @property
+    def mesh_devices(self) -> int:
+        """Total mesh shard count: E*P under ``mesh_shape``, else the 1-D
+        ``devices`` count.  What K (and a queue horizon) must divide."""
+        if self.mesh_shape is not None:
+            return self.mesh_shape[0] * self.mesh_shape[1]
+        return self.devices
 
     def validate(self) -> None:
         assert self.mode in ("sync", "semi_async")
@@ -535,14 +576,34 @@ class FLConfig:
                 "defense='clip' needs defense_norm_cap > 0 (the norm cap)"
         assert self.defense_norm_cap >= 0.0
         # the podwise server reduction shard_maps the K buffer rows over
-        # the pod axis, which requires an even split
+        # the mesh row axes, which requires an even split
         assert self.devices >= 1, "devices must be >= 1"
-        if self.devices > 1:
-            assert self.k % self.devices == 0, \
-                f"k={self.k} must be a multiple of devices={self.devices}"
+        if self.mesh_shape is not None:
+            assert (isinstance(self.mesh_shape, tuple)
+                    and len(self.mesh_shape) == 2), \
+                f"mesh_shape={self.mesh_shape!r} must be an (edges, pods) " \
+                "pair"
+            e, p = self.mesh_shape
+            assert e >= 1 and p >= 1, self.mesh_shape
+            # the intra-edge reduce is log2(P) recursive-doubling rounds
+            assert p & (p - 1) == 0, \
+                (f"mesh_shape pods={p} must be a power of two (the "
+                 "intra-edge tree reduce pairs shards by XOR rounds)")
+            # devices stays the 1-D alias: setting BOTH to >1 device is
+            # ambiguous unless they describe the same pool
+            assert self.devices == 1 or self.devices == e * p, \
+                (f"devices={self.devices} conflicts with mesh_shape="
+                 f"{self.mesh_shape} ({e * p} devices); set one knob, or "
+                 "make them agree")
+        n_sh = self.mesh_devices
+        if n_sh > 1:
+            assert self.k % n_sh == 0, \
+                (f"k={self.k} must be a multiple of the mesh device count "
+                 f"{n_sh} (devices/mesh_shape: the channel rows shard "
+                 "evenly over the row axes)")
             if self.horizon == "queue":
                 q = self.horizon_queue or self.k
-                assert q % self.devices == 0, \
+                assert q % n_sh == 0, \
                     (f"queue horizon of {q} uploads must be a multiple of "
-                     f"devices={self.devices} (the channel rows shard "
-                     "evenly over the pod axis)")
+                     f"the mesh device count {n_sh} (the channel rows "
+                     "shard evenly over the row axes)")

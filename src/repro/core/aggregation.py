@@ -262,14 +262,22 @@ class FlatServer:
     the weight-upload modes (fedavg, fedasync) are rejected because a
     sparse weight average would zero every untransmitted coordinate.
 
-    ``mesh`` (a 1-D "pod" mesh, :func:`repro.sharding.flat.make_pod_mesh`)
-    makes the round multi-device: the buffer rows live sharded
-    ``P("pod", None)`` and the reduction becomes a per-shard partial
-    weighted sum (the kernels' ``mode="sum"`` grid on the Pallas backends,
-    the jnp / streaming-q8 references on CPU) folded by ONE ``psum`` over
-    pod links (:func:`repro.sharding.flat.podwise_sums`), followed by the
-    same fused server step on the replicated (D,) state.  Still one jitted
-    program per experiment; K must divide the mesh size.
+    ``mesh`` (a 1-D "pod" mesh, :func:`repro.sharding.flat.make_pod_mesh`,
+    or the 2-D (edge, pod) mesh of
+    :func:`repro.sharding.flat.make_hier_mesh`) makes the round
+    multi-device: the buffer rows live sharded over the mesh row axes and
+    the reduction becomes a per-shard partial weighted sum (the kernels'
+    ``mode="sum"`` grid on the Pallas backends, the jnp / streaming-q8
+    references on CPU) folded by the mesh-shaped collective
+    (:func:`repro.sharding.flat.podwise_sums`): ONE ``psum`` over pod
+    links on the 1-D mesh, or — hierarchically — log2(P) intra-edge
+    ``ppermute`` tree-reduce rounds plus ONE cross-edge ``psum`` of the E
+    edge partials (only E operands ever cross the slow edge boundary;
+    :attr:`traffic` records the measured per-aggregation byte counts).
+    The q8/q4 per-shard bodies dequantize BEFORE the tree reduce, so edge
+    partials are always f32 and the 1-D tolerances carry over.  Then the
+    same fused server step runs on the replicated (D,) state.  Still one
+    jitted program per experiment; K must divide the mesh size.
 
     Streaming channel: alongside the buffered ``step`` the server compiles
     a donated **fold** program (:attr:`fold_program` — one arriving upload
@@ -377,11 +385,13 @@ class FlatServer:
                 elif _ref.int8dot_auto(q.shape[0] * n_pod):
                     # large-K int8-dot (platform-gated — XLA CPU emulates
                     # int8 GEMM; see int8dot_auto): quantize this shard's
-                    # reduction coefficients against the pod-wide absmax
+                    # reduction coefficients against the mesh-wide absmax
                     # scale — the same grid the single-device round uses
+                    # (pmax spans BOTH axes of a hierarchical mesh: the
+                    # regime keys on the global K)
                     cs = jax.lax.pmax(
                         _ref.int8dot_coeff_scale(scales, w),
-                        _shflat.POD_AXIS)
+                        _shflat.reduce_axes(self.mesh))
                     g = _ref.weighted_sum_q8_int8dot_ref(
                         q, scales, w, qb, coeff_scale=cs)
                 else:
@@ -415,6 +425,16 @@ class FlatServer:
             self.mesh, _partial_sums,
             3 if topk else (2 if (quantized or q4) else 1))
                       if self.mesh is not None else None)
+
+        #: per-aggregation cross-edge traffic (repro.sharding.flat.
+        #: edge_traffic): the f32 partial each shard contributes is the
+        #: unit of exchange — padded (Dq,) on the q8/q4 wires (the
+        #: per-shard body dequantizes onto the qblock grid before the
+        #: reduce), (d,) on f32/topk.  On a 1-D (or absent) mesh the
+        #: flat and hierarchical counts coincide (reduction factor 1).
+        dq = -(-d // qb) * qb
+        self.traffic = _shflat.edge_traffic(
+            self.mesh, 4 * (dq if (quantized or q4) else d))
 
         def _adam_step(p0, g, opt, params_dtype):
             step = opt["step"] + 1

@@ -290,7 +290,7 @@ class PytreeCodec:
 
 def alloc_buffer(k: int, d: int, sharding=None) -> jax.Array:
     """Preallocate the (K, D) f32 device update buffer.  ``sharding``
-    (a NamedSharding, e.g. rows over the mesh "pod" axis —
+    (a NamedSharding, e.g. rows over the mesh row axes —
     :func:`repro.sharding.flat.row_sharding`) commits the rows across
     devices so wave scatters and the podwise server reduction run on the
     shard layout end-to-end."""
@@ -439,8 +439,9 @@ class AccumBuffer:
         the spare bank in so the next horizon's folds can start while the
         server round consumes this one.  ``wvec`` is the np.float32 ingest
         weights in arrival order (mesh: per-shard lists concatenated in
-        shard-major order, zero-padded to equal length so the podwise
-        reduction's P("pod") split stays even)."""
+        shard-major order — edge-major then pod on the 2-D (edge, pod)
+        mesh — zero-padded to equal length so the podwise reduction's
+        row-axes split stays even)."""
         assert self.count > 0, "seal() on an empty horizon"
         if self.n_rows == 1:
             wvec = np.asarray(self._w[0], np.float32)
@@ -489,7 +490,7 @@ class QuantBuffer:
         row_bytes = self.dq // 2 if self.packed else self.dq
         self.q = jnp.zeros((k, row_bytes), jnp.int8)
         self.scales = jnp.zeros((k, self.n_qblocks), jnp.float32)
-        if sharding is not None:  # rows over the mesh "pod" axis
+        if sharding is not None:  # rows over the mesh row axes
             self.q = jax.device_put(self.q, sharding)
             self.scales = jax.device_put(self.scales, sharding)
 
@@ -537,7 +538,7 @@ class TopkBuffer:
         self.idx = jnp.full((k, nk), d, jnp.int32)
         self.qv = jnp.zeros((k, nk), jnp.int8)
         self.scales = jnp.zeros((k, self.nk_qblocks), jnp.float32)
-        if sharding is not None:  # rows over the mesh "pod" axis
+        if sharding is not None:  # rows over the mesh row axes
             self.idx = jax.device_put(self.idx, sharding)
             self.qv = jax.device_put(self.qv, sharding)
             self.scales = jax.device_put(self.scales, sharding)

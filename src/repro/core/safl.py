@@ -69,15 +69,23 @@ sequential per-update mixes folded into one linear combination
 (aggregation.fedasync_coefficients + the kernels' ``mix`` mode) — the
 per-leaf pytree aggregation path is fully retired.
 
-*Multi-device execution* (``devices > 1``): the flat (K, D) channel —
-f32 buffer or int8 :class:`repro.core.flatbuf.QuantBuffer` — lives
-row-sharded over a 1-D mesh "pod" axis (:mod:`repro.sharding.flat`), the
-batched wave programs pin their client lanes to the same axis with
-in-program sharding constraints (wave training runs data-parallel across
-devices and scatters already-sharded rows), and the server round lowers to
-per-shard partial weighted sums (the kernels' ``mode="sum"`` grid /
-streaming-q8 reference) folded by ONE psum over pod links
-(sharding.flat.podwise_sums) before the replicated server step.
+*Multi-device execution* (``devices > 1`` or ``mesh_shape=(E, P)``): the
+flat (K, D) channel — f32 buffer or int8
+:class:`repro.core.flatbuf.QuantBuffer` — lives row-sharded over the mesh
+row axes (:mod:`repro.sharding.flat`): a 1-D "pod" axis under
+``devices``, or the *flattened* 2-D (edge, pod) axis under
+``mesh_shape`` — the hierarchical clients -> edge aggregators -> server
+topology.  The batched wave programs pin their client lanes to the same
+axes with in-program sharding constraints (wave training runs
+data-parallel across devices and scatters already-sharded rows), and the
+server round lowers to per-shard partial weighted sums (the kernels'
+``mode="sum"`` grid / streaming-q8 reference) folded by the mesh-shaped
+collective (sharding.flat.podwise_sums) before the replicated server
+step: ONE global psum on the 1-D mesh; log2(P) intra-edge ppermute
+tree-reduce rounds + ONE cross-edge psum of E edge partials on the 2-D
+mesh (cross-edge traffic shrinks ~P x — FlatServer.traffic holds the
+measured bytes).  ``mesh_shape=(1, P)`` is the bit-exact ``devices=P``
+alias.
 
 *Wave compilation policy*: each distinct wave size is a distinct XLA
 program (K is a static shape), so ``wave_buckets`` pads waves to the next
@@ -282,16 +290,21 @@ class FLEngine:
         self._last_agg_time = 0.0
         # per-client error-feedback residuals (dq,), created on first upload
         self._residuals: Dict[int, jax.Array] = {}
-        # ---- multi-device: flat channel rows over the mesh "pod" axis ----
+        # ---- multi-device: flat channel rows over the mesh row axes ----
+        # devices=P -> 1-D "pod" mesh; mesh_shape=(E, P) -> hierarchical
+        # 2-D (edge, pod) mesh (E=1 builds the identical 1-D mesh, so the
+        # alias path is bit-exact)
         self._mesh = None
         row_sh = None
-        if fl_cfg.devices > 1:
-            assert fl_cfg.devices <= len(jax.devices()), (
-                f"devices={fl_cfg.devices} but only {len(jax.devices())} "
-                "jax devices visible (on CPU hosts set XLA_FLAGS="
-                "--xla_force_host_platform_device_count before importing "
-                "jax)")
-            self._mesh = shflat.make_pod_mesh(fl_cfg.devices)
+        n_shards = fl_cfg.mesh_devices
+        if n_shards > 1:
+            assert n_shards <= len(jax.devices()), (
+                f"mesh of {n_shards} devices requested but only "
+                f"{len(jax.devices())} jax devices visible (on CPU hosts "
+                "set XLA_FLAGS=--xla_force_host_platform_device_count "
+                "before importing jax)")
+            edges, pods = fl_cfg.mesh_shape or (1, fl_cfg.devices)
+            self._mesh = shflat.make_hier_mesh(edges, pods)
             row_sh = shflat.row_sharding(self._mesh)
         # discount-at-ingest: the engine composes the FINAL per-upload
         # aggregation weights on host for EVERY mode (_weight_vector) —
@@ -316,15 +329,17 @@ class FLEngine:
         self._accum = None
         if self._streaming:
             # O(D) double-buffered accumulator: n_rows = mesh shards (the
-            # streaming counterpart of the row-sharded (K, D) buffer) —
-            # ingestion of horizon r+1 overlaps the server step of r.
-            # q8/q4 folds dequantize onto the padded (Dq,) grid; topk
-            # scatters into the raw (d,) range (pad coords contribute 0)
+            # streaming counterpart of the row-sharded (K, D) buffer; on
+            # the 2-D mesh each edge group's P rows are that edge's own
+            # partial sums — fold-at-edge) — ingestion of horizon r+1
+            # overlaps the server step of r.  q8/q4 folds dequantize onto
+            # the padded (Dq,) grid; topk scatters into the raw (d,)
+            # range (pad coords contribute 0)
             self._accum = flatbuf.AccumBuffer(
                 self.codec.dq if self._wire in ("q8", "q4")
                 else self.codec.d,
                 self._server.fold_program,
-                n_rows=fl_cfg.devices, sharding=row_sh)
+                n_rows=n_shards, sharding=row_sh)
         elif self._quant or self._q4:
             self._qbuf = flatbuf.QuantBuffer(self._horizon_target,
                                              self.codec.d,
@@ -396,14 +411,16 @@ class FLEngine:
 
         With a fixed, evenly divisible horizon target the assignment is
         block-wise — slot i folds into the row that holds the rows the
-        buffered channel would shard to the same pod — so the per-shard
+        buffered channel would shard to the same mesh shard (on the 2-D
+        mesh: shard e*P + p of edge e, so each edge accumulates exactly
+        the rows the buffered channel lays on it) — so the per-shard
         partial sums (and hence the mesh server round) match the buffered
         oracle bitwise.  Clock-triggered horizons round-robin instead.
         fedasync always folds into row 0: its sequential mix is one
         non-commuting chain, not a per-shard decomposition."""
         if self._mesh is None or self.cfg.aggregation == "fedasync":
             return 0
-        n = self.cfg.devices
+        n = self.cfg.mesh_devices
         t = self._horizon_target
         if t is not None and t % n == 0:
             return min(slot // (t // n), n - 1)

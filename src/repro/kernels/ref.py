@@ -619,3 +619,24 @@ def screen_sumsq_q4_ref(p: jax.Array, scales: jax.Array,
                         qblock: int) -> jax.Array:
     """Packed-q4 screening: unpack the nibbles, then the q8 rule."""
     return screen_sumsq_q8_ref(unpack_q4_ref(p), scales, qblock)
+
+
+def xor_tree_sum_ref(parts) -> jax.Array:
+    """Host oracle of the intra-edge recursive-doubling tree reduce.
+
+    ``parts`` is a length-P sequence (or a (P, ...) stacked array) of the
+    per-shard partials one edge group holds.  Reproduces the EXACT
+    addition pairing of :func:`repro.kernels.safl_agg.edge_partial_reduce`
+    — round r adds partner ``i ^ 2**r`` — so tests can assert the mesh
+    tree reduce bitwise, not just within tolerance.  Requires P to be a
+    power of two (the mesh constructor enforces this for the pod
+    sub-axis).
+    """
+    parts = [jnp.asarray(p) for p in parts]
+    n = len(parts)
+    assert n & (n - 1) == 0, f"pod group of {n} is not a power of two"
+    shift = 1
+    while shift < n:
+        parts = [parts[i] + parts[i ^ shift] for i in range(n)]
+        shift *= 2
+    return parts[0]

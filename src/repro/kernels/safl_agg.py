@@ -71,6 +71,38 @@ def default_backend() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "xla"
 
 
+def edge_partial_reduce(val: jax.Array, *, pod_size: int,
+                        pod_axis: str = "pod",
+                        edge_axis: str = "edge") -> jax.Array:
+    """Hierarchical reduction of per-shard ``mode="sum"`` partials on a
+    2-D (edge, pod) mesh: callable only inside ``shard_map``.
+
+    Stage 1 — intra-edge tree reduce: log2(P) recursive-doubling rounds
+    of ``ppermute`` over the pod sub-axis (round r adds the partner
+    ``i ^ 2**r``), so after the last round every pod shard of an edge
+    group holds the full *edge partial*.  These hops stay on the fast
+    intra-edge links.  Stage 2 — ONE ``psum`` of the E edge partials over
+    the edge axis: the only traffic that crosses the slow edge boundary,
+    E operands instead of the E*P a flat global psum exchanges (the ~P x
+    cross-edge traffic reduction the hierarchy buys).
+
+    The XOR pairing is deterministic, so the host oracle
+    (:func:`repro.kernels.ref.xor_tree_sum_ref`) reproduces the addition
+    order bitwise.  ``pod_size`` must be a power of two (falls back to a
+    plain pod-axis psum otherwise — same value, unspecified order).
+    """
+    if pod_size > 1:
+        if pod_size & (pod_size - 1) == 0:
+            shift = 1
+            while shift < pod_size:
+                perm = [(i, i ^ shift) for i in range(pod_size)]
+                val = val + jax.lax.ppermute(val, pod_axis, perm)
+                shift *= 2
+        else:  # pragma: no cover - configs validate pow2 pod groups
+            val = jax.lax.psum(val, pod_axis)
+    return jax.lax.psum(val, edge_axis)
+
+
 def _weights(w, alpha: float, discount: str):
     w = w.astype(jnp.float32)
     if discount == "poly":

@@ -70,6 +70,16 @@ def main() -> None:
                          "requires k %% devices == 0; on CPU hosts set "
                          "XLA_FLAGS=--xla_force_host_platform_device_"
                          "count=N before launching)")
+    ap.add_argument("--mesh", type=int, nargs=2, default=None,
+                    metavar=("E", "P"),
+                    help="hierarchical 2-D (edge, pod) aggregation mesh: "
+                         "per-shard partials tree-reduce within each of "
+                         "the E edge groups over the P-device pod "
+                         "sub-axis, then one cross-edge psum of E edge "
+                         "partials reaches the server step (cross-edge "
+                         "traffic drops ~P x vs the flat mesh); needs "
+                         "E*P devices and k %% (E*P) == 0; --mesh 1 P "
+                         "is the bit-exact alias of --devices P")
     ap.add_argument("--wave-impl", default="auto",
                     choices=["auto", "vmap", "map"],
                     help="batched-wave lane execution: vmap (vectorized), "
@@ -226,7 +236,9 @@ def main() -> None:
                    wire=args.wire, topk_frac=args.topk_frac,
                    eval_every=args.eval_every,
                    batch_clients=not args.sequential,
-                   devices=args.devices, wave_impl=args.wave_impl,
+                   devices=args.devices,
+                   mesh_shape=tuple(args.mesh) if args.mesh else None,
+                   wave_impl=args.wave_impl,
                    wave_buckets=not args.no_wave_buckets,
                    horizon=args.horizon, horizon_queue=args.horizon_queue,
                    horizon_timeout_s=args.horizon_timeout_s,
@@ -276,6 +288,10 @@ def main() -> None:
     ss["staleness_hist"] = {int(kk): v
                             for kk, v in sorted(res.staleness_hist.items())}
     summary["sched"] = ss
+    # hierarchy surface: the server's cross-edge traffic model (unit =
+    # one f32 edge partial + its weight scalar; flat mesh = every shard
+    # partial crosses, hierarchical = one per edge group)
+    summary["traffic"] = dict(eng._server.traffic)
     print(json.dumps(summary, indent=1, default=str))
     print(f"# sched[{ss['policy']}/{ss['timing']}] participation "
           f"per client: {ss['participation']}")

@@ -40,6 +40,27 @@ def make_pod_mesh(n_devices: int):
     return _mk(n_devices)
 
 
+def make_hier_mesh(edges: int, pods: int):
+    """2-D (edge, pod) mesh — the hierarchical SAFL aggregation topology
+    (FLConfig.mesh_shape=(E, P)): per-shard partials tree-reduce within
+    their edge group over the pod sub-axis, then ONE cross-edge psum of
+    the E edge partials reaches the server step (repro.sharding.flat).
+    edges == 1 builds the plain 1-D pod mesh (the ``devices=P`` alias)."""
+    from repro.sharding.flat import make_hier_mesh as _mk
+    return _mk(edges, pods)
+
+
+def cross_edge_time_s(cross_edge_bytes: int,
+                      link_bw: float = ICI_BW) -> float:
+    """Roofline seconds for one aggregation's cross-edge traffic over one
+    slow inter-edge link (default: one v5e ICI link — real edge uplinks
+    are slower still, which only widens the hierarchy's win).  Pairs with
+    ``FlatServer.traffic["cross_edge_bytes"]`` to turn the measured ~P x
+    byte reduction into projected wall-clock on hardware where the
+    cross-edge hop dominates."""
+    return float(cross_edge_bytes) / float(link_bw)
+
+
 def mesh_chips(mesh) -> int:
     n = 1
     for v in mesh.shape.values():

@@ -134,9 +134,16 @@ def param_specs(params: Pytree, cfg, mesh: Mesh) -> Pytree:
     return jax.tree_util.tree_map_with_path(one, params)
 
 
+# data-parallel mesh axes, outermost first: the hierarchical SAFL "edge"
+# axis nests outside its "pod" sub-axis (repro.sharding.flat 2-D meshes),
+# and the production serve meshes carry "data"
+_DATA_AXES = ("edge", "pod", "data")
+
+
 def batch_spec(mesh: Mesh) -> P:
-    """Global batch dim over all data-parallel axes present."""
-    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    """Global batch dim over all data-parallel axes present (the batch
+    lays over the flattened (edge, pod) axis on a hierarchical mesh)."""
+    axes = [a for a in _DATA_AXES if a in mesh.shape]
     return P(tuple(axes) if len(axes) > 1 else (axes[0] if axes else None))
 
 
@@ -149,10 +156,11 @@ def cache_specs(cache: Pytree, mesh: Mesh, batch: int) -> Pytree:
     """
     dsize = mesh.shape.get("data", 1)
     msize = mesh.shape.get("model", 1)
-    # batch shards over every data-parallel axis present (pod + data) so the
-    # cache layout matches the activation constraints (§Perf: a data-only
-    # cache forced a per-layer reshard on the multi-pod serve path)
-    baxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    # batch shards over every data-parallel axis present (edge + pod +
+    # data) so the cache layout matches the activation constraints (§Perf:
+    # a data-only cache forced a per-layer reshard on the multi-pod serve
+    # path); the hierarchical (edge, pod) axes flatten together here
+    baxes = tuple(a for a in _DATA_AXES if a in mesh.shape)
     btotal = 1
     for a in baxes:
         btotal *= mesh.shape[a]
