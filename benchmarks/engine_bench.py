@@ -55,6 +55,14 @@ grouped-convolution lowering penalty):
         XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
             PYTHONPATH=src python -m benchmarks.engine_bench --mesh 2 4
 
+  * ``traced`` (default on, ``--no-trace`` skips): the observability
+    column (PR 10 tentpole) — the batched engine re-timed with the
+    upload-level span tracer (``repro.obs.trace``) enabled vs disabled,
+    interleaved so ``trace_overhead`` is the traced/untraced per-round
+    time ratio.  Tracing is pure host-side bookkeeping (identical XLA
+    programs, schedule parity asserted); the CI trace-smoke job holds
+    the ratio to <= 1.03.
+
 Every full-vs-batched pairing runs identical simulated schedules (same
 seed => same event heap; staleness histogram and byte accounting asserted
 equal — the batched-vs-sequential parity oracle) at the default
@@ -65,11 +73,12 @@ reps interleaved between the two columns of each pair, so shared-host
 throughput drift hits both paths equally (the same discipline as
 benchmarks.agg_bench).
 
-Writes machine-readable ``BENCH_engine.json`` (schema 4: one entry per
-(K, model, devices) — plus one per scheduling policy and one per
-hierarchical mesh — with rounds/sec, the resolved wave impl, mean
-staleness, speedups, cross-edge bytes and the jax/env provenance
-header) so the perf trajectory is tracked across PRs.
+Writes machine-readable ``BENCH_engine.json`` (schema 5: one entry per
+(K, model, devices) — plus one per scheduling policy, one per
+hierarchical mesh and one traced — with rounds/sec, the resolved wave
+impl, mean staleness, speedups, trace overhead, cross-edge bytes and
+the jax/env provenance header) so the perf trajectory is tracked
+across PRs.
 
     PYTHONPATH=src python -m benchmarks.engine_bench
     # tiny CI smoke grid:
@@ -103,7 +112,7 @@ WARMUP_ROUNDS = 3
 REPS = 7
 ROUNDS_PER_REP = 5
 OUT_PATH = "BENCH_engine.json"
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5  # v5: trace-overhead column (traced vs untraced)
 # per-policy FLConfig overrides for the --sched column (lognormal timing
 # exercises the stochastic draw path; selection knobs sized so policies
 # actually reject under the bench's 8-clients-per-slot population)
@@ -188,7 +197,8 @@ def _assert_same_schedule(a: FLEngine, b: FLEngine, what: str) -> None:
 
 
 def bench_point(K: int, model: str, reps: int, rounds_per_rep: int,
-                devices=(1,), sched=(), mesh=None) -> list:
+                devices=(1,), sched=(), mesh=None,
+                trace: bool = True) -> list:
     # 8x clients per buffer slot keeps most horizons single-wave (few
     # repeat uploads), the schedule regime SAFL targets at scale
     n_clients = max(8 * K, 32)
@@ -231,6 +241,25 @@ def bench_point(K: int, model: str, reps: int, rounds_per_rep: int,
                     seq_rounds_per_sec=round(1.0 / best_s, 2),
                     batched_rounds_per_sec=round(1.0 / best_b, 2),
                     speedup=round(speedup, 2))]
+
+    if trace:
+        # tracing-overhead column (PR 10): the batched engine with the
+        # upload-level span tracer on vs off.  Tracing is pure host-side
+        # bookkeeping, so the programs are identical — no extra
+        # pre-compile run needed.  trace_overhead is the traced/untraced
+        # per-round time ratio (the ≤ 3% budget CI enforces).
+        e_off, e_on = mk(True), mk(True, trace_level="upload")
+        e_off.run(WARMUP_ROUNDS)
+        e_on.run(WARMUP_ROUNDS)
+        b_on, b_off, ratio = _timed_pair(e_on, e_off, reps,
+                                         rounds_per_rep, WARMUP_ROUNDS)
+        _assert_same_schedule(e_on, e_off, "traced vs untraced")
+        entries.append(dict(
+            base, devices=1, traced="upload",
+            traced_ms_per_round=round(b_on * 1e3, 2),
+            untraced_ms_per_round=round(b_off * 1e3, 2),
+            batched_rounds_per_sec=round(1.0 / b_on, 2),
+            trace_overhead=round(ratio, 4)))
 
     for dev in devices:
         if dev == 1:
@@ -336,7 +365,7 @@ def bench_point(K: int, model: str, reps: int, rounds_per_rep: int,
 def main(ks=KS, models=tuple(MODELS), reps: int = REPS,
          rounds_per_rep: int = ROUNDS_PER_REP,
          out_path: str = OUT_PATH, devices=(1,), sched=(),
-         mesh=None) -> dict:
+         mesh=None, trace: bool = True) -> dict:
     entries = []
     print("# SAFL engine: sequential vs horizon-batched vs multi-device "
           "vs scheduling-policy vs hierarchical-mesh rounds/sec "
@@ -346,12 +375,13 @@ def main(ks=KS, models=tuple(MODELS), reps: int = REPS,
     for model in models:
         for K in ks:
             for e in bench_point(K, model, reps, rounds_per_rep, devices,
-                                 sched, mesh):
+                                 sched, mesh, trace):
                 entries.append(e)
                 sp = e.get("speedup",
                            e.get("speedup_vs_1dev",
                                  e.get("speedup_vs_flat_mesh",
-                                       e.get("overhead_vs_full"))))
+                                       e.get("overhead_vs_full",
+                                             e.get("trace_overhead")))))
                 ms = e.get("mesh_shape")
                 print(f"{e['K']},{e['model']},{e['D']},{e['devices']},"
                       f"{e.get('sched_policy', 'full')},"
@@ -393,7 +423,11 @@ def main(ks=KS, models=tuple(MODELS), reps: int = REPS,
             "over the same E*P devices; cross_edge_bytes is the "
             "measured per-aggregation traffic crossing the edge "
             "boundary (one f32 partial per edge), a factor-of-P "
-            "reduction vs flat_cross_bytes."),
+            "reduction vs flat_cross_bytes. traced entries re-time the "
+            "batched engine with the upload-level span tracer "
+            "(repro.obs.trace) on vs off; trace_overhead is the "
+            "traced/untraced per-round time ratio (budget: <= 1.03, "
+            "enforced by the CI trace-smoke job)."),
         "entries": entries,
     }
     with open(out_path, "w") as f:
@@ -429,7 +463,11 @@ if __name__ == "__main__":
                          "vs the flat mesh over the same E*P devices, "
                          "with measured cross-edge bytes (needs E*P jax "
                          "devices and K %% (E*P) == 0)")
+    ap.add_argument("--no-trace", action="store_true",
+                    help="skip the tracing-overhead column (batched "
+                         "engine with the upload-level span tracer on "
+                         "vs off)")
     a = ap.parse_args()
     main(tuple(a.ks), tuple(a.models), a.reps, a.rounds_per_rep, a.out,
          tuple(a.devices), tuple(a.sched),
-         tuple(a.mesh) if a.mesh else None)
+         tuple(a.mesh) if a.mesh else None, not a.no_trace)

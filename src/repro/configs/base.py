@@ -327,6 +327,34 @@ class FLConfig:
     ``fl_sim --ckpt-dir/--ckpt-every/--resume``) capture the full
     engine + sched + fault state between aggregation rounds;
     kill-and-resume replays the uninterrupted run bit-exactly.
+
+    Observability (``trace_*``, tentpole PR 10): a host-side structured
+    tracing layer (:mod:`repro.obs`) records per-upload lifecycle spans
+    and per-horizon round spans on the *simulated* clock.  Tracing off
+    is the default and is bit-exact with the untraced engine (no tracer
+    is even constructed); tracing on adds only host bookkeeping, and
+    the sequential and batched paths emit identical span streams (the
+    seq-vs-batched parity discipline extends to the trace):
+
+    ===========  =====================================================
+    knob         effect
+    ===========  =====================================================
+    trace_level  ``"off"`` (default — zero overhead); ``"round"``
+                 (per-horizon round + aggregate spans only);
+                 ``"upload"`` (full lifecycle: train span, wire
+                 transfer span with payload bytes, server ingest
+                 instant with staleness / defense factor / final
+                 aggregation weight, plus scheduler reject / idle /
+                 crash-backoff / wake / offline instants)
+    trace_dir    directory for the JSONL span log (``trace.jsonl``);
+                 empty keeps records in memory only
+                 (``engine.tracer.records``).  ``fl_sim --trace-dir``
+                 additionally exports Chrome-trace JSON
+                 (``trace.json``, loadable in Perfetto /
+                 chrome://tracing) and Prometheus-text + JSON metrics
+                 snapshots; ``python -m repro.obs.report`` renders the
+                 JSONL as an ASCII timeline
+    ===========  =====================================================
     """
 
     n_clients: int = 50
@@ -457,6 +485,10 @@ class FLConfig:
     # — requires defense_norm_cap > 0)
     defense: str = "none"
     defense_norm_cap: float = 0.0  # 0 -> isfinite screening only
+    # ---- observability (tentpole PR 10, see the trace_* table in the
+    # class docstring and repro/obs/README.md) ----
+    trace_level: str = "off"  # off | round | upload
+    trace_dir: str = ""  # JSONL span log directory ("" = in-memory only)
     # metrics
     target_accuracy: float = 0.5  # Acc_t for T_f / T_s
     oscillation_thresholds: Tuple[float, ...] = (0.02, 0.05, 0.10, 0.15)
@@ -509,6 +541,9 @@ class FLConfig:
             "full", "uniform", "seafl", "fedqs", "ratelimit"), \
             self.sched_policy
         assert self.sched_rate_limit >= 0, "sched_rate_limit must be >= 0"
+        # observability (repro.obs)
+        assert self.trace_level in ("off", "round", "upload"), \
+            self.trace_level
         if self.sched_policy == "ratelimit" and self.horizon in ("k",
                                                                  "queue"):
             # a count-triggered horizon must stay fillable: with fewer

@@ -21,6 +21,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.obs.profile import record_transfer
+
 
 class DeviceMetricsRing:
     """Preallocated (capacity, channels) f32 device buffer of per-round
@@ -116,11 +118,13 @@ class DeviceMetricsRing:
 
     def flush(self) -> np.ndarray:
         """One host transfer: the (n, channels) rows appended so far."""
+        record_transfer("metrics_ring.flush")
         return np.asarray(self._buf[:self._n])
 
     def flush_sched(self):
         """One host transfer: (staleness histogram, participation)."""
         assert self._hist is not None, "ring built without sched channels"
+        record_transfer("metrics_ring.flush_sched")
         return (np.asarray(self._hist),
                 np.asarray(self._part[:self.n_clients]))
 

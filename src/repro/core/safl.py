@@ -118,6 +118,7 @@ histogram ride the metrics ring (one extra host transfer per run) into
 from __future__ import annotations
 
 import dataclasses
+import time as _walltime
 from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -386,6 +387,26 @@ class FLEngine:
         # persist alongside it — the counterpart of ClientState.params on
         # the sequential path.
         self._client_flats: Optional[List[jax.Array]] = None
+        # batched wave program of the last resolved (impl, mesh) combo —
+        # obs.profile.engine_compile_log tracks its compile count
+        self._wave_fn = None
+        # wall-clock seconds spent inside run() (obs folds/sec gauge)
+        self.wall_run_s = 0.0
+        # ---- observability (tentpole PR 10): host-side span tracer ----
+        # trace_level="off" never constructs a tracer, so the untraced
+        # engine is bit-exact with pre-obs builds; tracing on adds only
+        # host bookkeeping (every site is `if tracer is not None`-gated)
+        self.tracer = None
+        if fl_cfg.trace_level != "off":
+            from repro.obs.trace import SpanTracer
+            self.tracer = SpanTracer(
+                fl_cfg.trace_dir, fl_cfg.trace_level,
+                meta=dict(mode=fl_cfg.mode, aggregation=fl_cfg.aggregation,
+                          wire=self._wire, channel=self._channel,
+                          horizon=fl_cfg.horizon, defense=self._defense,
+                          n_clients=len(self.clients), k=fl_cfg.k,
+                          d=self.codec.d, seed=fl_cfg.seed))
+            self.sched.tracer = self.tracer
 
     # ------------------------------------------------------------------
     def _base_compute(self, c: ClientState) -> float:
@@ -848,14 +869,43 @@ class FLEngine:
             screened_uploads=self.screened_uploads,
             clipped_uploads=self.clipped_uploads)
 
+    def _trace_round(self, stal: Sequence[int], sizes: Sequence[int],
+                     facs, t0: float, t1: float) -> None:
+        """Emit the horizon-close aggregate/round spans and flush the
+        tracer's pending records (tracing on only).  Recomputes the
+        final per-upload weight vector on host — the same
+        ``_weight_vector`` x defense-factor product both channels
+        consume — so ingest records carry the exact folded weights."""
+        w = self._weight_vector(stal, sizes)
+        if facs is not None:
+            w = w * np.asarray(
+                [np.float32(1.0) if f is None else f for f in facs],
+                np.float32)
+        self.tracer.round(
+            self.t_global, t0=t0, t1=t1, agg_s=self._agg_overhead(),
+            k=len(stal), staleness=stal,
+            weights=[float(x) for x in w],
+            counts=dict(tx_bytes=int(self.tx_bytes),
+                        rx_bytes=int(self.rx_bytes),
+                        screened=int(self.screened_uploads),
+                        clipped=int(self.clipped_uploads),
+                        corrupted=int(self.corrupted_uploads),
+                        byzantine=int(self.byzantine_uploads)))
+
     # ------------------------------------------------------------------
     def run(self, n_rounds: int, log_every: int = 0) -> FLResult:
+        wall0 = _walltime.perf_counter()
         if self.cfg.mode == "sync":
             self._run_sync(n_rounds, log_every)
         elif self.cfg.batch_clients:
             self._run_semi_async_batched(n_rounds, log_every)
         else:
             self._run_semi_async(n_rounds, log_every)
+        self.wall_run_s += _walltime.perf_counter() - wall0
+        if self.tracer is not None:
+            # flush events of a horizon left open at run end (they stay
+            # pending across incremental run() calls otherwise)
+            self.tracer.tail()
         if self._global_stale:
             # flat end-to-end: the ONE unravel of the whole run
             self.global_params = self.codec.unravel(self._flat_params)
@@ -969,8 +1019,24 @@ class FLEngine:
                     self.sched.participation[cid] += 1
             round_t = max(durations) + self._agg_overhead()
             self.idle_time += sum(round_t - d for d in durations)
+            t_open = now
             now += round_t
             self._aggregate(buffer, states_stacked=states_k)
+            if self.tracer is not None:
+                # SFL uploads: every active client trains from t_open;
+                # sync_duration = compute + comm splits the sub-spans
+                nb = self._upload_nbytes()
+                for slot, cid in enumerate(active):
+                    c = self.clients[cid]
+                    d = durations[slot]
+                    comm = min(c.comm_time, d)
+                    self.tracer.upload(
+                        slot=slot, cid=int(cid), t=t_open + d,
+                        compute_s=d - comm, comm_s=comm, staleness=0,
+                        nbytes=nb, wire=self._wire, fac=None)
+                self._trace_round([0] * len(buffer),
+                                  [b["n"] for b in buffer], None,
+                                  t_open, now - self._agg_overhead())
             if self._eval_due(self.t_global, n_rounds):
                 self._eval_and_record(now, [0] * len(buffer))
                 if log_every and self.t_global % log_every == 0:
@@ -1009,6 +1075,13 @@ class FLEngine:
                 w_end, s_end, _ = self._run_local(c)
                 self._enqueue_upload(buffer, c, w_end, s_end, ev.staleness,
                                      fault=ev.fault)
+                if self.tracer is not None:
+                    self.tracer.upload(
+                        slot=len(buffer) - 1, cid=cid, t=ev.time,
+                        compute_s=ev.compute_s, comm_s=c.comm_time,
+                        staleness=ev.staleness,
+                        nbytes=self._upload_nbytes(), wire=self._wire,
+                        fac=buffer[-1].get("fac"))
 
                 # client-side model refresh (paper §2.2.2): adopt newest
                 # global if one arrived since this client's version, else
@@ -1028,8 +1101,14 @@ class FLEngine:
 
             if self._horizon_due(len(buffer), now):
                 stale_vals = [b["staleness"] for b in buffer]
+                sizes = [b["n"] for b in buffer]
+                facs = ([b["fac"] for b in buffer]
+                        if self._defense != "none" else None)
+                t_open = self._last_agg_time
                 self._aggregate(buffer)
                 self._last_agg_time = now
+                if self.tracer is not None:
+                    self._trace_round(stale_vals, sizes, facs, t_open, now)
                 if self._eval_due(self.t_global, n_rounds):
                     self._eval_and_record(now + self._agg_overhead(),
                                           stale_vals)
@@ -1062,6 +1141,8 @@ class FLEngine:
         wave_fn = make_batched_hetero_train(
             self.apply_fn, self.kind, target, cfg.local_epochs, self.codec,
             impl=self.wave_impl_resolved, mesh=self._mesh)
+        # exposed for compile-count tracking (obs.profile.engine_compile_log)
+        self._wave_fn = wave_fn
         eval_fn = make_flat_eval_fn(self.apply_fn, self.kind, self.codec)
         use_ef = (self._lossy and cfg.error_feedback and target == "grad")
         # device-resident shard bank: one (n_clients, ...) stack built
@@ -1103,6 +1184,7 @@ class FLEngine:
             events: List[Tuple[float, int]] = []
             stal: List[int] = []
             evfaults: List = []  # per admitted slot: FaultDraw or None
+            evcomp: List[float] = []  # per admitted slot: compute seconds
             n_adm: Dict[int, int] = {}  # admitted events per cid so far
             # discard-and-resync decisions (reject / crash) landing AFTER
             # a client's admitted event of this horizon cannot reset the
@@ -1150,6 +1232,7 @@ class FLEngine:
                 resync_after.discard(ev.cid)
                 stal.append(ev.staleness)
                 evfaults.append(ev.fault)
+                evcomp.append(ev.compute_s)
                 events.append((ev.time, ev.cid))
             if not events:
                 break
@@ -1398,15 +1481,29 @@ class FLEngine:
                 c.version = r
 
             # ---- fused server round (no host sync) ----
+            facs = ([hfac[i] for i in range(kh)]
+                    if hfac is not None else None)
             if self._streaming:
                 assert next_fold == kh, (next_fold, kh)
                 m = self._server_round_streaming(stal)
             else:
-                facs = ([hfac[i] for i in range(kh)]
-                        if hfac is not None else None)
                 m = self._server_round(stal, sizes, facs)
+            t_open = self._last_agg_time
             self._last_agg_time = now
             self._global_stale = True
+            if self.tracer is not None:
+                # per-slot values are identical to the sequential
+                # oracle's (same pop sequence, same host math); the
+                # tracer's sorted flush makes emission order irrelevant
+                for slot, (t_ev, cid) in enumerate(events):
+                    self.tracer.upload(
+                        slot=slot, cid=cid, t=t_ev,
+                        compute_s=evcomp[slot],
+                        comm_s=self.clients[cid].comm_time,
+                        staleness=stal[slot], nbytes=nbytes,
+                        wire=self._wire,
+                        fac=None if hfac is None else hfac[slot])
+                self._trace_round(stal, sizes, facs, t_open, now)
             # device-resident sched stats: scatter-add this round's
             # staleness values + client ids (host ints in — the ring pads
             # them to a power of two so queue/timeout horizons keep the

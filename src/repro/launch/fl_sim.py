@@ -8,6 +8,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 
 import jax
 import numpy as np
@@ -17,6 +18,12 @@ from repro.core import FLEngine
 from repro.data import build_client_shards, make_dataset, train_test_split
 from repro.models.lstm import build_lstm
 from repro.models.vision_cnn import build_paper_model
+from repro.obs import export as obs_export
+from repro.obs import metrics as obs_metrics
+from repro.obs import profile as obs_profile
+
+#: --json-out summary schema version (bumped on breaking shape changes)
+SUMMARY_SCHEMA = 1
 
 
 def main() -> None:
@@ -192,8 +199,26 @@ def main() -> None:
     ap.add_argument("--resume", action="store_true",
                     help="restore the latest snapshot from --ckpt-dir "
                          "before running (no-op if none exists)")
+    ap.add_argument("--trace-dir", default="",
+                    help="observability (repro.obs): write the span trace "
+                         "into this directory — trace.jsonl (raw spans), "
+                         "trace.json (Chrome-trace/Perfetto export), "
+                         "metrics.prom / metrics.json (registry "
+                         "snapshots); render with python -m "
+                         "repro.obs.report <dir>/trace.jsonl")
+    ap.add_argument("--trace-level", default="",
+                    choices=["", "off", "round", "upload"],
+                    help="span detail: round (horizon spans only) or "
+                         "upload (full per-upload lifecycle); default "
+                         "upload when --trace-dir is given, else off")
+    ap.add_argument("--trace-jax", action="store_true",
+                    help="additionally wrap the run in a jax.profiler "
+                         "trace written into --trace-dir (XLA-level "
+                         "timing, viewable in Perfetto)")
     ap.add_argument("--json-out", default="")
     args = ap.parse_args()
+    trace_level = args.trace_level or ("upload" if args.trace_dir
+                                       else "off")
 
     mk_kw = {"hw": 16} if "cifar" in args.dataset or \
         args.dataset == "femnist" else {}
@@ -256,7 +281,8 @@ def main() -> None:
                    fault_byzantine_p=args.fault_byzantine_p,
                    fault_seed=args.fault_seed,
                    defense=args.defense,
-                   defense_norm_cap=args.defense_norm_cap)
+                   defense_norm_cap=args.defense_norm_cap,
+                   trace_level=trace_level, trace_dir=args.trace_dir)
     eng = FLEngine(cfg, fn, ds.kind, p0, s0, shards, te.x[:400], te.y[:400])
     log_every = max(args.rounds // 10, 1)
     if args.resume and args.ckpt_dir:
@@ -265,21 +291,43 @@ def main() -> None:
             print(f"# resumed from snapshot at round {start}")
         except FileNotFoundError:
             pass
-    if args.ckpt_dir and args.ckpt_every > 0:
-        # segmented run: run() stops at each snapshot boundary (the
-        # channel is quiescent between aggregations), so a kill at any
-        # point loses at most ckpt_every rounds and --resume replays
-        # the rest bit-exactly
-        res = None
-        while eng.t_global < args.rounds:
-            upto = min(eng.t_global + args.ckpt_every, args.rounds)
-            res = eng.run(upto, log_every=log_every)
-            eng.save_snapshot(args.ckpt_dir)
-    else:
-        res = eng.run(args.rounds, log_every=log_every)
-        if args.ckpt_dir:
-            eng.save_snapshot(args.ckpt_dir)
+    with obs_profile.jax_profile(args.trace_dir, enabled=args.trace_jax):
+        if args.ckpt_dir and args.ckpt_every > 0:
+            # segmented run: run() stops at each snapshot boundary (the
+            # channel is quiescent between aggregations), so a kill at
+            # any point loses at most ckpt_every rounds and --resume
+            # replays the rest bit-exactly
+            res = None
+            while eng.t_global < args.rounds:
+                upto = min(eng.t_global + args.ckpt_every, args.rounds)
+                res = eng.run(upto, log_every=log_every)
+                eng.save_snapshot(args.ckpt_dir)
+        else:
+            res = eng.run(args.rounds, log_every=log_every)
+            if args.ckpt_dir:
+                eng.save_snapshot(args.ckpt_dir)
+    if eng.tracer is not None:
+        eng.tracer.close()
+        if args.trace_dir:
+            obs_export.export_chrome_trace(
+                eng.tracer.records,
+                os.path.join(args.trace_dir, "trace.json"))
+            reg = obs_metrics.from_engine(eng)
+            with open(os.path.join(args.trace_dir, "metrics.prom"),
+                      "w") as f:
+                f.write(reg.to_prometheus())
+            with open(os.path.join(args.trace_dir, "metrics.json"),
+                      "w") as f:
+                json.dump(reg.to_json(), f, indent=1)
+            print(f"# trace: {len(eng.tracer.records)} records -> "
+                  f"{args.trace_dir}/trace.jsonl (Perfetto: trace.json, "
+                  f"metrics: metrics.prom/.json)")
     summary = res.metrics.summary()
+    summary["schema"] = SUMMARY_SCHEMA
+    # exact byte totals (the *_GB floats above round) — what the trace
+    # spans and the CI reconciliation sum against
+    summary["tx_bytes"] = int(res.metrics.total_tx_bytes())
+    summary["rx_bytes"] = int(res.metrics.total_rx_bytes())
     # scheduling surface: per-client staleness/participation — the
     # device-resident histogram (batched path, one host transfer at run
     # end) plus the scheduler's host accounting
@@ -292,7 +340,11 @@ def main() -> None:
     # one f32 edge partial + its weight scalar; flat mesh = every shard
     # partial crosses, hierarchical = one per edge group)
     summary["traffic"] = dict(eng._server.traffic)
-    print(json.dumps(summary, indent=1, default=str))
+    # typed, schema-versioned summary: numpy scalars become native
+    # types and non-string dict keys become strings, so the --json-out
+    # file round-trips by equality (asserted below) — no default=str
+    summary = obs_export.to_native(summary)
+    print(json.dumps(summary, indent=1))
     print(f"# sched[{ss['policy']}/{ss['timing']}] participation "
           f"per client: {ss['participation']}")
     print(f"# rejected uploads: {ss['rejected_uploads']}  "
@@ -306,7 +358,10 @@ def main() -> None:
           f"{ss['clipped_uploads']}")
     if args.json_out:
         with open(args.json_out, "w") as f:
-            json.dump(summary, f, default=str)
+            json.dump(summary, f, indent=1)
+        with open(args.json_out) as f:
+            assert json.load(f) == summary, \
+                "--json-out did not round-trip losslessly"
     if summary["nan_rounds"]:
         # a diverged run must not look like success to the caller
         # (CI, sweep harnesses): name the first poisoned round and

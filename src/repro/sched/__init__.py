@@ -91,6 +91,10 @@ class SchedEvent:
     #: payload fault riding an ADMITTED upload (kind "corrupt" or
     #: "byzantine"); the engine applies it to the serialized row.
     fault: Optional[FaultDraw] = None
+    #: compute seconds of the training period that produced this upload
+    #: (the heap entry's compute_s) — the tracer derives the train/wire
+    #: sub-spans from it; 0.0 for crash events (the work was lost).
+    compute_s: float = 0.0
 
 
 class Scheduler:
@@ -136,6 +140,11 @@ class Scheduler:
         self.idle = np.zeros(len(clients), np.int64)
         self.crashed = np.zeros(len(clients), np.int64)
         self.no_shows = 0
+        # optional SpanTracer (repro.obs.trace) set by the engine when
+        # tracing is on; pop() emits verdict/lifecycle instants on it.
+        # Identical pop sequences on both engine paths mean identical
+        # instant streams — the parity discipline extends to tracing.
+        self.tracer = None
 
     def resume(self) -> None:
         self.queue.resume(self.clients, self.timing)
@@ -144,10 +153,13 @@ class Scheduler:
         """Next upload decision at aggregation round ``rnd`` (WAKE events
         are consumed internally).  Returns None only if the heap is empty
         (cannot happen in the engines: every pop schedules a successor)."""
+        tr = self.tracer
         while len(self.queue):
             t, cid, kind, _comp = self.queue.pop()
             c = self.clients[cid]
             if kind == WAKE:
+                if tr is not None:
+                    tr.sched("wake", t, cid)
                 nt, nkind, ncomp = self.timing.after_wake(c, t)
                 self.queue.push(nt, cid, nkind, ncomp)
                 continue
@@ -173,6 +185,9 @@ class Scheduler:
                 self.crashed[cid] += 1
                 stal = rnd - self._version.get(cid, 0)
                 self._version[cid] = rnd  # mirrors the engine's resync
+                if tr is not None:
+                    tr.sched("crash", t, cid, staleness=int(stal),
+                             backoff=float(backoff))
                 return SchedEvent(t, cid, stal, False, "crash")
             self._crash_streak.pop(cid, None)  # streak ends on delivery
             # schedule the client's next event first: the heap evolves on
@@ -187,6 +202,8 @@ class Scheduler:
                 ncomp *= fault.mult
             if nkind == WAKE:
                 self.no_shows += 1
+                if tr is not None:
+                    tr.sched("offline", t, cid, until=float(nt))
             self.queue.push(nt, cid, nkind, ncomp)
             stal = rnd - self._version.get(cid, 0)
             v = self.policy.verdict(cid, stal, c.n_samples, rnd)
@@ -202,11 +219,14 @@ class Scheduler:
                 self.participation[cid] += 1
                 payload_fault = (fault if fault is not None and fault.kind
                                  in ("corrupt", "byzantine") else None)
-                return SchedEvent(t, cid, stal, True, fault=payload_fault)
+                return SchedEvent(t, cid, stal, True, fault=payload_fault,
+                                  compute_s=float(_comp))
             if v == "idle":
                 self.idle[cid] += 1
             else:
                 self.rejected[cid] += 1
+            if tr is not None:
+                tr.sched(v, t, cid, staleness=int(stal))
             return SchedEvent(t, cid, stal, False, v)
         return None
 

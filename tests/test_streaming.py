@@ -34,6 +34,7 @@ from repro.core import FLEngine
 from repro.core.flatbuf import AccumBuffer
 from repro.data import build_client_shards, make_dataset, train_test_split
 from repro.models.vision_cnn import build_paper_model
+from repro.obs.profile import engine_compile_log
 
 NDEV = jax.device_count()
 multidevice = pytest.mark.skipif(
@@ -171,8 +172,9 @@ def test_fold_program_compiles_once(setup):
     staleness values) — per-upload recompiles would dwarf the fold."""
     _, es = _run(setup, "fedbuff", server_channel="streaming",
                  batch_clients=True)
-    assert es._server.fold_compile_count == 1
-    assert es._server.compile_count in (-1, 1)
+    log = engine_compile_log(es)
+    assert log.count("server_fold") == 1
+    log.assert_exactly("server_step", 1)
 
 
 # -------------------------- O(D) memory ----------------------------
